@@ -1,0 +1,100 @@
+"""Shared benchmark setup: pre-trained ResNet-18(small) and ViT(small) on the
+CIFAR-20-like synthetic dataset, plus global Fisher importance — computed
+once per process and reused by every table benchmark.
+
+Scale note: the paper trains full ResNet-18/ViT on CIFAR-20; this container
+is CPU-only, so the faithful pipeline runs at reduced width/classes (the
+unlearning *mechanics* — selection geometry, early-stop depth, RPR sign —
+are scale-free; see EXPERIMENTS.md for the claim-by-claim mapping).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapters, fisher, metrics
+from repro.data import synthetic as syn
+from repro.models import vision as V
+from repro.optim import AdamWConfig, init_adamw, make_train_step
+
+N_CLASSES = 8
+RANDOM_GUESS = 1.0 / N_CLASSES
+
+# per-model SSD hyperparameters (the paper likewise uses (10,1) for RN and
+# (25,1) for ViT on CIFAR-20; our reduced ViT calibrates to (5,1))
+HPARAMS = {"resnet": (10.0, 1.0), "vit": (5.0, 1.0)}
+# Balanced-Dampening front-end bound per model (paper uses b_r=10 for the
+# full-size models; the reduced ViT calibrates to b_r=5 — see EXPERIMENTS.md)
+B_R = {"resnet": 10.0, "vit": 5.0}
+
+
+@functools.lru_cache(maxsize=None)
+def classification_data():
+    dcfg = syn.ClsDataConfig(n_classes=N_CLASSES, n_per_class=32,
+                             img_size=24, seed=0)
+    return syn.make_classification(dcfg)
+
+
+def _train(model: str, steps: int = 160):
+    x, y = classification_data()
+    key = jax.random.PRNGKey(0)
+    if model == "resnet":
+        cfg = V.ResNetConfig(name="rn18-small", width=12, n_classes=N_CLASSES,
+                             img_size=24)
+        params = V.init_resnet(key, cfg)
+        fwd = lambda p, im: V.resnet_forward(p, cfg, im)
+        adapter = adapters.resnet_adapter(cfg)
+    else:
+        cfg = V.ViTConfig(name="vit-small", n_layers=6, d_model=48,
+                          n_heads=2, d_ff=96, n_classes=N_CLASSES,
+                          img_size=24, patch=4)
+        params = V.init_vit(key, cfg)
+        fwd = lambda p, im: V.vit_forward(p, cfg, im)
+        adapter = adapters.vit_adapter(cfg)
+
+    loss_fn = lambda p, b: V.cls_loss(fwd(p, b[0]), b[1])
+    ocfg = AdamWConfig(lr=1.5e-3, total_steps=steps, warmup_steps=20,
+                       weight_decay=1e-4)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    opt = init_adamw(ocfg, params)
+    bt = syn.Batches((x, y), batch=64, seed=1)  # 4 epochs over 256 samples
+    for _ in range(steps):
+        bx, by = next(bt)
+        params, opt, _ = step(params, opt, (bx, by))
+
+    batches = [(x[i:i + 64], y[i:i + 64]) for i in range(0, len(y) - 63, 64)][:3]
+    I_D = fisher.diag_fisher_streaming(loss_fn, params, batches, chunk_size=8)
+    return {"cfg": cfg, "params": params, "fwd": fwd, "loss_fn": loss_fn,
+            "adapter": adapter, "I_D": I_D, "x": x, "y": y}
+
+
+@functools.lru_cache(maxsize=None)
+def trained(model: str) -> Dict:
+    t0 = time.time()
+    out = _train(model)
+    out["train_s"] = time.time() - t0
+    return out
+
+
+def eval_model(setting, params, forget_class: int):
+    x, y = setting["x"], setting["y"]
+    splits = syn.split_forget_retain(x, y, forget_class=forget_class)
+    fx, fy = splits["forget"]
+    rx, ry = splits["retain"]
+    hx, hy = splits["heldout"]
+    lg_f = setting["fwd"](params, fx)
+    lg_r = setting["fwd"](params, rx)
+    lg_h = setting["fwd"](params, hx)
+    mia = metrics.mia_accuracy(
+        np.asarray(metrics.per_sample_nll(lg_f, jnp.asarray(fy))),
+        np.asarray(metrics.per_sample_nll(lg_h, jnp.asarray(hy))))
+    return {
+        "forget_acc": float(metrics.accuracy(lg_f, jnp.asarray(fy))) * 100,
+        "retain_acc": float(metrics.accuracy(lg_r, jnp.asarray(ry))) * 100,
+        "mia": mia * 100,
+    }

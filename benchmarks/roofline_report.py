@@ -1,0 +1,105 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the JSON
+records produced by ``python -m repro.launch.dryrun --all``."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..",
+                           "experiments", "dryrun")
+
+
+def load(dirpath: str = DEFAULT_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | dom | compute_s | memory_s | collective_s | "
+        "roofline frac | useful/HLO | HBM GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != "16x16":
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — skip | | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        mem_gib = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['dominant']} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {t['roofline_fraction']:.3f} "
+            f"| {t['useful_flops_ratio']:.2f} | {mem_gib:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile_s | params | "
+        "bytes/dev GiB | collectives (probe) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        st = r.get("status")
+        if st == "skipped":
+            reason = r.get("reason", "")[:46]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| skip: {reason}… | | | | |")
+            continue
+        if st != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| ERROR | | | | |")
+            continue
+        mem = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+        colls = ""
+        if "collectives" in r:
+            cnt = r["collectives"].get("by_op_counts_probe2", {})
+            colls = " ".join(f"{k.split('-')[-1][:6]}:{v}"
+                             for k, v in sorted(cnt.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('compile_full_s', 0):.1f} "
+            f"| {r.get('n_params', 0) / 1e9:.2f}B | {mem:.1f} | {colls} |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    single = [r for r in ok if r["mesh"] == "16x16" and "roofline" in r]
+    worst = sorted(single, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll_bound = [r for r in single
+                  if r["roofline"]["dominant"] == "collective"]
+    return {"ok": len(ok), "skipped": len(skip), "errors": len(err),
+            "worst_fraction": [(r["arch"], r["shape"],
+                                round(r["roofline"]["roofline_fraction"], 4))
+                               for r in worst[:6]],
+            "collective_bound": [(r["arch"], r["shape"])
+                                 for r in coll_bound[:8]]}
+
+
+def main():
+    recs = load()
+    print(f"records: {len(recs)}")
+    print(json.dumps(summary(recs), indent=1))
+    print("\n## Roofline (single pod 16x16)\n")
+    print(roofline_table(recs))
+    rows = [r for r in recs if r.get("status") == "ok"]
+    print(f"roofline_report,cells,{len(rows)},errors="
+          f"{summary(recs)['errors']}")
+
+
+if __name__ == "__main__":
+    main()

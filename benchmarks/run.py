@@ -1,0 +1,42 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1     # one
+
+Each benchmark prints its human-readable table followed by CSV lines
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    t0 = time.time()
+    from . import (compression_bench, fig3_selection, kernels_bench,
+                   roofline_report, table1_cau, table2_bd, table4_e2e)
+
+    jobs = {
+        "table1": table1_cau.main,
+        "table2": table2_bd.main,
+        "table4": table4_e2e.main,
+        "fig3": fig3_selection.main,
+        "kernels": kernels_bench.main,
+        "compression": compression_bench.main,
+        "roofline": roofline_report.main,
+    }
+    if which != "all":
+        jobs = {which: jobs[which]}
+    for name, fn in jobs.items():
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            print(f"{name},FAILED,0,error={e!r}")
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Table I: Context-Adaptive Unlearning vs. baseline (no unlearning)
+and SSD — forget/retain accuracy, MIA, and MACs (normalised to SSD = 100,
+checkpoint overhead included), for ResNet and ViT."""
+from __future__ import annotations
+
+import time
+
+from repro.core import ficabu
+from repro.data import synthetic as syn
+
+from . import common
+
+
+def run(models=("resnet", "vit"), forget_classes=(2, 5)) -> list:
+    rows = []
+    for model in models:
+        s = common.trained(model)
+        alpha, lam = common.HPARAMS[model]
+        tau = common.RANDOM_GUESS + 0.03
+        for cls in forget_classes:
+            splits = syn.split_forget_retain(s["x"], s["y"], cls)
+            fx, fy = splits["forget"]
+            base = common.eval_model(s, s["params"], cls)
+
+            t0 = time.time()
+            p_ssd, st_ssd = ficabu.unlearn(
+                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
+                mode="ssd", alpha=alpha, lam=lam)
+            t_ssd = time.time() - t0
+            e_ssd = common.eval_model(s, p_ssd, cls)
+
+            t0 = time.time()
+            p_cau, st_cau = ficabu.unlearn(
+                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
+                mode="cau", alpha=alpha, lam=lam, tau=tau, checkpoint_every=2)
+            t_cau = time.time() - t0
+            e_cau = common.eval_model(s, p_cau, cls)
+
+            rows.append({
+                "model": model, "class": cls,
+                "baseline": base, "ssd": e_ssd, "cau": e_cau,
+                "macs_ssd_pct": st_ssd["macs_vs_ssd_pct"],
+                "macs_cau_pct": st_cau["macs_vs_ssd_pct"],
+                "stop_l": st_cau["stopped_at_l"],
+                "n_layers": s["adapter"].n_layers,
+                "t_ssd_s": t_ssd, "t_cau_s": t_cau,
+            })
+    return rows
+
+
+def main() -> list:
+    rows = run()
+    print("# Table I — CAU vs baseline vs SSD (percent)")
+    print(f"{'model':8s} {'cls':>3s} | {'Dr base':>8s} {'Dr ssd':>7s} "
+          f"{'Dr cau':>7s} | {'Df base':>8s} {'Df ssd':>7s} {'Df cau':>7s} | "
+          f"{'MIA ssd':>7s} {'MIA cau':>7s} | {'MACs cau%':>9s} {'stop':>5s}")
+    for r in rows:
+        print(f"{r['model']:8s} {r['class']:3d} | "
+              f"{r['baseline']['retain_acc']:8.2f} "
+              f"{r['ssd']['retain_acc']:7.2f} {r['cau']['retain_acc']:7.2f} | "
+              f"{r['baseline']['forget_acc']:8.2f} "
+              f"{r['ssd']['forget_acc']:7.2f} {r['cau']['forget_acc']:7.2f} | "
+              f"{r['ssd']['mia']:7.2f} {r['cau']['mia']:7.2f} | "
+              f"{r['macs_cau_pct']:9.2f} "
+              f"{r['stop_l']}/{r['n_layers']}")
+    for r in rows:
+        print(f"table1_cau,{r['model']}.{r['class']},"
+              f"{r['t_cau_s'] * 1e6:.0f},macs_pct={r['macs_cau_pct']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Table II: Balanced Dampening vs. SSD — Delta-Dr and RPR (Eq. 7),
+with c_m auto-derived from the SSD selection distribution (paper §III-B)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import ficabu, metrics
+from repro.data import synthetic as syn
+
+from . import common
+
+
+def run(models=("resnet", "vit"), forget_classes=(2, 5)) -> list:
+    rows = []
+    for model in models:
+        s = common.trained(model)
+        alpha, lam = common.HPARAMS[model]
+        for cls in forget_classes:
+            splits = syn.split_forget_retain(s["x"], s["y"], cls)
+            fx, fy = splits["forget"]
+            base = common.eval_model(s, s["params"], cls)
+
+            p_ssd, st_ssd = ficabu.unlearn(
+                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
+                mode="ssd", alpha=alpha, lam=lam)
+            e_ssd = common.eval_model(s, p_ssd, cls)
+            c_m = ficabu.auto_midpoint(st_ssd)
+
+            t0 = time.time()
+            p_bd, st_bd = ficabu.unlearn(
+                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
+                mode="bd", alpha=alpha, lam=lam, b_r=common.B_R[model], c_m=c_m)
+            t_bd = time.time() - t0
+            e_bd = common.eval_model(s, p_bd, cls)
+
+            d_ssd = base["retain_acc"] - e_ssd["retain_acc"]
+            d_bd = base["retain_acc"] - e_bd["retain_acc"]
+            rows.append({
+                "model": model, "class": cls, "c_m": c_m,
+                "baseline": base, "ssd": e_ssd, "bd": e_bd,
+                "delta_dr_ssd": d_ssd, "delta_dr_bd": d_bd,
+                "rpr": metrics.rpr(d_bd, d_ssd),
+                "sel_ssd": st_ssd["selected_per_layer"],
+                "sel_bd": st_bd["selected_per_layer"],
+                "t_bd_s": t_bd,
+            })
+    return rows
+
+
+def main() -> list:
+    rows = run()
+    print("# Table II — Balanced Dampening vs SSD (percent)")
+    print(f"{'model':8s} {'cls':>3s} | {'Dr ssd':>7s} {'Dr bd':>7s} | "
+          f"{'Df ssd':>7s} {'Df bd':>7s} | {'dDr ssd':>8s} {'dDr bd':>7s} "
+          f"{'RPR':>7s} | {'c_m':>5s}")
+    for r in rows:
+        print(f"{r['model']:8s} {r['class']:3d} | "
+              f"{r['ssd']['retain_acc']:7.2f} {r['bd']['retain_acc']:7.2f} | "
+              f"{r['ssd']['forget_acc']:7.2f} {r['bd']['forget_acc']:7.2f} | "
+              f"{r['delta_dr_ssd']:8.2f} {r['delta_dr_bd']:7.2f} "
+              f"{r['rpr']:7.2f} | {r['c_m']:5.1f}")
+    for r in rows:
+        print(f"table2_bd,{r['model']}.{r['class']},"
+              f"{r['t_bd_s'] * 1e6:.0f},rpr={r['rpr']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

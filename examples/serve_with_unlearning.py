@@ -1,0 +1,19 @@
+"""Serving example: batched requests against gemma3-1b (reduced config),
+with a forget request applied IN PLACE between batches — no retraining,
+no weight reload; the server keeps serving on the edited weights.
+
+    PYTHONPATH=src python examples/serve_with_unlearning.py
+"""
+from repro.launch import serve
+
+res = serve.main([
+    "--arch", "gemma3-1b",
+    "--requests", "4",
+    "--prompt-len", "12",
+    "--gen-len", "6",
+    "--unlearn-after", "1",
+    "--forget-domain", "1",
+])
+assert res["unlearned"]
+print("served batches:", [r["latency_s"] for r in res["served"]])
+print("unlearning stopped at layer:", res["unlearn_stats"]["stopped_at_l"])

@@ -1,0 +1,29 @@
+"""End-to-end driver: train an LM for a few hundred steps, checkpoint,
+receive a forget request mid-run (journaled), unlearn, verify, resume.
+
+This drives launch/train.py — the same launcher that runs on a pod — with
+the yi-6b reduced config.
+
+    PYTHONPATH=src python examples/train_then_forget.py
+"""
+import tempfile
+
+from repro.launch import train
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    print("== run 1: train 200 steps, forget request at step 150 ==")
+    res = train.main([
+        "--arch", "yi-6b", "--steps", "200", "--batch", "16", "--seq", "32",
+        "--lr", "3e-3", "--ckpt-dir", ckpt_dir, "--ckpt-every", "50",
+        "--unlearn-at", "150", "--forget-domain", "2",
+    ])
+    print("run 1:", res)
+
+    print("== run 2: simulate restart — resume from newest checkpoint ==")
+    res2 = train.main([
+        "--arch", "yi-6b", "--steps", "220", "--batch", "16", "--seq", "32",
+        "--lr", "3e-3", "--ckpt-dir", ckpt_dir, "--ckpt-every", "50",
+        "--resume", "--unlearn-at", "-1",
+    ])
+    print("run 2 (resumed):", res2)
+    assert res2["start_step"] >= 150

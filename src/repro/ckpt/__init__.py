@@ -1,0 +1,2 @@
+from .checkpoint import (gc_old, journal_append, journal_read, latest_step,  # noqa: F401
+                         restore, save)

@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing.
+
+Design (multi-host posture):
+  * every host writes its own shard file ``step_<N>/host_<i>.npz`` containing
+    the process-local slices of each leaf (here: the full leaf, single-host);
+  * a ``step_<N>/META.json`` manifest is written LAST and atomically
+    (tmp + rename) — a step directory without META is incomplete and ignored
+    at restore, so a crash mid-write can never be resumed from;
+  * ``latest_step`` scans for the newest COMPLETE step (restart-after-failure
+    path used by launch/train.py);
+  * restore is ELASTIC: leaves are loaded as host arrays and re-placed with
+    ``jax.device_put(x, sharding)`` for whatever mesh the restarted job has —
+    save on one mesh shape, resume on another (tested in tests/test_ckpt.py);
+  * unlearning requests are journaled (``unlearn_journal.jsonl``) so an
+    interrupted forget request replays deterministically after restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.module import flatten_with_paths
+
+Params = Any
+
+
+def _leaf_key(path: str) -> str:
+    return path.replace("/", "__")
+
+
+def save(ckpt_dir: str, step: int, tree: Params, *, host_id: int = 0,
+         n_hosts: int = 1, extra_meta: Optional[Dict] = None) -> str:
+    """Write one checkpoint step atomically. Returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    arrays = {}
+    manifest: List[Dict] = []
+    for path, leaf in flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if arr.dtype.kind not in "fiub" or dtype_name == "bfloat16":
+            # numpy's npz can't round-trip ml_dtypes (bfloat16 etc.):
+            # store a lossless f32 upcast; restore re-casts via jax.
+            arr = arr.astype(np.float32)
+        arrays[_leaf_key(path)] = arr
+        manifest.append({"path": path, "shape": list(arr.shape),
+                         "dtype": dtype_name})
+    shard_path = os.path.join(step_dir, f"host_{host_id}.npz")
+    with tempfile.NamedTemporaryFile(dir=step_dir, suffix=".tmp",
+                                     delete=False) as f:
+        np.savez(f, **arrays)
+        tmp = f.name
+    os.replace(tmp, shard_path)
+
+    if host_id == 0:
+        meta = {"step": step, "n_hosts": n_hosts, "time": time.time(),
+                "manifest": manifest, **(extra_meta or {})}
+        with tempfile.NamedTemporaryFile("w", dir=step_dir, suffix=".tmp",
+                                         delete=False) as f:
+            json.dump(meta, f)
+            tmp = f.name
+        os.replace(tmp, os.path.join(step_dir, "META.json"))  # commit point
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step with a committed META.json (incomplete steps skipped)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, "META.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Params, *,
+            sharding_fn: Optional[Callable[[str], Any]] = None,
+            host_id: int = 0) -> Params:
+    """Restore into the structure of ``like``.  ``sharding_fn(path)`` maps a
+    leaf path to a jax.sharding.Sharding for elastic re-placement on the
+    CURRENT mesh (None => host arrays / default placement)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "META.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(step_dir, f"host_{host_id}.npz"))
+
+    paths = [p for p, _ in flatten_with_paths(like)]
+    leaves_like = [l for _, l in flatten_with_paths(like)]
+    out = []
+    for path, leaf in zip(paths, leaves_like):
+        arr = data[_leaf_key(path)]
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{path}: ckpt {arr.shape} vs model {leaf.shape}"
+        arr = jnp.asarray(arr).astype(leaf.dtype)  # jax casts bf16 & friends
+        if sharding_fn is not None:
+            arr = jax.device_put(arr, sharding_fn(path))
+        out.append(arr)
+
+    # flatten_with_paths iterates sorted keys — rebuild via the same order.
+    it = iter(out)
+
+    def rebuild(tree):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k]) for k in sorted(tree.keys())}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v) for v in tree)
+        return next(it)
+
+    restored = rebuild(like)
+    return restored, meta
+
+
+def gc_old(ckpt_dir: str, keep: int = 3) -> None:
+    """Keep the newest ``keep`` complete steps; delete the rest."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    complete = sorted(
+        n for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and os.path.exists(
+            os.path.join(ckpt_dir, n, "META.json")))
+    for name in complete[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Unlearn-request journal (replay determinism across restarts)
+# ---------------------------------------------------------------------------
+def journal_append(ckpt_dir: str, record: Dict) -> None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, "unlearn_journal.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(record) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def journal_read(ckpt_dir: str) -> List[Dict]:
+    path = os.path.join(ckpt_dir, "unlearn_journal.jsonl")
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

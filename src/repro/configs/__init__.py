@@ -1,0 +1,8 @@
+"""Architecture registry. ``get("yi-6b")`` / ``all_archs()``."""
+from .base import SHAPES, ArchSpec, ShapeCell, all_archs, get  # noqa: F401
+
+
+def _load_all():
+    from . import (gemma3_1b, internvl2_1b, kimi_k2_1t_a32b,  # noqa: F401
+                   llama4_scout_17b_a16e, qwen1_5_32b, recurrentgemma_9b,
+                   whisper_tiny, xlstm_125m, yi_6b, yi_9b)

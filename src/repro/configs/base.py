@@ -1,0 +1,68 @@
+"""Architecture registry: every assigned arch is a selectable config
+(``--arch <id>`` in the launchers) carrying its FULL paper config, a REDUCED
+smoke config (CPU-runnable), and its applicable input-shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode" | "long_decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "long_decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    kind: str                    # "lm" | "encdec"
+    full: Any                    # LMConfig | EncDecConfig (exact paper config)
+    smoke: Any                   # reduced same-family config
+    source: str                  # provenance tag from the assignment
+    skip_shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def shapes(self) -> Tuple[str, ...]:
+        return tuple(s for s in SHAPES if s not in self.skip_shapes)
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    assert spec.arch_id not in _REGISTRY, f"duplicate arch {spec.arch_id}"
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    if not _REGISTRY:
+        from . import _load_all  # lazy: populate on first access
+        _load_all()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    if not _REGISTRY:
+        from . import _load_all
+        _load_all()
+    return dict(_REGISTRY)
+
+
+FULL_ATTENTION_SKIP = "pure full-attention arch: 500k decode cache/compute is O(S) per token with no sub-quadratic path; skipped per assignment"

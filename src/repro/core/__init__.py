@@ -1,0 +1,4 @@
+"""FiCABU core: Fisher-based, context-adaptive, balanced unlearning."""
+from . import adapters, cau, fisher, ficabu, metrics, schedule, ssd  # noqa: F401
+from .cau import ModelAdapter, UnlearnConfig, context_adaptive_unlearn  # noqa: F401
+from .ficabu import unlearn, auto_midpoint  # noqa: F401

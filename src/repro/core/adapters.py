@@ -1,0 +1,236 @@
+"""ModelAdapter constructors: uniform per-layer views over the model zoo.
+
+MAC formulas are per-sample forward multiply-accumulates — the hardware
+proxy the paper reports (MobileNetV2-style accounting).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models import vision as V
+from .cau import ModelAdapter
+from .metrics import accuracy, token_accuracy
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18
+# ---------------------------------------------------------------------------
+def _resnet_macs(cfg: V.ResNetConfig) -> List[int]:
+    ws = cfg.stage_widths
+    hw = cfg.img_size
+    macs = [hw * hw * 3 * ws[0] * 9]                      # stem
+    cin = ws[0]
+    for bi in range(8):
+        stride = V._block_stride(bi)
+        cout = ws[bi // 2]
+        if stride == 2:
+            hw //= 2
+        m = hw * hw * cin * cout * 9 + hw * hw * cout * cout * 9
+        if cin != cout:
+            m += hw * hw * cin * cout
+        macs.append(m)
+        cin = cout
+    macs.append(ws[3] * cfg.n_classes)                    # fc
+    return macs
+
+
+def resnet_adapter(cfg: V.ResNetConfig) -> ModelAdapter:
+    def fc(params, images):
+        return V.resnet_forward(params, cfg, images, collect=True)
+
+    def apply_layer(params, j, layer_p, act):
+        return V.resnet_apply_layer(layer_p, j, act)
+
+    return ModelAdapter(
+        name=cfg.name, n_layers=V.RESNET_N_LAYERS,
+        forward_collect=jax.jit(fc),
+        apply_layer=apply_layer,
+        get_layer=lambda p, j: V.resnet_layer_params(p, j),
+        set_layer=lambda p, j, s: V.resnet_set_layer(p, j, s),
+        loss=V.cls_loss, acc=accuracy,
+        layer_fwd_macs=_resnet_macs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# ViT
+# ---------------------------------------------------------------------------
+def _vit_macs(cfg: V.ViTConfig) -> List[int]:
+    T, D, F = cfg.n_tokens, cfg.d_model, cfg.d_ff
+    pdim = cfg.patch * cfg.patch * 3
+    block = 4 * T * D * D + 2 * T * T * D + 3 * T * D * F
+    return ([(T - 1) * pdim * D] + [block] * cfg.n_layers
+            + [D * cfg.n_classes])
+
+
+def vit_adapter(cfg: V.ViTConfig) -> ModelAdapter:
+    def fc(params, images):
+        return V.vit_forward(params, cfg, images, collect=True)
+
+    def apply_layer(params, j, layer_p, act):
+        return V.vit_apply_layer(layer_p, j, act, cfg)
+
+    return ModelAdapter(
+        name=cfg.name, n_layers=cfg.n_layers + 2,
+        forward_collect=jax.jit(fc),
+        apply_layer=apply_layer,
+        get_layer=lambda p, j: V.vit_layer_params(p, j, cfg),
+        set_layer=lambda p, j, s: V.vit_set_layer(p, j, s, cfg),
+        loss=V.cls_loss, acc=accuracy,
+        layer_fwd_macs=_vit_macs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Causal LM (all transformer/ssm/hybrid/moe/vlm archs)
+# ---------------------------------------------------------------------------
+def _lm_block_macs(cfg: LM.LMConfig, btype: str, S: int) -> int:
+    D, H, KV, dh, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_ff
+    if btype in ("attn", "local"):
+        ctx = min(S, cfg.window) if btype == "local" else S
+        m = S * D * (H + 2 * KV) * dh + S * H * dh * D + 2 * S * ctx * H * dh
+    elif btype == "mlstm":
+        m = 4 * S * D * H * dh + 2 * S * cfg.mlstm_chunk * H * dh + 2 * S * D * H
+    elif btype == "slstm":
+        m = 4 * S * D * D + 4 * S * D * (D // H) + S * D * D
+    elif btype == "rglru":
+        dr = cfg.rglru_cfg().d_rnn
+        m = 2 * S * D * dr + 2 * S * dr * dr + S * dr * D
+    else:
+        raise ValueError(btype)
+    if cfg.d_ff > 0:
+        if cfg.moe:
+            mo = cfg.moe
+            m += S * D * mo.num_experts + S * mo.top_k * 3 * D * F
+            if mo.shared_ff:
+                m += 3 * S * D * mo.shared_ff
+        else:
+            m += 3 * S * D * F
+    return m
+
+
+def lm_layer_macs(cfg: LM.LMConfig, S: int) -> List[int]:
+    macs = [0]  # embedding gather
+    for bt in cfg.layer_types:
+        macs.append(_lm_block_macs(cfg, bt, S))
+    macs.append(S * cfg.d_model * cfg.vocab)  # head
+    return macs
+
+
+def lm_adapter(cfg: LM.LMConfig, seq_len: int,
+               prefix: Optional[jax.Array] = None,
+               exclude_router: bool = True) -> ModelAdapter:
+    """inputs = tokens [N, S]; labels [N, S] (next-token targets)."""
+    Lu = LM.n_unlearn_layers(cfg)
+
+    def apply_layer(params, j, layer_p, act):
+        if j == 0:
+            return LM._embed({"embed": layer_p}, cfg, act, prefix)
+        B, S = act.shape[0], act.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return LM.apply_layer(params, cfg, j, layer_p, act, positions)
+
+    def fc(params, tokens):
+        acts = [tokens]
+        x = apply_layer(params, 0, params["embed"], tokens)
+        for j in range(1, Lu):
+            acts.append(x)
+            x = apply_layer(params, j, LM.get_layer(params, cfg, j), x)
+        if cfg.prefix_len > 0:
+            x = x[:, cfg.prefix_len:]
+        return x, acts
+
+    def loss(logits, labels):
+        if cfg.prefix_len > 0 and logits.shape[1] != labels.shape[1]:
+            logits = logits[:, cfg.prefix_len:]
+        return LM.softmax_xent(logits, labels, z_loss=0.0)
+
+    def acc(logits, labels):
+        if cfg.prefix_len > 0 and logits.shape[1] != labels.shape[1]:
+            logits = logits[:, cfg.prefix_len:]
+        return token_accuracy(logits, labels)
+
+    exclude = (lambda path: "router" in path) if (cfg.moe and exclude_router) else None
+    return ModelAdapter(
+        name=cfg.name, n_layers=Lu,
+        forward_collect=jax.jit(fc),
+        apply_layer=apply_layer,
+        get_layer=lambda p, j: LM.get_layer(p, cfg, j),
+        set_layer=lambda p, j, s: LM.set_layer(p, cfg, j, s),
+        loss=loss, acc=acc,
+        layer_fwd_macs=lm_layer_macs(cfg, seq_len),
+        int_input_layer0=True,
+        exclude=exclude)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper): CAU sweeps the DECODER chain; the encoder is
+# treated as front-end (see DESIGN.md Arch-applicability) and is reachable
+# only by full-tree SSD.
+# ---------------------------------------------------------------------------
+def encdec_adapter(cfg: ED.EncDecConfig, seq_len: int,
+                   frames: jax.Array) -> ModelAdapter:
+    Lu = cfg.n_dec_layers + 2  # embed + dec blocks + head
+    D, F, V_ = cfg.d_model, cfg.d_ff, cfg.vocab
+    S, M = seq_len, cfg.n_frames
+    block = (S * D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.dh * 2
+             + 2 * S * S * D + 2 * S * M * D + 3 * S * D * F)
+    macs = [0] + [block] * cfg.n_dec_layers + [S * D * V_]
+
+    def apply_layer(params, j, layer_p, act):
+        if j == 0:
+            return params["embed"]["w"].astype(cfg.dtype)[act] if layer_p is None \
+                else layer_p["w"].astype(cfg.dtype)[act]
+        memory = ED.encode(params, cfg, frames)
+        B, Sx = act.shape[0], act.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(Sx)[None], (B, Sx))
+        if j == Lu - 1:
+            x = ED.L.rmsnorm(layer_p["final_norm"], act)
+            return jnp.einsum("bsd,dv->bsv", x, layer_p["lm_head"]["w"].astype(x.dtype),
+                              preferred_element_type=F32)
+        dp = jax.tree_util.tree_map(lambda a: a[j - 1], params["decoder"]) \
+            if layer_p is None else layer_p
+        return ED.dec_block(dp, cfg, act, memory, pos)
+
+    def get_layer(p, j):
+        if j == 0:
+            return p["embed"]
+        if j == Lu - 1:
+            return {"final_norm": p["final_norm"], "lm_head": p["lm_head"]}
+        return jax.tree_util.tree_map(lambda a: a[j - 1], p["decoder"])
+
+    def set_layer(p, j, s):
+        p = dict(p)
+        if j == 0:
+            p["embed"] = s
+        elif j == Lu - 1:
+            p["final_norm"] = s["final_norm"]
+            p["lm_head"] = s["lm_head"]
+        else:
+            p["decoder"] = jax.tree_util.tree_map(
+                lambda full, sub: full.at[j - 1].set(sub.astype(full.dtype)),
+                p["decoder"], s)
+        return p
+
+    def fc(params, tokens):
+        acts = [tokens]
+        x = apply_layer(params, 0, params["embed"], tokens)
+        for j in range(1, Lu):
+            acts.append(x)
+            x = apply_layer(params, j, get_layer(params, j), x)
+        return x, acts
+
+    loss = lambda lg, lb: LM.softmax_xent(lg, lb, z_loss=0.0)
+    return ModelAdapter(
+        name=cfg.name, n_layers=Lu,
+        forward_collect=jax.jit(fc),
+        apply_layer=apply_layer,
+        get_layer=get_layer, set_layer=set_layer,
+        loss=loss, acc=token_accuracy,
+        layer_fwd_macs=macs, int_input_layer0=True)

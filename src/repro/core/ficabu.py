@@ -1,0 +1,54 @@
+"""FiCABU top-level API.
+
+``unlearn(adapter, params, fisher_global, inputs, labels, mode=..., ...)``
+runs one forget request.  Modes:
+
+  "ssd"     vanilla SSD via the layer sweep (no early stop, uniform (alpha,
+            lambda)) — the paper's baseline, MAC-normalised to 100%.
+  "cau"     Context-Adaptive Unlearning only (paper §III-A, Table I).
+  "bd"      Balanced Dampening only (paper §III-B, Table II).
+  "ficabu"  CAU + BD — the full method (paper §IV-B, Table IV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .cau import ModelAdapter, UnlearnConfig, context_adaptive_unlearn
+from .schedule import midpoint_from_selection
+
+Params = Any
+
+MODES = ("ssd", "cau", "bd", "ficabu")
+
+
+def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
+            inputs: Any, labels: jax.Array, *, mode: str = "ficabu",
+            alpha: float = 10.0, lam: float = 1.0, tau: float = 0.05,
+            checkpoint_every: int = 4, b_r: float = 10.0,
+            c_m: Optional[float] = None, chunk_size: int = 8,
+            use_kernel: bool = False) -> Tuple[Params, Dict]:
+    assert mode in MODES, f"mode must be one of {MODES}"
+    cau_on = mode in ("cau", "ficabu")
+    bd_on = mode in ("bd", "ficabu")
+    cfg = UnlearnConfig(
+        alpha=alpha, lam=lam,
+        tau=tau if cau_on else -1.0,                       # -1 => never early-stop
+        checkpoint_every=checkpoint_every if cau_on else 0,  # 0 => no checkpoints
+        balanced=bd_on, b_r=b_r, c_m=c_m,
+        chunk_size=chunk_size, use_kernel=use_kernel)
+    new_params, stats = context_adaptive_unlearn(
+        adapter, params, fisher_global, inputs, labels, cfg)
+    stats["mode"] = mode
+    return new_params, stats
+
+
+def auto_midpoint(ssd_stats: Dict) -> float:
+    """Derive c_m from a baseline-SSD run's layer-wise selection counts
+    (paper §III-B step (i)-(ii))."""
+    sel = ssd_stats["selected_per_layer"]
+    counts = [sel.get(l, 0) for l in sorted(sel)]
+    return midpoint_from_selection(counts)

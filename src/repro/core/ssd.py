@@ -1,0 +1,69 @@
+"""Selective Synaptic Dampening (SSD) — the retraining-free baseline FiCABU
+builds on (Foster et al., AAAI'24), Eqs. (3)-(4):
+
+    select:  I_Df,i > alpha * I_D,i
+    dampen:  theta_i <- beta * theta_i,  beta = min(lambda * I_D,i / I_Df,i, 1)
+
+``dampen_tree`` is the vectorized one-shot edit over a whole pytree;
+``dampen_array`` is the per-tensor primitive that the Pallas kernel
+(`repro.kernels.dampen`) implements for the hardware path.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+Params = Any
+
+
+def dampen_array(theta: jax.Array, i_f: jax.Array, i_g: jax.Array,
+                 alpha: float, lam: float) -> Tuple[jax.Array, jax.Array]:
+    """Eqs. (3)+(4) on one tensor. Returns (new_theta, selected_mask)."""
+    i_f = i_f.astype(F32)
+    i_g = i_g.astype(F32)
+    sel = i_f > alpha * i_g
+    beta = jnp.minimum(lam * i_g / jnp.maximum(i_f, 1e-30), 1.0)
+    new = jnp.where(sel, theta.astype(F32) * beta, theta.astype(F32))
+    return new.astype(theta.dtype), sel
+
+
+def dampen_tree(params: Params, fisher_f: Params, fisher_g: Params,
+                alpha: float, lam: float,
+                use_kernel: bool = False) -> Tuple[Params, Params]:
+    """Apply SSD dampening to every leaf. Returns (params', selection masks)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        fn = lambda t, f, g: kops.dampen(t, f, g, alpha, lam)
+    else:
+        fn = lambda t, f, g: dampen_array(t, f, g, alpha, lam)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_f = jax.tree_util.tree_leaves(fisher_f)
+    flat_g = jax.tree_util.tree_leaves(fisher_g)
+    outs = [fn(t, f, g) for t, f, g in zip(flat_p, flat_f, flat_g)]
+    new = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    masks = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new, masks
+
+
+def selection_fraction(masks: Params) -> float:
+    flat = jax.tree_util.tree_leaves(masks)
+    tot = sum(m.size for m in flat)
+    sel = sum(int(jnp.sum(m)) for m in flat)
+    return sel / max(tot, 1)
+
+
+def ssd_unlearn(loss_fn: Callable, params: Params, forget_batch: Any,
+                fisher_global: Params, alpha: float, lam: float,
+                chunk_size: int = 8, use_kernel: bool = False
+                ) -> Tuple[Params, Dict]:
+    """Vanilla SSD: one Fisher pass on the forget batch + one-shot dampening
+    of ALL parameters (no early stop, layer-agnostic hyperparameters)."""
+    from .fisher import diag_fisher
+    fisher_f = diag_fisher(loss_fn, params, forget_batch, chunk_size)
+    new, masks = dampen_tree(params, fisher_f, fisher_global, alpha, lam,
+                             use_kernel=use_kernel)
+    stats = {"selected_fraction": selection_fraction(masks)}
+    return new, stats

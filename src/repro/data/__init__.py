@@ -1,0 +1,3 @@
+from .synthetic import (  # noqa: F401
+    Batches, ClsDataConfig, LMDataConfig, lm_split_forget_retain,
+    make_classification, make_lm_domains, split_forget_retain)

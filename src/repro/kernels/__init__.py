@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+fimd         — Fisher diagonal square-accumulate (the FIMD IP)
+dampen       — fused select/beta/multiply (the Dampening IP), f32/bf16 + int8
+gemm_fisher  — backward GEMM with Fisher epilogue fusion (GEMM->FIMD stream)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+"""
+from . import dampen, fimd, gemm_fisher, ops, ref  # noqa: F401

@@ -1,0 +1,55 @@
+"""FIMD kernel — the paper's Fisher-Information-Matrix-Diagonal IP on TPU.
+
+The RTL IP is a 4-stage LOAD -> SQUARE -> ACCUMULATE -> STORE pipeline with
+double buffering.  On TPU the Pallas grid pipeline plays the double buffer
+(HBM->VMEM prefetch of block b+1 overlaps compute on block b), the VPU plays
+SQUARE, and a VMEM-resident accumulator tile plays ACCUMULATE: the output
+block index is independent of the batch grid axis, so the tile stays resident
+across the whole batch reduction and is stored to HBM exactly once.
+
+g: [B, P] gradients (chunk-major) -> [P] f32 sum of g^2 over B.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+# MXU/VPU-aligned tiling: lanes=128, f32 sublanes=8.
+BLOCK_P = 1024
+BLOCK_B = 8
+
+
+def _fimd_kernel(g_ref, out_ref):
+    b = pl.program_id(1)
+    g = g_ref[...].astype(F32)
+    partial = jnp.sum(g * g, axis=0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(b > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fimd(g: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """[B, P] -> [P] f32; B % BLOCK_B == 0 and P % BLOCK_P == 0
+    (ops.fimd pads arbitrary shapes)."""
+    B, P = g.shape
+    assert B % BLOCK_B == 0 and P % BLOCK_P == 0, (B, P)
+    grid = (P // BLOCK_P, B // BLOCK_B)
+    return pl.pallas_call(
+        _fimd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_B, BLOCK_P), lambda p, b: (b, p))],
+        out_specs=pl.BlockSpec((BLOCK_P,), lambda p, b: (p,)),
+        out_shape=jax.ShapeDtypeStruct((P,), F32),
+        interpret=interpret,
+    )(g)

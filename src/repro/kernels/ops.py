@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels: arbitrary shapes/dtypes
+in, padding + tiling handled here, interpret mode selected automatically on
+CPU (the container validates kernel bodies in Python; TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dampen as _dampen
+from . import fimd as _fimd
+from . import gemm_fisher as _gf
+
+F32 = jnp.float32
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _to_2d(flat: jax.Array, bc: int) -> Tuple[jax.Array, int]:
+    """[P] -> [R, bc] padded; returns (2d, original P)."""
+    P = flat.shape[0]
+    padded = _pad_to(flat, bc, 0).reshape(-1, bc)
+    padded = _pad_to(padded, 8, 0)
+    return padded, P
+
+
+def fimd(g: jax.Array) -> jax.Array:
+    """Sum of squared gradients over axis 0. g: [B, ...] -> [...] f32."""
+    B = g.shape[0]
+    shape = g.shape[1:]
+    flat = g.reshape(B, -1)
+    flat = _pad_to(_pad_to(flat, _fimd.BLOCK_P, 1), _fimd.BLOCK_B, 0)
+    out = _fimd.fimd(flat, interpret=_interpret())
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape)
+
+
+def dampen(theta: jax.Array, i_f: jax.Array, i_g: jax.Array,
+           alpha, lam) -> Tuple[jax.Array, jax.Array]:
+    """SSD Eq. (3)+(4) via the fused Pallas kernel. Any shape/dtype.
+    Returns (theta', selected_mask) matching core.ssd.dampen_array."""
+    shape = theta.shape
+    th2, P = _to_2d(theta.reshape(-1), _dampen.BLOCK_C)
+    if2, _ = _to_2d(i_f.reshape(-1).astype(F32), _dampen.BLOCK_C)
+    ig2, _ = _to_2d(i_g.reshape(-1).astype(F32), _dampen.BLOCK_C)
+    out = _dampen.dampen(th2, if2, ig2, alpha, lam, interpret=_interpret())
+    new = out.reshape(-1)[:P].reshape(shape).astype(theta.dtype)
+    mask = (i_f.astype(F32) > alpha * i_g.astype(F32))
+    return new, mask
+
+
+def dampen_int8(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
+                alpha, lam) -> jax.Array:
+    shape = theta_q.shape
+    th2, P = _to_2d(theta_q.reshape(-1), _dampen.BLOCK_C)
+    if2, _ = _to_2d(i_f.reshape(-1).astype(F32), _dampen.BLOCK_C)
+    ig2, _ = _to_2d(i_g.reshape(-1).astype(F32), _dampen.BLOCK_C)
+    out = _dampen.dampen_int8(th2, if2, ig2, alpha, lam, interpret=_interpret())
+    return out.reshape(-1)[:P].reshape(shape)
+
+
+def gemm_fisher(a: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """dW = a^T @ g and dW^2, fused. a: [N, M], g: [N, K]."""
+    N, M = a.shape
+    K = g.shape[1]
+    a2 = _pad_to(_pad_to(a, _gf.BLOCK_N, 0), _gf.BLOCK_M, 1)
+    g2 = _pad_to(_pad_to(g, _gf.BLOCK_N, 0), _gf.BLOCK_K, 1)
+    dw, fish = _gf.gemm_fisher(a2, g2, interpret=_interpret())
+    return dw[:M, :K], fish[:M, :K]

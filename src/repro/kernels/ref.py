@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract the
+shape/dtype sweep in tests/test_kernels.py asserts against)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def fimd_ref(g: jax.Array) -> jax.Array:
+    """FIMD IP oracle: sum of squared gradients over the batch/chunk axis.
+    g: [B, P] -> [P] f32."""
+    gf = g.astype(F32)
+    return jnp.sum(gf * gf, axis=0)
+
+
+def dampen_ref(theta: jax.Array, i_f: jax.Array, i_g: jax.Array,
+               alpha: float, lam: float) -> jax.Array:
+    """Dampening IP oracle: Eqs. (3)+(4) fused select/beta/multiply."""
+    i_f32 = i_f.astype(F32)
+    i_g32 = i_g.astype(F32)
+    sel = i_f32 > alpha * i_g32
+    beta = jnp.minimum(lam * i_g32 / jnp.maximum(i_f32, 1e-30), 1.0)
+    out = jnp.where(sel, theta.astype(F32) * beta, theta.astype(F32))
+    return out.astype(theta.dtype)
+
+
+def dampen_int8_ref(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
+                    alpha: float, lam: float) -> jax.Array:
+    """INT8 deployment path: dampening applied directly in the quantised
+    domain (beta <= 1 keeps the per-tensor scale valid)."""
+    sel = i_f.astype(F32) > alpha * i_g.astype(F32)
+    beta = jnp.minimum(lam * i_g.astype(F32) / jnp.maximum(i_f.astype(F32), 1e-30), 1.0)
+    val = jnp.where(sel, jnp.round(theta_q.astype(F32) * beta),
+                    theta_q.astype(F32))
+    return jnp.clip(val, -127, 127).astype(jnp.int8)
+
+
+def gemm_fisher_ref(a: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fused backward-GEMM + Fisher epilogue oracle.
+
+    a: [N, M] layer-input activations; g: [N, K] output gradients.
+    Returns (dW [M, K] in a.dtype's f32 accumulation, dW^2 f32) — the paper's
+    GEMM -> FIMD stream for one patch/chunk.
+    """
+    dw = jnp.einsum("nm,nk->mk", a.astype(F32), g.astype(F32))
+    return dw, dw * dw

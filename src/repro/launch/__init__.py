@@ -1,0 +1,3 @@
+# Launchers: mesh construction, dry-run, train, serve.  NOTE: dryrun must be
+# executed as a module entrypoint (python -m repro.launch.dryrun) so its
+# XLA_FLAGS line runs before jax initialises devices.

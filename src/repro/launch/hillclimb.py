@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing (§Perf): re-lower selected cells with candidate
+optimizations and record hypothesis -> change -> before -> after.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb qwen_cp
+    PYTHONPATH=src python -m repro.launch.hillclimb --all
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT_DIR = "experiments/perf"
+
+# Each experiment: cell + config overrides + the napkin-math hypothesis.
+EXPERIMENTS = {
+    # HC-1: qwen1.5-32b train_4k — memory-bound (355 s HBM term). 40 heads
+    # don't divide TP=16, so baseline attention is fully replicated per
+    # device. CP shards queries into 16 sequence segments on 'model':
+    # expect ~16x less attention score traffic (the dominant bytes) and
+    # ~16x less attention compute -> memory term should drop several-fold.
+    "qwen_cp16": dict(arch="qwen1.5-32b", shape="train_4k",
+                      overrides={"cp_attention": 16}),
+    # HC-1 iter 3: pure-FSDP — batch 256 == chip count, so shard the batch
+    # over data x model (no TP at all); weights are layer-gathered (630 MB)
+    # instead of activations being all-reduced (10.5 GB/layer). Expect the
+    # Megatron-style activation ARs (7.3 TB/dev) to collapse to ~weight-
+    # sized AGs + grad reduce-scatters (~0.2 TB/dev).
+    "qwen_fsdp": dict(arch="qwen1.5-32b", shape="train_4k",
+                      overrides={"parallelism": "fsdp"}),
+    "qwen_fsdp_prefill": dict(arch="qwen1.5-32b", shape="prefill_32k",
+                              overrides={"parallelism": "fsdp"}),
+    # HC-2: llama4-scout prefill_32k — most collective-bound cell
+    # (1.36e3 s, 61 TiB/dev of all-reduce). Hypothesis: the MoE scatter
+    # into the (data x model)-sharded expert buffer is being resolved by
+    # SPMD as replicate+all-reduce of the 18 GB buffer per layer. Forcing
+    # the buffer/combine shardings (moe_shard_constraints) should turn it
+    # into all-to-all-class traffic ~ tokens*D bytes.
+    "llama4_moe_constraints": dict(arch="llama4-scout-17b-a16e",
+                                   shape="prefill_32k",
+                                   overrides={"moe_shard_constraints": True}),
+    "llama4_moe_constraints_train": dict(arch="llama4-scout-17b-a16e",
+                                         shape="train_4k",
+                                         overrides={"moe_shard_constraints": True}),
+    # HC-2 on kimi (same mechanism; 11.7 TiB/dev AR at train_4k).
+    "kimi_moe_constraints": dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                                 overrides={"moe_shard_constraints": True}),
+    # HC-2 iter 2+3: the dominant AR is NOT MoE dispatch (3 GiB a2a) but
+    # (a) a [B,S,V] f32 logits all-reduce (prefill computes the head on all
+    # positions) and (b) Megatron-style [B,S,D] f32 activation ARs from the
+    # 40-heads-vs-TP16 replication. Fix (a) with a last-token-only head and
+    # (b) with CP (kv=8 makes k/v gathers cheap) / pure FSDP on train.
+    "llama4_prefill_cp": dict(arch="llama4-scout-17b-a16e",
+                              shape="prefill_32k",
+                              overrides={"cp_attention": 16}),
+    "llama4_fsdp_train": dict(arch="llama4-scout-17b-a16e", shape="train_4k",
+                              overrides={"parallelism": "fsdp"}),
+    "kimi_fsdp_train": dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                            overrides={"parallelism": "fsdp"}),
+    # HC-3 (paper technique at pod scale) lives in launch/unlearn_cell.py.
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*", default=[])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(EXPERIMENTS) if args.all or not args.names else args.names
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for name in names:
+        exp = EXPERIMENTS[name]
+        print(f"[hillclimb] {name}: {exp['arch']} x {exp['shape']} "
+              f"overrides={exp['overrides']}", flush=True)
+        rec = run_cell(exp["arch"], exp["shape"], multi_pod=False,
+                       overrides=exp["overrides"])
+        rec["experiment"] = name
+        rec["overrides"] = exp["overrides"]
+        with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec.get("status") == "ok":
+            t = rec["roofline"]
+            print(f"  -> dom={t['dominant']} compute={t['compute_s']:.3g}s "
+                  f"memory={t['memory_s']:.3g}s coll={t['collective_s']:.3g}s "
+                  f"frac={t['roofline_fraction']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: (16, 16)       -> ("data", "model")       = 256 chips (v5e pod)
+Multi pod:  (2, 16, 16)    -> ("pod", "data", "model") = 512 chips
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    assert len(devs) >= n, (
+        f"need {n} devices, have {len(devs)} — the dry-run entrypoint must "
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+        "importing jax")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (axis names kept so the same
+    sharding rules apply)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

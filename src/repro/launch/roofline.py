@@ -1,0 +1,105 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs   / (chips * peak_FLOPs)
+  memory term     = HLO_bytes   / (chips * HBM_bw)
+  collective term = coll_bytes  / (chips * link_bw)
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports the
+PER-DEVICE program, so the per-chip terms divide by one chip's peak and the
+"global" numbers multiply back by the chip count (recorded both ways in the
+JSON).  Collective bytes are not in cost_analysis: we parse the post-SPMD
+HLO and sum, per collective op, the bytes that actually cross links
+(result bytes; reduce-scatter counts the pre-reduce operand, all-reduce
+counts 2x result for the reduce+broadcast round).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device bytes moved by collectives in a post-SPMD HLO module."""
+    per_op: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, op = m.group(1), m.group(2), m.group(3), m.group(4)
+        if op.endswith("-done"):
+            continue
+        if tuple_body is not None:
+            b = sum(_shape_bytes(dt, dm)
+                    for dt, dm in _SHAPE_RE.findall(tuple_body))
+        else:
+            b = _shape_bytes(dtype, dims)
+        if op == "all-reduce":
+            b *= 2                      # reduce-scatter + all-gather rounds
+        per_op[op] = per_op.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_per_device": sum(per_op.values()),
+            "by_op_bytes": per_op, "by_op_counts": counts}
+
+
+def roofline_terms(cost: Dict[str, float], coll_bytes_per_dev: int,
+                   n_chips: int, model_flops: float) -> Dict[str, Any]:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    hlo_flops_global = flops_dev * n_chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_bytes_per_dev,
+        "hlo_flops_global": hlo_flops_global,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+        "step_time_bound_s": bound,
+    }
+
+
+def memory_summary(mem) -> Dict[str, float]:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out

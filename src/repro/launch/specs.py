@@ -1,0 +1,342 @@
+"""Per-cell lowering specs: for every (architecture x input-shape) pair,
+build the step function, abstract ShapeDtypeStruct inputs (NO device
+allocation — full configs exist only abstractly here), and in/out shardings
+for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchSpec, ShapeCell
+from repro.dist import sharding as shd
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.optim import AdamWConfig, init_adamw, make_train_step
+from repro.models.module import map_with_paths
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class CellSpec:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStructs (pytrees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model_flops: float             # 6*N*D (dense) / 6*N_active*D (MoE) per step
+    n_params: int
+    n_active_params: int
+    # global FLOPs that cost_analysis undercounts because they sit inside a
+    # sequential lax.scan that cannot be unrolled (sLSTM time recurrence).
+    scan_correction_flops: float = 0.0
+
+
+def _slstm_correction(cfg: LM.LMConfig, cell: ShapeCell) -> float:
+    """Global FLOPs inside sequential scans that XLA's cost analysis counts
+    only once: the sLSTM time recurrence and the mLSTM inter-chunk state
+    scan (the quadratic intra-chunk math is vectorised outside the scan and
+    IS counted)."""
+    B = cell.global_batch
+    S = cell.seq_len if cell.kind in ("train", "prefill") else 1
+    if S <= 1:
+        return 0.0
+    mult = 3.0 if cell.kind == "train" else 1.0
+    D = cfg.d_model
+    total = 0.0
+
+    n_slstm = sum(1 for t in cfg.layer_types if t == "slstm")
+    if n_slstm:
+        dh = D // cfg.n_heads
+        step_flops = 2 * B * (4 * D * D + 4 * D * dh + D * D)
+        total += n_slstm * (S - 1) * step_flops * mult
+
+    n_mlstm = sum(1 for t in cfg.layer_types if t == "mlstm")
+    if n_mlstm:
+        H, Dh, Ck = cfg.n_heads, cfg.dh, cfg.mlstm_chunk
+        nC = -(-S // Ck)
+        # per trip: intra-chunk quadratic (scores + out) + inter einsum +
+        # kv outer product + state decay — see recurrent.mlstm_forward.step
+        trip = 2 * B * H * (2 * Ck * Ck * Dh + 2 * Ck * Dh * Dh + Dh * Dh)
+        total += n_mlstm * max(0, nC - 1) * trip * mult
+    return total
+
+
+def _sh(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is not None:
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_counts(cfg) -> Tuple[int, int]:
+    """(total params, activated params per token) from abstract shapes."""
+    if isinstance(cfg, ED.EncDecConfig):
+        shapes = jax.eval_shape(lambda k: ED.init_encdec(k, cfg),
+                                jax.random.PRNGKey(0))
+        n = sum(x.size for x in jax.tree_util.tree_leaves(shapes))
+        return n, n
+    shapes = jax.eval_shape(lambda k: LM.init_lm(k, cfg), jax.random.PRNGKey(0))
+    total = sum(x.size for x in jax.tree_util.tree_leaves(shapes))
+    if cfg.moe is None:
+        return total, total
+    # active = total - (non-activated expert fraction)
+    flat = list(jax.tree_util.tree_flatten_with_path(shapes)[0])
+    expert = 0
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "ffn/w_" in key and "shared" not in key:
+            expert += leaf.size
+    active = total - expert + expert * cfg.moe.top_k / cfg.moe.num_experts
+    return total, int(active)
+
+
+def _model_flops(cfg, cell: ShapeCell, n_active: int) -> float:
+    """MODEL_FLOPS = 6*N_active*D for train; 2*N_active*D for inference."""
+    tokens = cell.global_batch * (cell.seq_len if cell.kind in ("train", "prefill") else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(spec: ArchSpec, cell: ShapeCell, mesh,
+             unroll: bool = False) -> CellSpec:
+    cfg: LM.LMConfig = spec.full
+    B, S = cell.global_batch, cell.seq_len
+    dp = shd.dp_size(mesh)
+    if unroll:
+        cfg = cfg.with_(unroll_layers=True)
+
+    if cfg.moe is not None:
+        tokens = B * (S if cell.kind in ("train", "prefill") else 1)
+        # blocks: multiple of the token-sharding device count (local cumsum
+        # per shard) AND small enough that the [Tb*K, E] position tensor
+        # stays ~100 MB per block.
+        shards = dp * mesh.shape["model"] if cfg.parallelism == "fsdp" else dp
+        nb = shards if tokens % shards == 0 and tokens >= shards else \
+            (dp if tokens % dp == 0 and tokens >= dp else 1)
+        while tokens // nb > 8192 and tokens % (nb * 2) == 0:
+            nb *= 2
+        cfg = cfg.with_(dispatch_blocks=nb)
+    if cell.kind == "train":
+        cfg = cfg.with_(remat=True)
+
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda k: LM.init_lm(k, cfg), key)
+    p_specs = shd.param_pspecs(p_shapes, mesh, mode=cfg.parallelism)
+    p_sh = _sh(mesh, p_specs)
+    n_total, n_active = _param_counts(spec.full)
+    mflops = _model_flops(cfg, cell, n_active)
+
+    S_tok = S - cfg.prefix_len if cfg.prefix_len else S
+    tok_spec = shd.batch_pspec(mesh, B, 2, mode=cfg.parallelism)
+    prefix_sds = None
+    if cfg.prefix_len:
+        prefix_sds = _sds((B, cfg.prefix_len, cfg.d_model), jnp.bfloat16, mesh,
+                          shd.batch_pspec(mesh, B, 3, mode=cfg.parallelism))
+
+    if cell.kind == "train":
+        ocfg = AdamWConfig(state_dtype=jnp.float32)
+        o_shapes = jax.eval_shape(lambda p: init_adamw(ocfg, p), p_shapes)
+        from repro.optim.adamw import AdamState
+        o_sh = AdamState(step=NamedSharding(mesh, P()),
+                         mu=_sh(mesh, p_specs), nu=_sh(mesh, p_specs))
+
+        if cfg.prefix_len:
+            def loss_fn(p, batch):
+                return LM.lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                                  prefix=batch["prefix"])
+        else:
+            def loss_fn(p, batch):
+                return LM.lm_loss(p, cfg, batch["tokens"], batch["labels"])
+        step = make_train_step(loss_fn, ocfg)
+
+        batch_sds = {"tokens": _sds((B, S_tok), I32, mesh, tok_spec),
+                     "labels": _sds((B, S_tok), I32, mesh, tok_spec)}
+        batch_sh = {"tokens": NamedSharding(mesh, tok_spec),
+                    "labels": NamedSharding(mesh, tok_spec)}
+        if prefix_sds is not None:
+            batch_sds["prefix"] = prefix_sds
+            batch_sh["prefix"] = NamedSharding(
+                mesh, shd.batch_pspec(mesh, B, 3, mode=cfg.parallelism))
+        args = (p_shapes, o_shapes, batch_sds)
+        return CellSpec(
+            name=f"{spec.arch_id}:{cell.name}", fn=step, args=args,
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1), model_flops=mflops,
+            n_params=n_total, n_active_params=n_active,
+            scan_correction_flops=_slstm_correction(cfg, cell))
+
+    if cell.kind == "prefill":
+        def prefill(p, tokens, prefix=None):
+            logits, _ = LM.forward(p, cfg, tokens, prefix, last_only=True)
+            return logits[:, 0]
+
+        args = [p_shapes, _sds((B, S_tok), I32, mesh, tok_spec)]
+        in_sh = [p_sh, NamedSharding(mesh, tok_spec)]
+        if prefix_sds is not None:
+            fn = lambda p, t, px: prefill(p, t, px)
+            args.append(prefix_sds)
+            in_sh.append(NamedSharding(
+                mesh, shd.batch_pspec(mesh, B, 3, mode=cfg.parallelism)))
+        else:
+            fn = lambda p, t: prefill(p, t)
+        return CellSpec(
+            name=f"{spec.arch_id}:{cell.name}", fn=fn, args=tuple(args),
+            in_shardings=tuple(in_sh), out_shardings=None,
+            donate_argnums=(), model_flops=_model_flops(cfg, cell, n_active),
+            n_params=n_total, n_active_params=n_active,
+            scan_correction_flops=_slstm_correction(cfg, cell))
+
+    # decode / long_decode: one new token against a seq_len cache
+    cache_shapes = jax.eval_shape(lambda: LM.init_cache(cfg, B, S))
+    cache_specs = shd.cache_pspecs(cache_shapes, mesh, B)
+    cache_sh = _sh(mesh, cache_specs)
+    tok1_spec = shd.batch_pspec(mesh, B, 2)
+
+    def decode(p, cache, token, pos):
+        return LM.decode_step(p, cfg, token, cache, pos)
+
+    args = (p_shapes, cache_shapes, _sds((B, 1), I32, mesh, tok1_spec),
+            _sds((), I32, mesh, P()))
+    return CellSpec(
+        name=f"{spec.arch_id}:{cell.name}", fn=decode, args=args,
+        in_shardings=(p_sh, cache_sh, NamedSharding(mesh, tok1_spec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,), model_flops=mflops,
+        n_params=n_total, n_active_params=n_active)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder cells (whisper)
+# ---------------------------------------------------------------------------
+def _encdec_cell(spec: ArchSpec, cell: ShapeCell, mesh,
+                 unroll: bool = False) -> CellSpec:
+    cfg: ED.EncDecConfig = spec.full
+    B, S = cell.global_batch, cell.seq_len
+    if unroll:
+        cfg = cfg.with_(unroll_layers=True)
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda k: ED.init_encdec(k, cfg), key)
+    p_specs = shd.param_pspecs(p_shapes, mesh)
+    p_sh = _sh(mesh, p_specs)
+    n_total, n_active = _param_counts(cfg)
+    mflops = _model_flops(cfg, cell, n_active)
+
+    tok_spec = shd.batch_pspec(mesh, B, 2)
+    frames_sds = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16, mesh,
+                      shd.batch_pspec(mesh, B, 3))
+    frames_sh = NamedSharding(mesh, shd.batch_pspec(mesh, B, 3))
+
+    if cell.kind == "train":
+        ocfg = AdamWConfig(state_dtype=jnp.float32)
+        o_shapes = jax.eval_shape(lambda p: init_adamw(ocfg, p), p_shapes)
+        from repro.optim.adamw import AdamState
+        o_sh = AdamState(step=NamedSharding(mesh, P()),
+                         mu=_sh(mesh, p_specs), nu=_sh(mesh, p_specs))
+
+        def loss_fn(p, batch):
+            return ED.lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                              batch["frames"])
+        step = make_train_step(loss_fn, ocfg)
+        batch_sds = {"tokens": _sds((B, S), I32, mesh, tok_spec),
+                     "labels": _sds((B, S), I32, mesh, tok_spec),
+                     "frames": frames_sds}
+        batch_sh = {"tokens": NamedSharding(mesh, tok_spec),
+                    "labels": NamedSharding(mesh, tok_spec),
+                    "frames": frames_sh}
+        return CellSpec(
+            name=f"{spec.arch_id}:{cell.name}", fn=step,
+            args=(p_shapes, o_shapes, batch_sds),
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1), model_flops=mflops,
+            n_params=n_total, n_active_params=n_active)
+
+    if cell.kind == "prefill":
+        def prefill(p, tokens, frames):
+            return ED.forward(p, cfg, tokens, frames)[:, -1]
+        return CellSpec(
+            name=f"{spec.arch_id}:{cell.name}", fn=prefill,
+            args=(p_shapes, _sds((B, S), I32, mesh, tok_spec), frames_sds),
+            in_shardings=(p_sh, NamedSharding(mesh, tok_spec), frames_sh),
+            out_shardings=None, donate_argnums=(),
+            model_flops=mflops, n_params=n_total, n_active_params=n_active)
+
+    cache_shapes = jax.eval_shape(lambda: ED.init_cache(cfg, B, S))
+    cache_specs = shd.cache_pspecs(cache_shapes, mesh, B)
+    cache_sh = _sh(mesh, cache_specs)
+    mem_sds = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16, mesh,
+                   shd.batch_pspec(mesh, B, 3))
+
+    def decode(p, cache, token, pos, memory):
+        return ED.decode_step(p, cfg, token, cache, pos, memory)
+
+    tok1_spec = shd.batch_pspec(mesh, B, 2)
+    args = (p_shapes, cache_shapes, _sds((B, 1), I32, mesh, tok1_spec),
+            _sds((), I32, mesh, P()), mem_sds)
+    return CellSpec(
+        name=f"{spec.arch_id}:{cell.name}", fn=decode, args=args,
+        in_shardings=(p_sh, cache_sh, NamedSharding(mesh, tok1_spec),
+                      NamedSharding(mesh, P()), frames_sh),
+        out_shardings=(None, cache_sh), donate_argnums=(1,),
+        model_flops=mflops, n_params=n_total, n_active_params=n_active)
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh,
+               variant: str = "full", overrides: Optional[Dict] = None
+               ) -> CellSpec:
+    """variant:
+      "full"    — the production program (lax.scan over layers). Used for the
+                  compile-proof and memory analysis; cost_analysis on it
+                  undercounts loop bodies (XLA counts them once).
+      "probe1"  — 1 pattern-period (+tail) with ALL loops unrolled.
+      "probe2"  — 2 pattern-periods (+tail), unrolled.
+    The dry-run extrapolates exact per-step cost affinely:
+      Cost(P) = probe1 + (P-1) * (probe2 - probe1).
+    """
+    cell = SHAPES[shape_name]
+    if shape_name in spec.skip_shapes:
+        raise ValueError(f"{spec.arch_id} skips {shape_name}: "
+                         f"{spec.skip_shapes[shape_name]}")
+    if overrides:
+        spec = dataclasses.replace(spec, full=spec.full.with_(**overrides))
+    if variant != "full":
+        k = 1 if variant == "probe1" else 2
+        spec = dataclasses.replace(spec, full=_shrink(spec.full, k))
+    unroll = variant != "full"
+    if spec.kind == "encdec":
+        return _encdec_cell(spec, cell, mesh, unroll)
+    return _lm_cell(spec, cell, mesh, unroll)
+
+
+def _shrink(cfg, k: int):
+    """Config with k pattern-periods (+ the full config's tail layers)."""
+    if isinstance(cfg, ED.EncDecConfig):
+        return cfg.with_(n_enc_layers=k, n_dec_layers=k)
+    period = len(cfg.block_pattern)
+    return cfg.with_(n_layers=k * period + cfg.n_tail)
+
+
+def n_periods_of(spec: ArchSpec) -> int:
+    """The P used in the affine extrapolation."""
+    if spec.kind == "encdec":
+        return spec.full.n_dec_layers   # enc and dec scale together in probes
+    return spec.full.n_periods

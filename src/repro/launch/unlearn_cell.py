@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""HC-3: the paper's technique itself at pod scale.
+
+Lowers ONE per-layer CAU step for yi-6b (forget batch 64 x 4096) on the
+16x16 mesh — backward GEMMs for one block, diagonal-Fisher square-accumulate
+(FIMD), and select/beta/multiply (Dampening) — in two variants:
+
+  "streamed"  the paper's DRAM-streaming organisation: three separate jitted
+              programs (grad GEMMs -> store; FIMD <- load grads; dampen),
+              i.e. the gradient tensor makes a full HBM round trip between
+              GEMM and FIMD, and the Fisher tensor another before dampening.
+  "fused"     the TPU re-design (DESIGN.md §2): one program — Fisher is a
+              fused epilogue of the wgrad GEMM and dampening consumes it
+              in-register; gradients never hit HBM as a standalone tensor.
+
+Reported: per-variant roofline terms; the delta is the pod-scale analogue of
+the paper's FIMD/Dampening IP fusion wins.
+
+    PYTHONPATH=src python -m repro.launch.unlearn_cell
+"""
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm as LM  # noqa: E402
+
+F32 = jnp.float32
+N_FORGET = 64
+SEQ = 4096
+ALPHA, LAM = 10.0, 1.0
+
+
+def _setup():
+    spec = configs.get("yi-6b")
+    cfg = spec.full
+    mesh = make_production_mesh()
+    # one mid-stack block + its input activations (the CAU unit of work)
+    blk_shapes = jax.eval_shape(
+        lambda k: LM.init_block(k, cfg, "attn"), jax.random.PRNGKey(0))
+    from repro.dist import sharding as shd
+    blk_specs = shd.param_pspecs(blk_shapes, mesh)
+    blk_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                    blk_specs,
+                                    is_leaf=lambda s: isinstance(s, P))
+    act_sds = jax.ShapeDtypeStruct(
+        (N_FORGET, SEQ, cfg.d_model), jnp.bfloat16,
+        sharding=NamedSharding(mesh, P("data", None, None)))
+    cot_sds = act_sds  # upstream cotangent, same shape/sharding
+    fisher_sds = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, F32), blk_shapes)
+    return cfg, mesh, blk_shapes, blk_sh, act_sds, cot_sds, fisher_sds
+
+
+def _layer_fn(cfg):
+    pos = jnp.arange(SEQ)[None].repeat(N_FORGET, 0)
+
+    def f(blk, act):
+        out, _ = LM.block_forward(blk, cfg, "attn", act, pos)
+        return out
+    return f
+
+
+def run() -> dict:
+    cfg, mesh, blk_shapes, blk_sh, act_sds, cot_sds, fisher_sds = _setup()
+    layer = _layer_fn(cfg)
+    fisher_sh = jax.tree_util.tree_map(lambda _: None, fisher_sds)
+    results = {}
+
+    def grads_program(blk, act, cot):
+        _, vjp = jax.vjp(layer, blk, act)
+        g_blk, g_act = vjp(cot)
+        return g_blk, g_act
+
+    def fimd_program(g_blk):
+        return jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_blk)
+
+    def dampen_program(blk, fish, fish_global):
+        from repro.core.ssd import dampen_tree
+        new, _ = dampen_tree(blk, fish, fish_global, ALPHA, LAM)
+        return new
+
+    def fused_program(blk, act, cot, fish_global):
+        _, vjp = jax.vjp(layer, blk, act)
+        g_blk, g_act = vjp(cot)
+        fish = jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_blk)
+        from repro.core.ssd import dampen_tree
+        new, _ = dampen_tree(blk, fish, fish_global, ALPHA, LAM)
+        return new, g_act
+
+    def analyse(name, jitted, args):
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        c = compiled.cost_analysis()
+        c = dict(c[0] if isinstance(c, (list, tuple)) else c)
+        coll = RL.collective_stats(compiled.as_text())
+        terms = RL.roofline_terms(c, coll["bytes_per_device"],
+                                  mesh.devices.size, model_flops=0.0)
+        mem = RL.memory_summary(compiled.memory_analysis())
+        return {"flops": c.get("flops"), "bytes": c.get("bytes accessed"),
+                "collective_bytes": coll["bytes_per_device"],
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+                "temp_gib": mem.get("temp_size_in_bytes", 0) / 2**30}
+
+    with mesh:
+        # streamed: 3 programs; grads + fisher cross HBM between programs
+        g1 = jax.jit(grads_program, in_shardings=(blk_sh, None, None))
+        r1 = analyse("grads", g1, (blk_shapes, act_sds, cot_sds))
+        g2 = jax.jit(fimd_program)
+        r2 = analyse("fimd", g2, (blk_shapes,))
+        g3 = jax.jit(dampen_program, in_shardings=(blk_sh, None, None))
+        r3 = analyse("dampen", g3, (blk_shapes, fisher_sds, fisher_sds))
+        streamed = {k: r1[k] + r2[k] + r3[k]
+                    for k in ("flops", "bytes", "collective_bytes",
+                              "compute_s", "memory_s", "collective_s")}
+        # plus the inter-program HBM round trips the paper's DRAM streaming
+        # pays explicitly: grads store+load, fisher store+load
+        n_blk_bytes = sum(x.size * 4 for x in
+                          jax.tree_util.tree_leaves(blk_shapes))
+        streamed["bytes"] += 2 * 2 * n_blk_bytes / mesh.devices.size
+        streamed["memory_s"] = streamed["bytes"] / RL.HBM_BW
+
+        gf = jax.jit(fused_program, in_shardings=(blk_sh, None, None, None),
+                     out_shardings=(blk_sh, None))
+        fused = analyse("fused", gf,
+                        (blk_shapes, act_sds, cot_sds, fisher_sds))
+
+    results = {"streamed": streamed, "fused": fused,
+               "speedup_memory_term": streamed["memory_s"] / fused["memory_s"],
+               "cell": f"yi-6b CAU layer step, N={N_FORGET} S={SEQ}, 16x16"}
+    return results
+
+
+def main():
+    t0 = time.time()
+    res = run()
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open("experiments/perf/unlearn_cell.json", "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps(res, indent=1))
+    print(f"[unlearn_cell] done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

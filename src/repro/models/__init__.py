@@ -1,0 +1,4 @@
+from . import encdec, layers, lm, module, recurrent, vision  # noqa: F401
+from .lm import LMConfig, MoESpec  # noqa: F401
+from .encdec import EncDecConfig  # noqa: F401
+from .vision import ResNetConfig, ViTConfig  # noqa: F401

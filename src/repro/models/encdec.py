@@ -1,0 +1,200 @@
+"""Whisper-style encoder–decoder backbone (audio frontend is a STUB per the
+assignment: ``input_specs()`` supplies precomputed mel-frame embeddings
+[B, n_frames, d_model] in place of the conv1d stem).
+
+Encoder: bidirectional self-attention blocks.
+Decoder: causal self-attention + cross-attention + MLP blocks, with KV caches
+for both self and cross attention in decode mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .module import KeyGen, Params, dense_init, embed_init
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    n_frames: int = 1500          # encoder memory length (stub frontend output)
+    param_dtype: str = "float32"
+    unroll_layers: bool = False   # dry-run: unroll layer scans for cost analysis
+
+    @property
+    def dh(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def self_cfg(self, causal: bool) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads, self.dh,
+                            causal=causal, use_rope=True)
+
+    def cross_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads, self.dh,
+                            causal=False, cross=True, use_rope=False)
+
+    def with_(self, **kw) -> "EncDecConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _init_enc_block(key, cfg: EncDecConfig) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    return {"ln1": L.init_rmsnorm(cfg.d_model, dt),
+            "attn": L.init_attention(kg(), cfg.self_cfg(False), dt),
+            "ln2": L.init_rmsnorm(cfg.d_model, dt),
+            "ffn": L.init_mlp(kg(), cfg.d_model, cfg.d_ff, dt)}
+
+
+def _init_dec_block(key, cfg: EncDecConfig) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    return {"ln1": L.init_rmsnorm(cfg.d_model, dt),
+            "self_attn": L.init_attention(kg(), cfg.self_cfg(True), dt),
+            "ln_x": L.init_rmsnorm(cfg.d_model, dt),
+            "cross_attn": L.init_attention(kg(), cfg.cross_cfg(), dt),
+            "ln2": L.init_rmsnorm(cfg.d_model, dt),
+            "ffn": L.init_mlp(kg(), cfg.d_model, cfg.d_ff, dt)}
+
+
+def init_encdec(key, cfg: EncDecConfig) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+
+    def stack(blocks):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+    return {
+        "embed": {"w": embed_init(kg(), cfg.vocab, cfg.d_model, dt)},
+        "encoder": stack([_init_enc_block(kg(), cfg) for _ in range(cfg.n_enc_layers)]),
+        "decoder": stack([_init_dec_block(kg(), cfg) for _ in range(cfg.n_dec_layers)]),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "lm_head": {"w": dense_init(kg(), cfg.d_model, cfg.vocab, dt)},
+    }
+
+
+def enc_block(p: Params, cfg: EncDecConfig, x: jax.Array, pos: jax.Array) -> jax.Array:
+    x = x + L.attention(p["attn"], cfg.self_cfg(False), L.rmsnorm(p["ln1"], x), pos)
+    x = x + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x))
+    return x
+
+
+def dec_block(p: Params, cfg: EncDecConfig, x: jax.Array, memory: jax.Array,
+              pos: jax.Array) -> jax.Array:
+    x = x + L.attention(p["self_attn"], cfg.self_cfg(True), L.rmsnorm(p["ln1"], x), pos)
+    x = x + L.attention(p["cross_attn"], cfg.cross_cfg(), L.rmsnorm(p["ln_x"], x),
+                        kv_src=memory)
+    x = x + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x))
+    return x
+
+
+def encode(params: Params, cfg: EncDecConfig, frames: jax.Array) -> jax.Array:
+    """frames: [B, n_frames, d_model] stub embeddings -> memory."""
+    B, S = frames.shape[0], frames.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = frames.astype(cfg.dtype)
+
+    def body(x_c, p):
+        return enc_block(p, cfg, x_c, pos), None
+
+    if cfg.unroll_layers:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i],
+                                                  params["encoder"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x)
+
+
+def forward(params: Params, cfg: EncDecConfig, tokens: jax.Array,
+            frames: jax.Array) -> jax.Array:
+    """tokens [B,S]; frames [B,n_frames,D] -> logits [B,S,V] f32."""
+    memory = encode(params, cfg, frames)
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = params["embed"]["w"].astype(cfg.dtype)[tokens]
+
+    def body(x_c, p):
+        return dec_block(p, cfg, x_c, memory, pos), None
+
+    if cfg.unroll_layers:
+        for i in range(cfg.n_dec_layers):
+            x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i],
+                                                  params["decoder"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = L.rmsnorm(params["final_norm"], x)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype),
+                      preferred_element_type=F32)
+
+
+def init_cache(cfg: EncDecConfig, batch: int, seq_len: int) -> Params:
+    dt = cfg.dtype
+    self_c = L.init_kv_cache(cfg.self_cfg(True), batch, seq_len, dt)
+    layer = {"self": self_c}
+    return {"decoder": jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_dec_layers,) + x.shape).copy(),
+        layer)}
+
+
+def decode_step(params: Params, cfg: EncDecConfig, token: jax.Array,
+                cache: Params, pos: jax.Array, memory: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    x = params["embed"]["w"].astype(cfg.dtype)[token]
+
+    def body(x_c, inp):
+        p, c = inp
+        h = L.rmsnorm(p["ln1"], x_c)
+        m, new_self = L.attention_decode(p["self_attn"], cfg.self_cfg(True),
+                                         h, c["self"], pos)
+        x_c = x_c + m
+        x_c = x_c + L.attention(p["cross_attn"], cfg.cross_cfg(),
+                                L.rmsnorm(p["ln_x"], x_c), kv_src=memory)
+        x_c = x_c + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x_c))
+        return x_c, {"self": new_self}
+
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(cfg.n_dec_layers):
+            x, nc = body(x, (jax.tree_util.tree_map(lambda a: a[i], params["decoder"]),
+                             jax.tree_util.tree_map(lambda a: a[i], cache["decoder"])))
+            outs.append(nc)
+        new_dec = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_dec = jax.lax.scan(body, x, (params["decoder"], cache["decoder"]))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype),
+                        preferred_element_type=F32)
+    return logits, {"decoder": new_dec}
+
+
+def lm_loss(params: Params, cfg: EncDecConfig, tokens: jax.Array,
+            labels: jax.Array, frames: jax.Array) -> jax.Array:
+    from .lm import softmax_xent
+    logits = forward(params, cfg, tokens, frames)
+    return softmax_xent(logits, labels)
+
+
+# Unlearn-layer view: j=0 embed, j=1..n_enc encoder blocks, then decoder
+# blocks, then head.  Back-to-front order therefore edits the head, decoder,
+# encoder, embedding — matching "class-specific detail lives near the output".
+def n_unlearn_layers(cfg: EncDecConfig) -> int:
+    return cfg.n_enc_layers + cfg.n_dec_layers + 2

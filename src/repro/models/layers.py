@@ -1,0 +1,413 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / windowed /
+cross / decode-with-cache), dense MLP, and a GShard-style capacity MoE with
+expert parallelism via sharding constraints.
+
+All matmuls request f32 accumulation (``preferred_element_type``) so bf16
+parameter storage never degrades reductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .module import KeyGen, dense_init, ones, zeros
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=F32) -> Dict:
+    return {"scale": ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(F32)
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=F32) -> Dict:
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def layernorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(F32) + p["bias"].astype(F32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [Dh/2]
+    ang = positions.astype(F32)[..., None] * freqs               # [B, S, Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full-causal, windowed-causal, bidirectional, cross)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    window: int = 0          # 0 => full attention; >0 => sliding window
+    cross: bool = False      # cross-attention (kv from encoder memory)
+    d_kv_in: int = 0         # input dim for kv projection when cross
+    cp: int = 0              # context parallelism: shard queries over this
+    #   many 'model'-axis segments (the TP fallback when n_heads % TP != 0
+    #   replicates attention — CP shards the sequence instead; §Perf HC-1)
+
+
+def init_attention(key, cfg: AttnConfig, dtype=F32) -> Dict:
+    kg = KeyGen(key)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d_kv_in = cfg.d_kv_in or d
+    p = {
+        "wq": dense_init(kg(), d, h * dh, dtype),
+        "wk": dense_init(kg(), d_kv_in, kv * dh, dtype),
+        "wv": dense_init(kg(), d_kv_in, kv * dh, dtype),
+        "wo": dense_init(kg(), h * dh, d, dtype, scale=1.0 / math.sqrt(h * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((h * dh,), dtype)
+        p["bk"] = zeros((kv * dh,), dtype)
+        p["bv"] = zeros((kv * dh,), dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w, preferred_element_type=F32)
+    if b is not None:
+        y = y + b.astype(F32)
+    return y.astype(x.dtype)
+
+
+def _qkv(p: Dict, cfg: AttnConfig, x: jax.Array, kv_src: Optional[jax.Array] = None):
+    B = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_src is None else kv_src
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, -1, h, dh)
+    k = _proj(src, p["wk"], p.get("bk")).reshape(B, -1, kv, dh)
+    v = _proj(src, p["wv"], p.get("bv")).reshape(B, -1, kv, dh)
+    return q, k, v
+
+
+def _sdpa_block(q, k, v, dtype, causal, window, q_offset=0, valid=None):
+    """One query-block of attention. q [B,Sq,H,Dh]; k,v [B,Sk,KV,Dh].
+    ``valid``: optional [Sk] bool mask (decode ring buffers)."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(F32).reshape(B, Sq, KV, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(F32),
+                        preferred_element_type=F32) / math.sqrt(Dh)
+    if causal:
+        Sk = k.shape[1]
+        iq = jnp.arange(Sq) + q_offset
+        ik = jnp.arange(Sk)
+        m = ik[None, :] <= iq[:, None]
+        if window > 0:
+            m = m & (ik[None, :] > iq[:, None] - window)
+        scores = jnp.where(m[None, None, None], scores, -1e30)
+    if valid is not None:
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(F32),
+                     preferred_element_type=F32)
+    return out.reshape(B, Sq, H, Dh).astype(dtype)
+
+
+# Query-chunked ("lazy softmax row") attention: materialises at most
+# [B, H, Q_CHUNK, Sk] scores at a time; each chunk is rematerialised in the
+# backward pass, so long-sequence training never stores the S^2 matrix.
+Q_CHUNK = 512
+
+# Dry-run mode: XLA cost analysis counts a while-loop body once, so the
+# launcher unrolls inner chunk loops while lowering (set_unroll_inner(True))
+# to get per-step-accurate FLOP/byte/collective counts.
+_UNROLL_INNER = False
+
+
+def set_unroll_inner(flag: bool) -> None:
+    global _UNROLL_INNER
+    _UNROLL_INNER = bool(flag)
+
+
+def unroll_inner() -> bool:
+    return _UNROLL_INNER
+
+
+def _sdpa(q, k, v, dtype, causal, window):
+    B, Sq, H, Dh = q.shape
+    if Sq <= Q_CHUNK * 2 or Sq % Q_CHUNK != 0:
+        return _sdpa_block(q, k, v, dtype, causal, window)
+    nC = Sq // Q_CHUNK
+    qc = q.reshape(B, nC, Q_CHUNK, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk(carry, inp):
+        q_i, off = inp
+        o = _sdpa_block(q_i, k, v, dtype, causal, window, q_offset=off)
+        return carry, o
+
+    offsets = jnp.arange(nC) * Q_CHUNK
+    if _UNROLL_INNER:
+        outs = [chunk(0, (qc[i], offsets[i]))[1] for i in range(nC)]
+        outs = jnp.stack(outs)
+    else:
+        _, outs = jax.lax.scan(chunk, 0, (qc, offsets))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+def _sdpa_cp(q, k, v, dtype, causal, window):
+    """Context-parallel attention: the QUERY sequence axis is sharded over
+    'model'; k/v are gathered (replicated over 'model' — GQA keeps them
+    small).  Used with a sequence-parallel residual stream (lm.block_forward
+    constrains [B,S,D] to (_, 'model', _)) so q arrives already S-sharded and
+    no resharding happens at the attention boundary.  This replaces the
+    replicated-heads fallback when n_heads % TP != 0 (§Perf HC-1)."""
+    from jax.sharding import PartitionSpec as P
+    wsc = jax.lax.with_sharding_constraint
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = wsc(q, P(None, "model", None, None))
+    k = wsc(k, P(None, None, None, None))
+    v = wsc(v, P(None, None, None, None))
+    qf = q.astype(F32).reshape(B, S, KV, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(F32),
+                        preferred_element_type=F32) / math.sqrt(Dh)
+    if causal:
+        iq = jnp.arange(S)
+        ik = jnp.arange(S)
+        m = ik[None, :] <= iq[:, None]
+        if window > 0:
+            m = m & (ik[None, :] > iq[:, None] - window)
+        scores = jnp.where(m[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(F32),
+                     preferred_element_type=F32)
+    return wsc(out.reshape(B, S, H, Dh).astype(dtype),
+               P(None, "model", None, None))
+
+
+def attention(p: Dict, cfg: AttnConfig, x: jax.Array,
+              positions: Optional[jax.Array] = None,
+              kv_src: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _qkv(p, cfg, x, kv_src)
+    if cfg.use_rope and not cfg.cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    causal = cfg.causal and not cfg.cross
+    if cfg.cp > 1 and S % cfg.cp == 0 and kv_src is None and S > 1:
+        out = _sdpa_cp(q, k, v, x.dtype, causal, cfg.window if causal else 0)
+    else:
+        out = _sdpa(q, k, v, x.dtype, causal, cfg.window if causal else 0)
+    return _proj(out.reshape(B, S, -1), p["wo"])
+
+
+def attention_decode(p: Dict, cfg: AttnConfig, x: jax.Array, cache: Dict,
+                     pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Single-token decode with a KV cache.
+
+    x: [B, 1, D]; cache: {"k": [B, S_max, KV, Dh], "v": ..., } (window caches
+    are ring buffers of size ``window``); pos: scalar int32 current position.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, cfg, x)
+    if cfg.use_rope:
+        pvec = jnp.broadcast_to(pos[None, None], (B, 1))
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k_new = apply_rope(k_new, pvec, cfg.rope_theta)
+    S_max = cache["k"].shape[1]
+    slot = jnp.where(cfg.window > 0, pos % S_max, pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    ik = jnp.arange(S_max)
+    if cfg.window > 0:
+        # ring buffer: valid slots are the last ``window`` positions
+        age = (slot - ik) % S_max
+        valid = (age < jnp.minimum(pos + 1, S_max))
+    else:
+        valid = ik <= pos
+    out = _sdpa_block(q, k, v, x.dtype, causal=False, window=0, valid=valid)
+    out = _proj(out.reshape(B, 1, -1), p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, seq_len: int, dtype) -> Dict:
+    size = min(seq_len, cfg.window) if cfg.window > 0 else seq_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, dtype=F32) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "w_gate": dense_init(kg(), d, d_ff, dtype),
+        "w_up": dense_init(kg(), d, d_ff, dtype),
+        "w_down": dense_init(kg(), d_ff, d, dtype, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp(p: Dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"], preferred_element_type=F32)
+    u = jnp.einsum("...d,df->...f", x, p["w_up"], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch, EP over 'model' axis)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_ff: int = 0        # hidden dim of the always-on shared expert (0 = none)
+    dispatch_blocks: int = 1  # data-parallel blocks for local-capacity dispatch
+    shard_constraints: bool = False  # force (data x model) EP shardings on the
+    #   dispatch buffers so SPMD lowers to all-to-all instead of
+    #   replicate+all-reduce (§Perf HC-2)
+
+
+def init_moe(key, cfg: MoEConfig, dtype=F32) -> Dict:
+    kg = KeyGen(key)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(kg(), d, E, F32),  # router stays f32 (numerics)
+        "w_gate": (jax.random.normal(kg(), (E, d, f), F32) * std).astype(dtype),
+        "w_up": (jax.random.normal(kg(), (E, d, f), F32) * std).astype(dtype),
+        "w_down": (jax.random.normal(kg(), (E, f, d), F32) / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.shared_ff:
+        p["shared"] = init_mlp(kg(), d, cfg.shared_ff, dtype)
+    return p
+
+
+def moe_capacity(cfg: MoEConfig, tokens_per_block: int) -> int:
+    cap = int(math.ceil(tokens_per_block * cfg.top_k * cfg.capacity_factor
+                        / cfg.num_experts))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def moe_ffn(p: Dict, cfg: MoEConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with per-block capacity and scatter dispatch.
+
+    x: [B, S, D].  Tokens are flattened to [nb, Tb, D] where nb =
+    dispatch_blocks (aligned with the data axis so the cumsum stays local),
+    scattered into expert buffers [nb, E, C, D] (E sharded on 'model' by the
+    launcher), processed by per-expert SwiGLU einsums, and combined back.
+
+    Returns (output, aux_loss) where aux_loss is the standard load-balancing
+    loss (mean over blocks of E * dot(frac_tokens, frac_probs)).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    nb = cfg.dispatch_blocks
+    T = B * S
+    assert T % nb == 0, f"tokens {T} not divisible by dispatch blocks {nb}"
+    Tb = T // nb
+    C = moe_capacity(cfg, Tb)
+
+    xt = x.reshape(nb, Tb, D)
+    logits = jnp.einsum("ntd,de->nte", xt.astype(F32), p["router"],
+                        preferred_element_type=F32)            # [nb,Tb,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                        # [nb,Tb,K]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (GShard / Switch style).
+    me = jnp.mean(probs, axis=1)                                # [nb,E]
+    ce = jnp.mean(jax.nn.one_hot(eidx[..., 0], E, dtype=F32), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+
+    # Position of each (token, k) selection within its expert's buffer.
+    sel = jax.nn.one_hot(eidx, E, dtype=jnp.int32)              # [nb,Tb,K,E]
+    sel_flat = sel.reshape(nb, Tb * K, E)
+    pos_in_e = jnp.cumsum(sel_flat, axis=1) - 1                 # [nb,Tb*K,E]
+    pos = jnp.take_along_axis(
+        pos_in_e.reshape(nb, Tb, K, E),
+        eidx[..., None], axis=-1)[..., 0]                       # [nb,Tb,K]
+    in_cap = pos < C
+
+    # Scatter tokens into buffers [nb, E, C, D].
+    flat_dst = (eidx * C + pos).reshape(nb, Tb * K)             # [nb,Tb*K]
+    flat_dst = jnp.where(in_cap.reshape(nb, Tb * K), flat_dst, E * C)  # overflow slot
+    src = jnp.repeat(xt, K, axis=1)                             # [nb,Tb*K,D]
+    buf = jnp.zeros((nb, E * C + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, d_, s: b.at[d_].add(s))(buf, flat_dst, src)
+    buf = buf[:, : E * C].reshape(nb, E, C, D)
+
+    wsc = None
+    if cfg.shard_constraints:
+        from jax.sharding import PartitionSpec as P
+        wsc = jax.lax.with_sharding_constraint
+        # block axis on data, experts on model: the scatter result lands
+        # directly in EP layout (all-to-all), never replicated+all-reduced.
+        buf = wsc(buf, P("data", "model", None, None))
+
+    # Expert SwiGLU: einsums contract D locally; E is the sharded axis.
+    g = jnp.einsum("necd,edf->necf", buf, p["w_gate"], preferred_element_type=F32)
+    u = jnp.einsum("necd,edf->necf", buf, p["w_up"], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out_e = jnp.einsum("necf,efd->necd", h, p["w_down"],
+                       preferred_element_type=F32).astype(x.dtype)
+    if wsc is not None:
+        out_e = wsc(out_e, P("data", "model", None, None))
+
+    # Gather back and combine with router weights.
+    out_flat = out_e.reshape(nb, E * C, D)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((nb, 1, D), x.dtype)], axis=1)
+    gathered = jax.vmap(lambda o, d_: o[d_])(out_flat, flat_dst)  # [nb,Tb*K,D]
+    if wsc is not None:
+        gathered = wsc(gathered, P("data", None, None))
+    gathered = gathered.reshape(nb, Tb, K, D)
+    w = (gate * in_cap.astype(F32)).astype(x.dtype)
+    y = jnp.einsum("ntkd,ntk->ntd", gathered, w)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xt)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,470 @@
+"""Causal LM backbone covering every assigned architecture family.
+
+Layer pattern
+-------------
+``LMConfig.block_pattern`` is a tuple of block-type strings cycled over the
+depth, e.g. ``("local","local","local","local","local","attn")`` for
+gemma3's 5:1 local:global mix, or ``("rglru","rglru","local")`` for
+RecurrentGemma.  Block types:
+
+  attn        full causal GQA self-attention + FFN
+  local       sliding-window causal attention + FFN
+  mlstm       xLSTM matrix-memory block (+FFN when d_ff > 0)
+  slstm       xLSTM scalar-memory block (+FFN when d_ff > 0)
+  rglru       Griffin RG-LRU recurrent block + FFN
+
+FFN is dense SwiGLU unless ``moe`` is set, in which case every block uses the
+MoE layer (token-choice top-k, EP over the 'model' mesh axis).
+
+Execution modes
+---------------
+* ``forward``      — scan over stacked pattern periods (training / prefill).
+* ``decode_step``  — single-token decode with per-block caches.
+* ``unrolled`` API — per-layer access used by the FiCABU CAU driver: the host
+  iterates layers back-to-front (the paper's Rocket-core control loop), while
+  each per-layer VJP/dampen runs jitted on device.
+
+``prefix`` support: VLM / audio stubs inject precomputed frame- or
+patch-embeddings [B, P, d_model] ahead of the token embeddings (per the
+assignment, modality frontends are stubs supplying embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import recurrent as R
+from .module import KeyGen, Params, dense_init, embed_init, index_tree
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    shared_ff: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MoESpec] = None
+    d_rnn: int = 0                 # RG-LRU recurrence width (0 -> 4*d_model//3)
+    mlstm_chunk: int = 128
+    prefix_len: int = 0            # stub modality tokens (VLM / audio)
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    sub_quadratic: bool = False    # eligible for long_500k
+    dispatch_blocks: int = 1       # MoE local-capacity blocks (set by launcher)
+    remat: bool = False            # activation checkpointing on the layer scan
+    cp_attention: int = 0          # context-parallel attention segments
+    moe_shard_constraints: bool = False  # EP sharding constraints (HC-2)
+    parallelism: str = "tp"        # "tp" (TP+FSDP rules) | "fsdp" (pure ZeRO-3)
+    unroll_layers: bool = False    # python-loop layers instead of lax.scan —
+    #   the dry-run uses this so cost_analysis/collective counts see every
+    #   layer (XLA's cost analysis counts a while-loop body only once)
+
+    # ---- derived ----
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def layer_types(self) -> Tuple[str, ...]:
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+    def attn_cfg(self, btype: str) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.dh,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            window=self.window if btype == "local" else 0,
+            cp=self.cp_attention)
+
+    def mlstm_cfg(self) -> R.MLSTMConfig:
+        return R.MLSTMConfig(self.d_model, self.n_heads, self.dh, self.mlstm_chunk)
+
+    def slstm_cfg(self) -> R.SLSTMConfig:
+        return R.SLSTMConfig(self.d_model, self.n_heads)
+
+    def rglru_cfg(self) -> R.RGLRUConfig:
+        d_rnn = self.d_rnn or (4 * self.d_model) // 3
+        d_rnn = -(-d_rnn // 8) * 8
+        return R.RGLRUConfig(self.d_model, d_rnn)
+
+    def moe_cfg(self) -> L.MoEConfig:
+        assert self.moe is not None
+        return L.MoEConfig(
+            d_model=self.d_model, d_ff=self.d_ff,
+            num_experts=self.moe.num_experts, top_k=self.moe.top_k,
+            capacity_factor=self.moe.capacity_factor,
+            shared_ff=self.moe.shared_ff,
+            dispatch_blocks=self.dispatch_blocks,
+            shard_constraints=self.moe_shard_constraints)
+
+    def with_(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Block init / forward / decode
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: LMConfig, btype: str) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    p: Params = {"ln1": L.init_rmsnorm(cfg.d_model, dt)}
+    if btype in ("attn", "local"):
+        p["mixer"] = L.init_attention(kg(), cfg.attn_cfg(btype), dt)
+    elif btype == "mlstm":
+        p["mixer"] = R.init_mlstm(kg(), cfg.mlstm_cfg(), dt)
+    elif btype == "slstm":
+        p["mixer"] = R.init_slstm(kg(), cfg.slstm_cfg(), dt)
+    elif btype == "rglru":
+        p["mixer"] = R.init_rglru(kg(), cfg.rglru_cfg(), dt)
+    else:
+        raise ValueError(f"unknown block type {btype}")
+    if cfg.d_ff > 0:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = (L.init_moe(kg(), cfg.moe_cfg(), dt) if cfg.moe
+                    else L.init_mlp(kg(), cfg.d_model, cfg.d_ff, dt))
+    return p
+
+
+def _seq_shard(cfg: LMConfig, x: jax.Array) -> jax.Array:
+    """Sequence-parallel residual stream (HC-1): keep [B,S,D] sharded on
+    'model' along S so attention/MLP never reshard at block boundaries."""
+    if cfg.cp_attention > 1 and x.ndim == 3 and \
+            x.shape[1] % cfg.cp_attention == 0 and x.shape[1] > 1:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+    return x
+
+
+def block_forward(p: Params, cfg: LMConfig, btype: str, x: jax.Array,
+                  positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x_out, moe_aux_loss)."""
+    x = _seq_shard(cfg, x)
+    h = L.rmsnorm(p["ln1"], x)
+    if btype in ("attn", "local"):
+        m = L.attention(p["mixer"], cfg.attn_cfg(btype), h, positions)
+    elif btype == "mlstm":
+        m = R.mlstm_forward(p["mixer"], cfg.mlstm_cfg(), h)
+    elif btype == "slstm":
+        m = R.slstm_forward(p["mixer"], cfg.slstm_cfg(), h)
+    elif btype == "rglru":
+        m = R.rglru_forward(p["mixer"], cfg.rglru_cfg(), h)
+    x = x + m
+    aux = jnp.zeros((), F32)
+    if cfg.d_ff > 0:
+        h = L.rmsnorm(p["ln2"], x)
+        if cfg.moe:
+            f, aux = L.moe_ffn(p["ffn"], cfg.moe_cfg(), h)
+        else:
+            f = L.mlp(p["ffn"], h)
+        x = x + f
+    return x, aux
+
+
+def init_block_cache(cfg: LMConfig, btype: str, batch: int, seq_len: int) -> Any:
+    dt = cfg.dtype
+    if btype in ("attn", "local"):
+        return L.init_kv_cache(cfg.attn_cfg(btype), batch, seq_len, dt)
+    if btype == "mlstm":
+        return R.init_mlstm_state(cfg.mlstm_cfg(), batch)
+    if btype == "slstm":
+        return R.init_slstm_state(cfg.slstm_cfg(), batch)
+    if btype == "rglru":
+        return R.init_rglru_state(cfg.rglru_cfg(), batch, dt)
+    raise ValueError(btype)
+
+
+def block_decode(p: Params, cfg: LMConfig, btype: str, x: jax.Array,
+                 cache: Any, pos: jax.Array) -> Tuple[jax.Array, Any]:
+    h = L.rmsnorm(p["ln1"], x)
+    if btype in ("attn", "local"):
+        m, cache = L.attention_decode(p["mixer"], cfg.attn_cfg(btype), h, cache, pos)
+    elif btype == "mlstm":
+        m, cache = R.mlstm_decode(p["mixer"], cfg.mlstm_cfg(), h, cache)
+    elif btype == "slstm":
+        m, cache = R.slstm_decode(p["mixer"], cfg.slstm_cfg(), h, cache)
+    elif btype == "rglru":
+        m, cache = R.rglru_decode(p["mixer"], cfg.rglru_cfg(), h, cache)
+    x = x + m
+    if cfg.d_ff > 0:
+        h = L.rmsnorm(p["ln2"], x)
+        if cfg.moe:
+            f, _ = L.moe_ffn(p["ffn"], cfg.moe_cfg(), h)
+        else:
+            f = L.mlp(p["ffn"], h)
+        x = x + f
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: LMConfig) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    pat = cfg.block_pattern
+
+    def init_period(k):
+        kk = KeyGen(k)
+        return {str(i): init_block(kk(), cfg, bt) for i, bt in enumerate(pat)}
+
+    periods = [init_period(kg()) for _ in range(cfg.n_periods)]
+    stacked = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *periods)
+               if cfg.n_periods > 1 else
+               (jax.tree_util.tree_map(lambda x: x[None], periods[0])
+                if cfg.n_periods == 1 else None))
+    tail = [init_block(kg(), cfg, cfg.layer_types[cfg.n_periods * len(pat) + i])
+            for i in range(cfg.n_tail)]
+    p: Params = {
+        "embed": {"w": embed_init(kg(), cfg.vocab, cfg.d_model, dt)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if stacked is not None:
+        p["period_stack"] = stacked
+    if tail:
+        p["tail"] = {str(i): t for i, t in enumerate(tail)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": dense_init(kg(), cfg.d_model, cfg.vocab, dt)}
+    return p
+
+
+def _embed(params: Params, cfg: LMConfig, tokens: jax.Array,
+           prefix: Optional[jax.Array]) -> jax.Array:
+    x = params["embed"]["w"].astype(cfg.dtype)[tokens]
+    if cfg.prefix_len > 0:
+        assert prefix is not None, f"{cfg.name} requires stub modality prefix"
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(params: Params, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    x = L.rmsnorm(params["final_norm"], x)
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                      preferred_element_type=F32)
+
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array,
+            prefix: Optional[jax.Array] = None,
+            last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B,S] -> (logits [B,S',V] f32, moe_aux scalar).
+    ``last_only``: apply the LM head to the final position only — prefill
+    never needs S x V logits (HC-2 iter 2: kills a [B,S,V] f32 all-reduce).
+    """
+    x = _embed(params, cfg, tokens, prefix)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux_total = jnp.zeros((), F32)
+    pat = cfg.block_pattern
+
+    if "period_stack" in params:
+        def body(carry, period_p):
+            x_c, aux_c = carry
+            for i, bt in enumerate(pat):
+                x_c, aux = block_forward(period_p[str(i)], cfg, bt, x_c, positions)
+                aux_c = aux_c + aux
+            return (x_c, aux_c), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.unroll_layers:
+            for pi in range(cfg.n_periods):
+                (x, aux_total), _ = body(
+                    (x, aux_total), index_tree(params["period_stack"], pi))
+        else:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["period_stack"])
+    if "tail" in params:
+        base = cfg.n_periods * len(pat)
+        for i in range(cfg.n_tail):
+            bt = cfg.layer_types[base + i]
+            blk = block_forward
+            if cfg.remat:
+                blk = jax.checkpoint(block_forward, static_argnums=(1, 2),
+                                     prevent_cse=False)
+            x, aux = blk(params["tail"][str(i)], cfg, bt, x, positions)
+            aux_total = aux_total + aux
+    if last_only:
+        x = x[:, -1:]
+    return _head(params, cfg, x), aux_total
+
+
+def init_cache(cfg: LMConfig, batch: int, seq_len: int) -> Params:
+    pat = cfg.block_pattern
+    cache: Params = {}
+    if cfg.n_periods > 0:
+        def one(bt):
+            return init_block_cache(cfg, bt, batch, seq_len)
+        period = {str(i): one(bt) for i, bt in enumerate(pat)}
+        cache["period_stack"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape).copy()
+            if cfg.n_periods > 1 else x[None], period)
+    if cfg.n_tail:
+        base = cfg.n_periods * len(pat)
+        cache["tail"] = {str(i): init_block_cache(cfg, cfg.layer_types[base + i],
+                                                  batch, seq_len)
+                         for i in range(cfg.n_tail)}
+    return cache
+
+
+def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
+                cache: Params, pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """token [B,1]; pos scalar int32 -> (logits [B,1,V], new cache)."""
+    x = params["embed"]["w"].astype(cfg.dtype)[token]
+    pat = cfg.block_pattern
+    new_cache: Params = {}
+
+    if "period_stack" in params:
+        def body(x_c, inp):
+            period_p, period_cache = inp
+            new_c = {}
+            for i, bt in enumerate(pat):
+                x_c, new_c[str(i)] = block_decode(period_p[str(i)], cfg, bt,
+                                                  x_c, period_cache[str(i)], pos)
+            return x_c, new_c
+
+        if cfg.unroll_layers:
+            outs = []
+            for pi in range(cfg.n_periods):
+                x, nc = body(x, (index_tree(params["period_stack"], pi),
+                                 index_tree(cache["period_stack"], pi)))
+                outs.append(nc)
+            new_cache["period_stack"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_cache["period_stack"] = jax.lax.scan(
+                body, x, (params["period_stack"], cache["period_stack"]))
+    if "tail" in params:
+        base = cfg.n_periods * len(pat)
+        new_cache["tail"] = {}
+        for i in range(cfg.n_tail):
+            bt = cfg.layer_types[base + i]
+            x, new_cache["tail"][str(i)] = block_decode(
+                params["tail"][str(i)], cfg, bt, x, cache["tail"][str(i)], pos)
+    return _head(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with z-loss. logits [.., V] f32, labels [..]."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll + z_loss * lse**2
+    return jnp.mean(loss)
+
+
+def lm_loss(params: Params, cfg: LMConfig, tokens: jax.Array,
+            labels: jax.Array, prefix: Optional[jax.Array] = None,
+            aux_weight: float = 0.01) -> jax.Array:
+    logits, aux = forward(params, cfg, tokens, prefix)
+    if cfg.prefix_len > 0:
+        logits = logits[:, cfg.prefix_len:]
+    return softmax_xent(logits, labels) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Unrolled per-layer view (FiCABU CAU driver)
+# ---------------------------------------------------------------------------
+# The CAU algorithm edits "layers" back-to-front.  The unlearnable unit list,
+# front-to-back (depth index j = 0..L_u-1):
+#   j = 0                   embedding
+#   j = 1..n_layers         transformer blocks
+#   j = n_layers + 1        lm head (+ final norm)
+# Back-to-front paper index l = L_u - j  (l=1 is the head).
+def n_unlearn_layers(cfg: LMConfig) -> int:
+    return cfg.n_layers + 2
+
+
+def get_layer(params: Params, cfg: LMConfig, j: int) -> Params:
+    """Depth index j (front-to-back). Returns the layer's param subtree."""
+    if j == 0:
+        return params["embed"]
+    if j == cfg.n_layers + 1:
+        head = {"final_norm": params["final_norm"]}
+        if not cfg.tie_embeddings:
+            head["lm_head"] = params["lm_head"]
+        return head
+    i = j - 1
+    period = len(cfg.block_pattern)
+    if i < cfg.n_periods * period:
+        return index_tree(params["period_stack"][str(i % period)], i // period)
+    return params["tail"][str(i - cfg.n_periods * period)]
+
+
+def set_layer(params: Params, cfg: LMConfig, j: int, sub: Params) -> Params:
+    params = dict(params)
+    if j == 0:
+        params["embed"] = sub
+        return params
+    if j == cfg.n_layers + 1:
+        params["final_norm"] = sub["final_norm"]
+        if not cfg.tie_embeddings:
+            params["lm_head"] = sub["lm_head"]
+        return params
+    i = j - 1
+    period = len(cfg.block_pattern)
+    if i < cfg.n_periods * period:
+        stack = dict(params["period_stack"])
+        key = str(i % period)
+        stack[key] = jax.tree_util.tree_map(
+            lambda full, s: full.at[i // period].set(s.astype(full.dtype)),
+            stack[key], sub)
+        params["period_stack"] = stack
+    else:
+        tail = dict(params["tail"])
+        tail[str(i - cfg.n_periods * period)] = sub
+        params["tail"] = tail
+    return params
+
+
+def apply_layer(params: Params, cfg: LMConfig, j: int, layer_p: Params,
+                x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Forward of unlearn-layer j with parameters ``layer_p``; x is its input."""
+    if j == 0:
+        # x here is the raw token ids; embedding layer turns them into acts.
+        raise ValueError("use embed path in cau driver for j=0")
+    if j == cfg.n_layers + 1:
+        p2 = dict(params)
+        p2.update(layer_p)
+        return _head(p2, cfg, x)
+    bt = cfg.layer_types[j - 1]
+    out, _ = block_forward(layer_p, cfg, bt, x, positions)
+    return out

@@ -1,0 +1,134 @@
+"""Minimal pure-JAX module substrate.
+
+Parameters are nested dicts of jnp arrays ("pytrees").  Initialisation is
+functional: each ``init_*`` helper takes a PRNG key and returns a subtree.
+A parallel tree of ``jax.sharding.PartitionSpec`` (built in dist/sharding.py)
+assigns every leaf a mesh placement.
+
+Dtype policy: parameters are stored in ``param_dtype`` (f32 on CPU tests,
+bf16 for pod dry-runs); matmuls accumulate in f32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# PRNG plumbing
+# ---------------------------------------------------------------------------
+class KeyGen:
+    """Splits a PRNG key on demand: ``kg = KeyGen(key); k1 = kg()``."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return w.astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def flatten_with_paths(tree, prefix: str = "") -> Iterator[Tuple[str, jax.Array]]:
+    """Yield ('a/b/c', leaf) pairs in deterministic (sorted-key) order."""
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from flatten_with_paths(tree[k], f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from flatten_with_paths(v, f"{prefix}{i}/")
+    else:
+        yield prefix[:-1], tree
+
+
+def map_with_paths(fn: Callable[[str, jax.Array], jax.Array], tree, prefix: str = ""):
+    """Like tree_map but ``fn`` also receives the 'a/b/c' path string."""
+    if isinstance(tree, dict):
+        return {k: map_with_paths(fn, v, f"{prefix}{k}/") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        typ = type(tree)
+        return typ(map_with_paths(fn, v, f"{prefix}{i}/") for i, v in enumerate(tree))
+    return fn(prefix[:-1], tree)
+
+
+def stack_trees(trees: List[Params]) -> Params:
+    """Stack a list of identically-structured trees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def index_tree(tree: Params, i) -> Params:
+    """Dynamic-index the leading (stacked layer) axis of every leaf."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False), tree
+    )
+
+
+def update_tree_at(tree: Params, i, sub: Params) -> Params:
+    """Write ``sub`` into the leading axis of ``tree`` at index ``i``."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.lax.dynamic_update_index_in_dim(x, s.astype(x.dtype), i, axis=0),
+        tree,
+        sub,
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_all_finite(tree) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.stack(leaves).all() if leaves else jnp.asarray(True)
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @staticmethod
+    def bf16() -> "DtypePolicy":
+        return DtypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32)

@@ -1,0 +1,322 @@
+"""Recurrent / SSM blocks: xLSTM's mLSTM + sLSTM, and Griffin's RG-LRU.
+
+All three expose a parallel (training / prefill) form and an O(1)-state decode
+step, which is what makes the ``long_500k`` cell tractable for these families.
+
+- mLSTM: matrix-memory LSTM == gated linear attention. Training uses a
+  chunkwise-parallel form (state passed across chunks with lax.scan) so the
+  cost is O(S * chunk) rather than O(S^2).
+- sLSTM: scalar-memory LSTM with hidden-to-gate recurrence -> inherently
+  sequential; training runs a lax.scan over time (compiles fine; the dry-run
+  only lowers it).
+- RG-LRU: diagonal gated linear recurrence -> jax.lax.associative_scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .module import KeyGen, dense_init, ones, zeros
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunked gated linear attention
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    head_dim: int
+    chunk: int = 128
+
+
+def init_mlstm(key, cfg: MLSTMConfig, dtype=F32) -> Dict:
+    kg = KeyGen(key)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": dense_init(kg(), d, h * dh, dtype),
+        "wk": dense_init(kg(), d, h * dh, dtype),
+        "wv": dense_init(kg(), d, h * dh, dtype),
+        "wi": dense_init(kg(), d, h, dtype),   # input gate (per head)
+        "wf": dense_init(kg(), d, h, dtype),   # forget gate (per head)
+        "wo": dense_init(kg(), h * dh, d, dtype, scale=1.0 / math.sqrt(h * dh)),
+        "bi": zeros((h,), dtype),
+        "bf": ones((h,), dtype),               # bias toward remembering
+    }
+
+
+def _mlstm_gates(p, x):
+    i = jnp.einsum("bsd,dh->bsh", x.astype(F32), p["wi"].astype(F32)) + p["bi"].astype(F32)
+    f = jnp.einsum("bsd,dh->bsh", x.astype(F32), p["wf"].astype(F32)) + p["bf"].astype(F32)
+    # log-space gating (xLSTM stabilised exponential gating)
+    log_f = -jax.nn.softplus(-f)          # log sigmoid(f)
+    log_i = -jax.nn.softplus(-i)
+    return log_i, log_f
+
+
+def mlstm_forward(p: Dict, cfg: MLSTMConfig, x: jax.Array) -> jax.Array:
+    """Chunkwise-parallel mLSTM: lax.scan over chunks; each step does the
+    quadratic intra-chunk attention ([B,Ck,Ck,H], small) plus an O(H*Dh^2)
+    state update.  Sub-quadratic in S with O(B*Ck^2*H) peak memory — this is
+    what makes the 32k/500k cells tractable.  x: [B,S,D] -> [B,S,D].
+
+    XLA's cost analysis counts the scan body once; the dry-run adds the
+    (nC-1)x body correction analytically (launch.specs._slstm_correction).
+    """
+    B, S, D = x.shape
+    H, Dh, Ck = cfg.n_heads, cfg.head_dim, cfg.chunk
+    nC = -(-S // Ck)
+    pad = nC * Ck - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+
+    q = jnp.einsum("bsd,de->bse", xp, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,de->bse", xp, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,de->bse", xp, p["wv"], preferred_element_type=F32)
+    q = q.reshape(B, nC, Ck, H, Dh).astype(F32) / math.sqrt(Dh)
+    k = k.reshape(B, nC, Ck, H, Dh).astype(F32)
+    v = v.reshape(B, nC, Ck, H, Dh).astype(F32)
+    log_i, log_f = _mlstm_gates(p, xp)                      # [B, S, H]
+    log_i = log_i.reshape(B, nC, Ck, H)
+    log_f = log_f.reshape(B, nC, Ck, H)
+    tri = jnp.tril(jnp.ones((Ck, Ck), bool))[None, :, :, None]
+
+    @jax.checkpoint
+    def step(carry, inp):
+        Cst, nst = carry                                    # [B,H,Dh,Dh], [B,H,Dh]
+        q_c, k_c, v_c, li, lf = inp                         # [B,Ck,H,*]
+        csum = jnp.cumsum(lf, axis=1)                       # [B,Ck,H]
+        total = csum[:, -1]                                 # [B,H]
+        dec_q = jnp.exp(csum)
+        dec_k = jnp.exp(total[:, None] - csum + li)
+        # intra-chunk decay matrix and scores
+        rel = csum[:, :, None, :] - csum[:, None, :, :] + li[:, None, :, :]
+        Dmat = jnp.where(tri, jnp.exp(rel), 0.0)            # [B,Ck,Ck,H]
+        scores = jnp.einsum("bthd,bshd->btsh", q_c, k_c) * Dmat
+        intra = jnp.einsum("btsh,bshd->bthd", scores, v_c)
+        norm_intra = jnp.sum(scores, axis=2)                # [B,Ck,H]
+        # inter-chunk from carried state
+        qd = q_c * dec_q[..., None]
+        inter = jnp.einsum("bthd,bhde->bthe", qd, Cst)
+        norm_inter = jnp.einsum("bthd,bhd->bth", qd, nst)
+        denom = jnp.maximum(jnp.abs(norm_inter + norm_intra), 1.0)[..., None]
+        h_c = (intra + inter) / denom                       # [B,Ck,H,Dh]
+        # state update
+        kd = k_c * dec_k[..., None]
+        Cst = Cst * jnp.exp(total)[:, :, None, None] + \
+            jnp.einsum("bshd,bshe->bhde", kd, v_c)
+        nst = nst * jnp.exp(total)[:, :, None] + jnp.sum(kd, axis=1)
+        return (Cst, nst), h_c
+
+    C0 = jnp.zeros((B, H, Dh, Dh), F32)
+    n0 = jnp.zeros((B, H, Dh), F32)
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim))
+               for t in (q, k, v, log_i, log_f))
+    _, hs = jax.lax.scan(step, (C0, n0), xs)                # [nC,B,Ck,H,Dh]
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nC * Ck, H * Dh)[:, :S]
+    return jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def init_mlstm_state(cfg: MLSTMConfig, batch: int, dtype=F32) -> Dict:
+    H, Dh = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, Dh, Dh), F32),
+            "n": jnp.zeros((batch, H, Dh), F32)}
+
+
+def mlstm_decode(p: Dict, cfg: MLSTMConfig, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """x: [B, 1, D]; O(1) state update."""
+    B = x.shape[0]
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"], preferred_element_type=F32)
+    q = q.reshape(B, H, Dh).astype(F32) / math.sqrt(Dh)
+    k = k.reshape(B, H, Dh).astype(F32)
+    v = v.reshape(B, H, Dh).astype(F32)
+    log_i, log_f = _mlstm_gates(p, x)                        # [B,1,H]
+    fi, ii = jnp.exp(log_f[:, 0])[..., None], jnp.exp(log_i[:, 0])[..., None]
+    C = state["C"] * fi[..., None] + ii[..., None] * k[..., :, None] * v[..., None, :]
+    n = state["n"] * fi + ii * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)[..., None]
+    h = (num / den).reshape(B, 1, H * Dh).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["wo"], preferred_element_type=F32)
+    return out.astype(x.dtype), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, hidden-to-gate recurrence; block-diagonal heads)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+
+
+def init_slstm(key, cfg: SLSTMConfig, dtype=F32) -> Dict:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    dh = d // cfg.n_heads
+    def rinit():  # block-diagonal recurrent weights, per head [H, dh, dh]
+        return (jax.random.normal(kg(), (cfg.n_heads, dh, dh), F32)
+                / math.sqrt(dh)).astype(dtype)
+    return {
+        "wz": dense_init(kg(), d, d, dtype), "rz": rinit(),
+        "wi": dense_init(kg(), d, d, dtype), "ri": rinit(),
+        "wf": dense_init(kg(), d, d, dtype), "rf": rinit(),
+        "wo_gate": dense_init(kg(), d, d, dtype), "ro": rinit(),
+        "bz": zeros((d,), dtype), "bi": zeros((d,), dtype),
+        "bf": ones((d,), dtype), "bo": zeros((d,), dtype),
+        "w_out": dense_init(kg(), d, d, dtype),
+    }
+
+
+def _slstm_cell(p, cfg, x_t, carry):
+    """One sLSTM step with stabilised exponential gating.
+
+    carry: (c, n, m, h) each [B, D] (m is the stabiliser state).
+    """
+    c, n, m, h = carry
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    hh = h.reshape(B, H, dh)
+
+    def rec(r):  # [B,D] via block-diagonal recurrence
+        return jnp.einsum("bhd,hde->bhe", hh, r.astype(F32)).reshape(B, -1)
+
+    xf = x_t.astype(F32)
+    z = jnp.tanh(xf @ p["wz"].astype(F32) + rec(p["rz"]) + p["bz"].astype(F32))
+    i_t = xf @ p["wi"].astype(F32) + rec(p["ri"]) + p["bi"].astype(F32)
+    f_t = xf @ p["wf"].astype(F32) + rec(p["rf"]) + p["bf"].astype(F32)
+    o = jax.nn.sigmoid(xf @ p["wo_gate"].astype(F32) + rec(p["ro"]) + p["bo"].astype(F32))
+    log_f = -jax.nn.softplus(-f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * (c_new / jnp.maximum(jnp.abs(n_new), 1.0))
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(p: Dict, cfg: SLSTMConfig, x: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    init = tuple(jnp.zeros((B, D), F32) for _ in range(4))
+
+    # remat per step: backward recomputes gate activations from (carry, x_t)
+    # instead of storing S x 8 gate tensors.
+    @jax.checkpoint
+    def step(carry, x_t):
+        carry = _slstm_cell(p, cfg, x_t, carry)
+        return carry, carry[3]
+
+    _, hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", h, p["w_out"], preferred_element_type=F32).astype(x.dtype)
+
+
+def init_slstm_state(cfg: SLSTMConfig, batch: int, dtype=F32) -> Tuple:
+    return tuple(jnp.zeros((batch, cfg.d_model), F32) for _ in range(4))
+
+
+def slstm_decode(p: Dict, cfg: SLSTMConfig, x: jax.Array, state: Tuple) -> Tuple[jax.Array, Tuple]:
+    carry = _slstm_cell(p, cfg, x[:, 0], state)
+    h = carry[3][:, None].astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, p["w_out"], preferred_element_type=F32)
+    return out.astype(x.dtype), carry
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int          # recurrence width (Griffin uses ~4/3 * d_model)
+    conv_width: int = 4
+    c: float = 8.0      # recurrence sharpness constant
+
+
+def init_rglru(key, cfg: RGLRUConfig, dtype=F32) -> Dict:
+    kg = KeyGen(key)
+    d, dr = cfg.d_model, cfg.d_rnn
+    # Lambda init so that a = exp(-c*softplus(L)*r) starts near 0.9..0.999
+    lam = jax.random.uniform(kg(), (dr,), F32, 0.3, 0.8)
+    return {
+        "w_x": dense_init(kg(), d, dr, dtype),       # input branch
+        "w_gate_branch": dense_init(kg(), d, dr, dtype),
+        "conv_w": (jax.random.normal(kg(), (cfg.conv_width, dr), F32) * 0.1).astype(dtype),
+        "conv_b": zeros((dr,), dtype),
+        "w_rg": dense_init(kg(), dr, dr, dtype),     # recurrence gate r_t
+        "w_ig": dense_init(kg(), dr, dr, dtype),     # input gate i_t
+        "log_lambda": jnp.log(jnp.expm1(lam)),       # softplus^-1(lam), f32
+        "w_out": dense_init(kg(), dr, d, dtype),
+    }
+
+
+def _causal_conv1d(w, b, x):
+    """Depthwise causal conv. x: [B,S,Dr], w: [W,Dr]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return out + b.astype(x.dtype)
+
+
+def _rglru_core(p, cfg, u):
+    """Gated diagonal recurrence via associative scan. u: [B,S,Dr] (post-conv)."""
+    uf = u.astype(F32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", uf, p["w_rg"].astype(F32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", uf, p["w_ig"].astype(F32)))
+    log_a = -cfg.c * jax.nn.softplus(p["log_lambda"]) * r          # [B,S,Dr]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * uf)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, (a, gated)
+
+
+def rglru_forward(p: Dict, cfg: RGLRUConfig, x: jax.Array) -> jax.Array:
+    xb = jnp.einsum("bsd,de->bse", x, p["w_x"], preferred_element_type=F32).astype(x.dtype)
+    gb = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate_branch"],
+                                preferred_element_type=F32)).astype(x.dtype)
+    u = _causal_conv1d(p["conv_w"], p["conv_b"], xb)
+    h, _ = _rglru_core(p, cfg, u)
+    y = (h.astype(x.dtype) * gb)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"], preferred_element_type=F32).astype(x.dtype)
+
+
+def init_rglru_state(cfg: RGLRUConfig, batch: int, dtype=F32) -> Dict:
+    return {"h": jnp.zeros((batch, cfg.d_rnn), F32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype)}
+
+
+def rglru_decode(p: Dict, cfg: RGLRUConfig, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """x: [B,1,D]."""
+    xb = jnp.einsum("bsd,de->bse", x, p["w_x"], preferred_element_type=F32).astype(x.dtype)
+    gb = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate_branch"],
+                                preferred_element_type=F32)).astype(x.dtype)
+    hist = jnp.concatenate([state["conv"], xb], axis=1)        # [B,W,Dr]
+    u = (jnp.einsum("bwd,wd->bd", hist.astype(F32), p["conv_w"].astype(F32))
+         + p["conv_b"].astype(F32))[:, None].astype(x.dtype)
+    uf = u.astype(F32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", uf, p["w_rg"].astype(F32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", uf, p["w_ig"].astype(F32)))
+    log_a = -cfg.c * jax.nn.softplus(p["log_lambda"]) * r
+    a = jnp.exp(log_a)[:, 0]
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * uf))[:, 0]
+    h = a * state["h"] + gated
+    y = (h[:, None].astype(x.dtype) * gb)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"], preferred_element_type=F32)
+    return out.astype(x.dtype), {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,299 @@
+"""Paper-faithful vision models: ResNet-18 (CIFAR stem) and ViT classifier.
+
+These are the models FiCABU evaluates (Tables I/II/IV).  They expose the
+same unlearn-layer API as the LM backbone:
+
+ResNet-18: unlearn layers, front-to-back:
+  j=0 stem conv | j=1..8 basic blocks (2 convs each -> "16 conv layers")
+  | j=9 fc classifier
+The paper checkpoints every 4 of the 16 convs == every 2 basic blocks here.
+
+ViT: j=0 patch embed | j=1..n_layers encoder blocks | j=n_layers+1 head.
+
+Norms are GroupNorm (ResNet) / LayerNorm (ViT): GroupNorm replaces BatchNorm
+so unlearning needs no running-stat bookkeeping — a documented deviation that
+does not interact with the Fisher/dampening mechanics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .module import KeyGen, Params, dense_init, ones, zeros
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Conv / norm primitives
+# ---------------------------------------------------------------------------
+def conv_init(key, kh, kw, cin, cout, dtype=F32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), F32) * math.sqrt(2.0 / fan_in)
+    return w.astype(dtype)
+
+
+def conv2d(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=F32).astype(x.dtype)
+
+
+def init_groupnorm(c, dtype=F32):
+    return {"scale": ones((c,), dtype), "bias": zeros((c,), dtype)}
+
+
+def groupnorm(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:           # largest group count <= groups dividing C
+        g -= 1
+    xf = x.astype(F32).reshape(B, H, W, g, C // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = xf.var(axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(B, H, W, C) * p["scale"].astype(F32) + p["bias"].astype(F32)
+    return xf.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (CIFAR variant)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18"
+    n_classes: int = 20
+    width: int = 64                  # stage widths: w, 2w, 4w, 8w
+    img_size: int = 32
+    param_dtype: str = "float32"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def stage_widths(self):
+        return (self.width, 2 * self.width, 4 * self.width, 8 * self.width)
+
+
+def _init_basic_block(key, cin, cout, dtype):
+    kg = KeyGen(key)
+    p = {
+        "conv1": conv_init(kg(), 3, 3, cin, cout, dtype),
+        "gn1": init_groupnorm(cout, dtype),
+        "conv2": conv_init(kg(), 3, 3, cout, cout, dtype),
+        "gn2": init_groupnorm(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = conv_init(kg(), 1, 1, cin, cout, dtype)
+    return p
+
+
+def init_resnet(key, cfg: ResNetConfig) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    ws = cfg.stage_widths
+    blocks = {}
+    cin = ws[0]
+    bi = 0
+    for si, w in enumerate(ws):
+        for k in range(2):
+            blocks[str(bi)] = _init_basic_block(kg(), cin, w, dt)
+            cin = w
+            bi += 1
+    return {
+        "stem": {"conv": conv_init(kg(), 3, 3, 3, ws[0], dt),
+                 "gn": init_groupnorm(ws[0], dt)},
+        "blocks": blocks,
+        "fc": {"w": dense_init(kg(), ws[3], cfg.n_classes, dt),
+               "b": zeros((cfg.n_classes,), dt)},
+    }
+
+
+def _basic_block(p, x, stride):
+    h = jax.nn.relu(groupnorm(p["gn1"], conv2d(p["conv1"], x, stride)))
+    h = groupnorm(p["gn2"], conv2d(p["conv2"], h))
+    sc = x
+    if "proj" in p:
+        sc = conv2d(p["proj"], x, stride)
+    return jax.nn.relu(h + sc)
+
+
+def _block_stride(bi: int) -> int:
+    return 2 if bi in (2, 4, 6) else 1
+
+
+def resnet_apply_layer(p_layer: Params, j: int, x: jax.Array) -> jax.Array:
+    """Unlearn layer j: 0=stem, 1..8 basic blocks, 9=fc."""
+    if j == 0:
+        return jax.nn.relu(groupnorm(p_layer["gn"], conv2d(p_layer["conv"], x)))
+    if j == 9:
+        pooled = x.mean(axis=(1, 2))
+        return (jnp.einsum("bc,cn->bn", pooled.astype(F32),
+                           p_layer["w"].astype(F32)) + p_layer["b"].astype(F32))
+    return _basic_block(p_layer, x, _block_stride(j - 1))
+
+
+def resnet_forward(params: Params, cfg: ResNetConfig, images: jax.Array,
+                   collect: bool = False):
+    """images [B,H,W,3] -> logits [B,n_classes] (f32); optionally activations."""
+    acts: List[jax.Array] = []
+    x = images.astype(cfg.dtype)
+    for j in range(10):
+        if collect:
+            acts.append(x)
+        x = resnet_apply_layer(resnet_layer_params(params, j), j, x)
+    return (x, acts) if collect else x
+
+
+def resnet_layer_params(params: Params, j: int) -> Params:
+    if j == 0:
+        return params["stem"]
+    if j == 9:
+        return params["fc"]
+    return params["blocks"][str(j - 1)]
+
+
+def resnet_set_layer(params: Params, j: int, sub: Params) -> Params:
+    params = dict(params)
+    if j == 0:
+        params["stem"] = sub
+    elif j == 9:
+        params["fc"] = sub
+    else:
+        blocks = dict(params["blocks"])
+        blocks[str(j - 1)] = sub
+        params["blocks"] = blocks
+    return params
+
+
+RESNET_N_LAYERS = 10
+
+
+# ---------------------------------------------------------------------------
+# ViT classifier
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str = "vit"
+    n_classes: int = 20
+    n_layers: int = 12
+    d_model: int = 192
+    n_heads: int = 3
+    d_ff: int = 768
+    patch: int = 4
+    img_size: int = 32
+    param_dtype: str = "float32"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def n_tokens(self):
+        return (self.img_size // self.patch) ** 2 + 1  # + cls
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_heads,
+                            self.d_model // self.n_heads,
+                            causal=False, use_rope=False, qkv_bias=True)
+
+
+def _init_vit_block(key, cfg: ViTConfig):
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    return {"ln1": L.init_layernorm(cfg.d_model, dt),
+            "attn": L.init_attention(kg(), cfg.attn_cfg(), dt),
+            "ln2": L.init_layernorm(cfg.d_model, dt),
+            "ffn": L.init_mlp(kg(), cfg.d_model, cfg.d_ff, dt)}
+
+
+def init_vit(key, cfg: ViTConfig) -> Params:
+    kg = KeyGen(key)
+    dt = cfg.dtype
+    pdim = cfg.patch * cfg.patch * 3
+    return {
+        "patch": {"w": dense_init(kg(), pdim, cfg.d_model, dt),
+                  "b": zeros((cfg.d_model,), dt),
+                  "cls": (jax.random.normal(kg(), (1, 1, cfg.d_model), F32) * 0.02).astype(dt),
+                  "pos": (jax.random.normal(kg(), (1, cfg.n_tokens, cfg.d_model), F32) * 0.02).astype(dt)},
+        "blocks": {str(i): _init_vit_block(kg(), cfg) for i in range(cfg.n_layers)},
+        "head": {"ln": L.init_layernorm(cfg.d_model, dt),
+                 "w": dense_init(kg(), cfg.d_model, cfg.n_classes, dt),
+                 "b": zeros((cfg.n_classes,), dt)},
+    }
+
+
+def vit_apply_layer(p_layer: Params, j: int, x: jax.Array,
+                    cfg: ViTConfig) -> jax.Array:
+    if j == 0:
+        B, H, W, C = x.shape
+        P = cfg.patch
+        patches = x.reshape(B, H // P, P, W // P, P, C).transpose(0, 1, 3, 2, 4, 5)
+        patches = patches.reshape(B, (H // P) * (W // P), P * P * C)
+        t = (jnp.einsum("bnp,pd->bnd", patches.astype(F32), p_layer["w"].astype(F32))
+             + p_layer["b"].astype(F32)).astype(cfg.dtype)
+        cls = jnp.broadcast_to(p_layer["cls"].astype(cfg.dtype), (B, 1, cfg.d_model))
+        t = jnp.concatenate([cls, t], axis=1) + p_layer["pos"].astype(cfg.dtype)
+        return t
+    if j == cfg.n_layers + 1:
+        h = L.layernorm(p_layer["ln"], x)[:, 0]
+        return (jnp.einsum("bd,dn->bn", h.astype(F32), p_layer["w"].astype(F32))
+                + p_layer["b"].astype(F32))
+    p = p_layer
+    h = L.layernorm(p["ln1"], x)
+    x = x + L.attention(p["attn"], cfg.attn_cfg(), h)
+    h = L.layernorm(p["ln2"], x)
+    x = x + L.mlp(p["ffn"], h)
+    return x
+
+
+def vit_forward(params: Params, cfg: ViTConfig, images: jax.Array,
+                collect: bool = False):
+    acts: List[jax.Array] = []
+    x = images
+    for j in range(cfg.n_layers + 2):
+        if collect:
+            acts.append(x)
+        x = vit_apply_layer(vit_layer_params(params, j, cfg), j, x, cfg)
+    return (x, acts) if collect else x
+
+
+def vit_layer_params(params: Params, j: int, cfg: ViTConfig) -> Params:
+    if j == 0:
+        return params["patch"]
+    if j == cfg.n_layers + 1:
+        return params["head"]
+    return params["blocks"][str(j - 1)]
+
+
+def vit_set_layer(params: Params, j: int, sub: Params, cfg: ViTConfig) -> Params:
+    params = dict(params)
+    if j == 0:
+        params["patch"] = sub
+    elif j == cfg.n_layers + 1:
+        params["head"] = sub
+    else:
+        blocks = dict(params["blocks"])
+        blocks[str(j - 1)] = sub
+        params["blocks"] = blocks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Classification loss / accuracy
+# ---------------------------------------------------------------------------
+def cls_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def cls_accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))

@@ -1,0 +1,3 @@
+from .adamw import (AdamState, AdamWConfig, adamw_update, cosine_lr,  # noqa: F401
+                    global_norm, init_adamw, make_train_step)
+from .compression import Int8Codec, TopKCodec  # noqa: F401

@@ -1,0 +1,98 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX (no optax in the
+container).  Optimizer state is a pytree mirroring params, so it shards,
+checkpoints, and reshards exactly like params (FSDP shards both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+Params = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_dtype: Any = jnp.float32   # bf16 halves optimizer HBM at scale
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(F32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init_adamw(cfg: AdamWConfig, params: Params) -> AdamState:
+    z = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, cfg.state_dtype), p)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=z(params), nu=z(params))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(x.astype(F32) ** 2) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Params, state: AdamState,
+                 params: Params) -> Tuple[Params, AdamState]:
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = cosine_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(F32)
+    b2c = 1 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m2 = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return ((p.astype(F32) - lr * delta).astype(p.dtype),
+                m2.astype(cfg.state_dtype), v2.astype(cfg.state_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+def make_train_step(loss_fn: Callable[[Params, Any], jax.Array],
+                    cfg: AdamWConfig) -> Callable:
+    """Returns jit-able ``step(params, state, batch) -> (params, state, loss)``.
+    Gradient compression (optim.compression) is composed by the launcher,
+    which owns the error-feedback state."""
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, state = adamw_update(cfg, grads, state, params)
+        return params, state, loss
+
+    return step

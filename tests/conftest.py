@@ -1,0 +1,46 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see ONE CPU
+device (the 512-device override belongs exclusively to launch/dryrun.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def trained_resnet():
+    """A tiny ResNet pre-trained to ~100% on synthetic 6-class data, shared
+    across unlearning tests (training once keeps the suite fast)."""
+    import jax.numpy as jnp
+    from repro.data import synthetic as syn
+    from repro.models import vision as V
+    from repro.optim import AdamWConfig, init_adamw, make_train_step
+
+    dcfg = syn.ClsDataConfig(n_classes=6, n_per_class=32, img_size=16, seed=0)
+    x, y = syn.make_classification(dcfg)
+    mcfg = V.ResNetConfig(width=8, n_classes=6, img_size=16)
+    params = V.init_resnet(jax.random.PRNGKey(0), mcfg)
+    ocfg = AdamWConfig(lr=2e-3, total_steps=150, warmup_steps=10,
+                       weight_decay=1e-4)
+    loss_fn = lambda p, b: V.cls_loss(V.resnet_forward(p, mcfg, b[0]), b[1])
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    st = init_adamw(ocfg, params)
+    bt = syn.Batches((x, y), batch=48, seed=1)
+    for _ in range(150):
+        bx, by = next(bt)
+        params, st, _ = step(params, st, (bx, by))
+    return {"params": params, "cfg": mcfg, "x": x, "y": y,
+            "loss_fn": loss_fn, "data_cfg": dcfg}

@@ -1,0 +1,157 @@
+"""Hypothesis property tests for the system's core invariants (SSD rule,
+Fisher estimator, Balanced Dampening schedule)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fisher, schedule
+from repro.core.ssd import dampen_array
+
+SET = dict(deadline=None, max_examples=30)
+
+pos_arrays = st.integers(min_value=1, max_value=200).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.floats(1e-6, 1e3), min_size=n, max_size=n),
+        st.lists(st.floats(1e-6, 1e3), min_size=n, max_size=n),
+        st.lists(st.floats(-10, 10), min_size=n, max_size=n)))
+
+
+@given(pos_arrays, st.floats(0.1, 50), st.floats(0.01, 2.0))
+@settings(**SET)
+def test_ssd_invariants(arrs, alpha, lam):
+    i_f_l, i_g_l, th_l = arrs
+    th = jnp.asarray(th_l, jnp.float32)
+    i_f = jnp.asarray(i_f_l, jnp.float32)
+    i_g = jnp.asarray(i_g_l, jnp.float32)
+    new, sel = dampen_array(th, i_f, i_g, alpha, lam)
+    new = np.asarray(new)
+    th_np = np.asarray(th)
+    sel = np.asarray(sel)
+
+    # untouched parameters are bit-identical
+    np.testing.assert_array_equal(new[~sel], th_np[~sel])
+    # dampening never increases magnitude (beta <= 1) and never flips sign
+    assert np.all(np.abs(new[sel]) <= np.abs(th_np[sel]) + 1e-6)
+    assert np.all(new[sel] * th_np[sel] >= -1e-9)
+    # selection matches the rule exactly
+    np.testing.assert_array_equal(sel, np.asarray(i_f) > alpha * np.asarray(i_g))
+
+
+@given(pos_arrays, st.floats(0.1, 50), st.floats(0.01, 1.0),
+       st.floats(1.01, 3.0))
+@settings(**SET)
+def test_ssd_monotone_in_lambda(arrs, alpha, lam, factor):
+    """Larger lambda => weaker dampening (|new| monotonically >=)."""
+    i_f_l, i_g_l, th_l = arrs
+    th = jnp.asarray(th_l, jnp.float32)
+    i_f = jnp.asarray(i_f_l, jnp.float32)
+    i_g = jnp.asarray(i_g_l, jnp.float32)
+    lo, _ = dampen_array(th, i_f, i_g, alpha, lam)
+    hi, _ = dampen_array(th, i_f, i_g, alpha, lam * factor)
+    assert np.all(np.abs(np.asarray(hi)) >= np.abs(np.asarray(lo)) - 1e-6)
+
+
+@given(pos_arrays, st.floats(0.1, 20), st.floats(0.01, 2.0),
+       st.floats(1.01, 4.0))
+@settings(**SET)
+def test_ssd_monotone_in_alpha(arrs, alpha, lam, factor):
+    """Larger alpha => fewer parameters selected (subset property)."""
+    i_f_l, i_g_l, th_l = arrs
+    th = jnp.asarray(th_l, jnp.float32)
+    i_f = jnp.asarray(i_f_l, jnp.float32)
+    i_g = jnp.asarray(i_g_l, jnp.float32)
+    _, sel_lo = dampen_array(th, i_f, i_g, alpha, lam)
+    _, sel_hi = dampen_array(th, i_f, i_g, alpha * factor, lam)
+    assert np.all(np.asarray(sel_hi) <= np.asarray(sel_lo))
+
+
+def test_ssd_idempotent_when_nothing_selected():
+    th = jnp.asarray(np.random.default_rng(0).normal(size=50), jnp.float32)
+    i = jnp.ones(50, jnp.float32)
+    new, sel = dampen_array(th, i, i, alpha=2.0, lam=1.0)  # i_f = i_g < 2 i_g
+    assert not bool(sel.any())
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(th))
+
+
+@given(st.integers(2, 64), st.floats(1.5, 50.0))
+@settings(**SET)
+def test_sigmoid_profile_bounds_monotone(L, b_r):
+    S = schedule.sigmoid_profile(L, b_r=b_r)
+    assert S.shape == (L,)
+    assert abs(S[0] - 1.0) < 1e-9           # back-end gets paper strength
+    assert abs(S[-1] - b_r) < 1e-9          # front-end bounded by b_r
+    assert np.all(np.diff(S) >= -1e-12)     # monotone toward the front
+
+
+@given(st.integers(1, 40), st.integers(1, 12))
+@settings(**SET)
+def test_checkpoint_set(L, every):
+    cps = schedule.checkpoint_set(L, every)
+    assert 1 in cps and L in cps
+    assert all(1 <= c <= L for c in cps)
+    assert cps == sorted(set(cps))
+
+
+def test_fisher_quadratic_analytic(key):
+    """For loss = mean(0.5*(w.x - y)^2), grad_w = (w.x - y)*x; Fisher diag
+    with chunk=1 must equal mean_i ((w.x_i - y_i) * x_i)^2 exactly."""
+    n, d = 32, 5
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    w = {"w": jnp.asarray(rng.normal(size=(d,)), jnp.float32)}
+
+    def loss(p, batch):
+        bx, by = batch
+        pred = bx @ p["w"]
+        return jnp.mean(0.5 * (pred - by) ** 2)
+
+    got = fisher.diag_fisher(loss, w, (x, y), chunk_size=1)["w"]
+    resid = np.asarray(x @ w["w"] - y)
+    want = np.mean((resid[:, None] * np.asarray(x)) ** 2, axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_fisher_chunking_consistency(key):
+    """chunk=N (one batch gradient) equals the square of the full gradient."""
+    n, d = 16, 4
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    w = {"w": jnp.asarray(rng.normal(size=(d,)), jnp.float32)}
+
+    def loss(p, batch):
+        bx, by = batch
+        return jnp.mean(0.5 * (bx @ p["w"] - by) ** 2)
+
+    got = fisher.diag_fisher(loss, w, (x, y), chunk_size=n)["w"]
+    g = jax.grad(loss)(w, (x, y))["w"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(g) ** 2, rtol=1e-5)
+
+
+def test_fisher_streaming_matches_mean():
+    n, d = 8, 3
+    rng = np.random.default_rng(5)
+    w = {"w": jnp.asarray(rng.normal(size=(d,)), jnp.float32)}
+
+    def loss(p, batch):
+        bx, by = batch
+        return jnp.mean(0.5 * (bx @ p["w"] - by) ** 2)
+
+    batches = []
+    for _ in range(3):
+        bx = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        by = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        batches.append((bx, by))
+    got = fisher.diag_fisher_streaming(loss, w, batches, chunk_size=4)["w"]
+    per = [fisher.diag_fisher(loss, w, b, chunk_size=4)["w"] for b in batches]
+    np.testing.assert_allclose(np.asarray(got),
+                               np.mean([np.asarray(p) for p in per], axis=0),
+                               rtol=1e-6)
+
+
+def test_midpoint_from_selection():
+    counts = [100, 80, 50, 20, 5, 1, 0, 0]   # back-end concentrated
+    c_m = schedule.midpoint_from_selection(counts)
+    assert 1.0 <= c_m <= 8.0

@@ -1,0 +1,92 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("B,P", [(8, 1024), (16, 3000), (7, 130), (64, 4096),
+                                 (1, 8192), (24, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fimd_sweep(B, P, dtype):
+    g = jnp.asarray(RNG.normal(size=(B, P)), dtype)
+    got = ops.fimd(g)
+    want = ref.fimd_ref(g)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-3)
+
+
+def test_fimd_multidim():
+    g = jnp.asarray(RNG.normal(size=(8, 12, 34)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.fimd(g)),
+                               np.asarray(ref.fimd_ref(g)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 8192, 77, 12345])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alpha,lam", [(2.0, 0.5), (10.0, 1.0), (0.5, 0.1)])
+def test_dampen_sweep(n, dtype, alpha, lam):
+    th = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    i_f = jnp.asarray(np.abs(RNG.normal(size=(n,))) + 1e-6, jnp.float32)
+    i_g = jnp.asarray(np.abs(RNG.normal(size=(n,))) + 1e-6, jnp.float32)
+    got, mask = ops.dampen(th, i_f, i_g, alpha, lam)
+    want = ref.dampen_ref(th, i_f, i_g, alpha, lam)
+    assert got.dtype == th.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(mask), np.asarray(i_f) > alpha * np.asarray(i_g))
+
+
+def test_dampen_matches_core_ssd():
+    from repro.core.ssd import dampen_array
+    th = jnp.asarray(RNG.normal(size=(513,)), jnp.float32)
+    i_f = jnp.asarray(np.abs(RNG.normal(size=(513,))), jnp.float32)
+    i_g = jnp.asarray(np.abs(RNG.normal(size=(513,))), jnp.float32)
+    kout, kmask = ops.dampen(th, i_f, i_g, 3.0, 0.7)
+    cout, cmask = dampen_array(th, i_f, i_g, 3.0, 0.7)
+    np.testing.assert_allclose(np.asarray(kout), np.asarray(cout), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(kmask), np.asarray(cmask))
+
+
+@pytest.mark.parametrize("n", [256, 5000])
+def test_dampen_int8(n):
+    thq = jnp.asarray(RNG.integers(-127, 128, size=(n,)), jnp.int8)
+    i_f = jnp.asarray(np.abs(RNG.normal(size=(n,))) + 1e-6, jnp.float32)
+    i_g = jnp.asarray(np.abs(RNG.normal(size=(n,))) + 1e-6, jnp.float32)
+    got = ops.dampen_int8(thq, i_f, i_g, 2.0, 0.5)
+    want = ref.dampen_int8_ref(thq, i_f, i_g, 2.0, 0.5)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("N,M,K", [(128, 256, 256), (200, 300, 100),
+                                   (256, 512, 384), (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_fisher_sweep(N, M, K, dtype):
+    a = jnp.asarray(RNG.normal(size=(N, M)), dtype)
+    g = jnp.asarray(RNG.normal(size=(N, K)), dtype)
+    dw, fish = ops.gemm_fisher(a, g)
+    dwr, fishr = ref.gemm_fisher_ref(a, g)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dwr),
+                               rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(fish), np.asarray(fishr),
+                               rtol=2 * tol, atol=tol * 10)
+
+
+def test_gemm_fisher_is_square_of_dw():
+    a = jnp.asarray(RNG.normal(size=(128, 256)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(128, 256)), jnp.float32)
+    dw, fish = ops.gemm_fisher(a, g)
+    np.testing.assert_allclose(np.asarray(fish), np.asarray(dw) ** 2,
+                               rtol=1e-6)

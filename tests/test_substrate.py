@@ -1,0 +1,225 @@
+"""Substrate tests: data pipeline, optimizer, compression, checkpointing,
+sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt as CKPT
+from repro.data import synthetic as syn
+from repro.dist import sharding as shd
+from repro.optim import (AdamWConfig, Int8Codec, TopKCodec, adamw_update,
+                         cosine_lr, init_adamw)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_classification_separable_and_deterministic():
+    cfg = syn.ClsDataConfig(n_classes=4, n_per_class=8, img_size=16, seed=3)
+    x1, y1 = syn.make_classification(cfg)
+    x2, y2 = syn.make_classification(cfg)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (32, 16, 16, 3)
+    assert set(np.unique(y1)) == set(range(4))
+
+
+def test_forget_retain_split_disjoint():
+    cfg = syn.ClsDataConfig(n_classes=4, n_per_class=8, img_size=8, seed=0)
+    x, y = syn.make_classification(cfg)
+    s = syn.split_forget_retain(x, y, forget_class=2)
+    assert np.all(s["forget"][1] == 2)
+    assert np.all(s["retain"][1] != 2)
+    assert np.all(s["heldout"][1] != 2)
+    assert len(s["forget"][1]) + len(s["retain"][1]) + len(s["heldout"][1]) == 32
+
+
+def test_lm_domains_distinguishable():
+    cfg = syn.LMDataConfig(vocab=128, n_domains=4, seq_len=32,
+                           n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(cfg)
+    assert toks.shape == (32, 33)
+    assert toks.max() < 128
+    # domains use distinct token ranges: mean token differs across domains
+    means = [toks[doms == d].mean() for d in range(4)]
+    assert np.std(means) > 1.0
+
+
+def test_batches_restartable_and_host_sharded():
+    x = np.arange(40)[:, None]
+    b1 = syn.Batches((x,), batch=8, seed=5)
+    seen = [next(b1)[0] for _ in range(3)]
+    state = b1.state()
+    b2 = syn.Batches((x,), batch=8, seed=state["seed"], step=state["step"])
+    np.testing.assert_array_equal(next(b1)[0], next(b2)[0])
+    # host sharding partitions the global batch
+    h0 = syn.Batches((x,), batch=8, seed=5, host_id=0, n_hosts=2)
+    h1 = syn.Batches((x,), batch=8, seed=5, host_id=1, n_hosts=2)
+    g = syn.Batches((x,), batch=8, seed=5)
+    a, b, full = next(h0)[0], next(h1)[0], next(g)[0]
+    np.testing.assert_array_equal(np.concatenate([a, b]), full)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, total_steps=200, warmup_steps=0,
+                      weight_decay=0.0, clip_norm=100.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = init_adamw(cfg, params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(cfg, g, opt, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup rising
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak at end of warmup
+    assert lrs[3] < lrs[2]                   # decaying
+    assert abs(lrs[4] - 0.1) < 1e-2          # floor at min_lr_frac
+
+
+def test_grad_clip_applied():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = init_adamw(cfg, params)
+    huge = {"w": jnp.full(4, 1e6)}
+    p2, _ = adamw_update(cfg, huge, opt, params)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 1.0  # clipped update is sane
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", [Int8Codec(block=64), TopKCodec(frac=0.1)])
+def test_compression_error_feedback_conserves_signal(codec):
+    """With EF, the accumulated (sent + residual) equals the true gradient
+    sum — no information is permanently lost."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=257), jnp.float32)}
+    ef = codec.init_state(g)
+    sent_total = np.zeros(257)
+    g_total = np.zeros(257)
+    for _ in range(5):
+        sent, ef = codec.apply(g, ef)
+        sent_total += np.asarray(sent["w"], np.float64)
+        g_total += np.asarray(g["w"], np.float64)
+    resid = np.asarray(ef["w"], np.float64)
+    np.testing.assert_allclose(sent_total + resid, g_total, rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_int8_wire_bytes():
+    c = Int8Codec(block=256)
+    assert c.wire_bytes(1024) == 1024 + 4 * 4       # payload + scales
+    t = TopKCodec(frac=0.01)
+    assert t.wire_bytes(10_000) == 100 * 8
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_ckpt_roundtrip_and_latest(tmp_path):
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": jnp.ones(4, jnp.bfloat16)}
+    CKPT.save(str(tmp_path), 3, tree)
+    CKPT.save(str(tmp_path), 7, tree)
+    assert CKPT.latest_step(str(tmp_path)) == 7
+    restored, meta = CKPT.restore(str(tmp_path), 7, tree)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]["w"]),
+                                  np.asarray(tree["a"]["w"]))
+    assert restored["b"].dtype == jnp.bfloat16
+
+
+def test_ckpt_incomplete_step_ignored(tmp_path):
+    tree = {"w": jnp.ones(3)}
+    CKPT.save(str(tmp_path), 1, tree)
+    # simulate a crash mid-write: step dir without META.json
+    os.makedirs(tmp_path / "step_00000009")
+    assert CKPT.latest_step(str(tmp_path)) == 1
+
+
+def test_ckpt_elastic_resharding(tmp_path):
+    """Restore onto a (new) mesh via sharding_fn — elastic scaling path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    CKPT.save(str(tmp_path), 1, tree)
+    mesh = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+    sh_fn = lambda path: NamedSharding(mesh, P())
+    restored, _ = CKPT.restore(str(tmp_path), 1, tree, sharding_fn=sh_fn)
+    assert restored["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_ckpt_gc(tmp_path):
+    tree = {"w": jnp.ones(2)}
+    for s in (1, 2, 3, 4):
+        CKPT.save(str(tmp_path), s, tree)
+    CKPT.gc_old(str(tmp_path), keep=2)
+    assert CKPT.latest_step(str(tmp_path)) == 4
+    assert sorted(os.listdir(tmp_path)) == ["step_00000003", "step_00000004"]
+
+
+def test_unlearn_journal(tmp_path):
+    CKPT.journal_append(str(tmp_path), {"step": 5, "forget": "rocket"})
+    CKPT.journal_append(str(tmp_path), {"step": 9, "forget": "mushroom"})
+    j = CKPT.journal_read(str(tmp_path))
+    assert [r["step"] for r in j] == [5, 9]
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def test_param_pspec_rules():
+    from jax.sharding import PartitionSpec as P
+    tree = {
+        "embed": {"w": jnp.zeros((64, 32))},
+        "period_stack": {"0": {
+            "mixer": {"wq": jnp.zeros((4, 32, 32)), "bf": jnp.zeros((4, 8))},
+            "ffn": {"w_gate": jnp.zeros((4, 32, 64)),
+                    "router": jnp.zeros((4, 32, 8))},
+        }},
+        "final_norm": {"scale": jnp.zeros(32)},
+    }
+    specs = shd.param_pspecs(tree)
+    assert specs["embed"]["w"] == P("model", "data")
+    assert specs["period_stack"]["0"]["mixer"]["wq"] == P(None, "data", "model")
+    assert specs["period_stack"]["0"]["ffn"]["w_gate"] == P(None, "data", "model")
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_param_pspec_moe_rank_disambiguation():
+    from jax.sharding import PartitionSpec as P
+    tree = {"period_stack": {"0": {"ffn": {
+        "w_gate": jnp.zeros((4, 8, 32, 64)),       # stacked MoE [L,E,D,F]
+        "shared": {"w_gate": jnp.zeros((4, 32, 64))},  # stacked dense
+    }}}}
+    specs = shd.param_pspecs(tree)
+    assert specs["period_stack"]["0"]["ffn"]["w_gate"] == \
+        P(None, "model", "data", None)
+    assert specs["period_stack"]["0"]["ffn"]["shared"]["w_gate"] == \
+        P(None, "data", "model")
+
+
+def test_pspec_divisibility_filter():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    # fabricate a mesh with model=16 via shape math: use fit directly
+    from jax.sharding import PartitionSpec as P
+    import numpy as _np
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fitted = shd._fit_spec(P(None, "model"), (3, 4), FakeMesh)
+    assert fitted == P(None, None)          # 4 % 16 != 0 -> replicated
+    fitted = shd._fit_spec(P("data", "model"), (32, 32), FakeMesh)
+    assert fitted == P("data", "model")

@@ -1,0 +1,114 @@
+"""End-to-end system behaviour: the paper's full deployment story on one
+model — pre-train, compute global importance once, serve forget requests
+(FP32 and INT8 paths), verify forgetting + retention + energy-proxy wins."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adapters, ficabu, fisher, metrics
+from repro.data import synthetic as syn
+from repro.kernels import ops as kops
+from repro.models import vision as V
+
+FORGET = 4
+
+
+@pytest.fixture(scope="module")
+def sys_setting(trained_resnet):
+    m = trained_resnet
+    splits = syn.split_forget_retain(m["x"], m["y"], forget_class=FORGET)
+    batches = [(m["x"][i:i + 32], m["y"][i:i + 32])
+               for i in range(0, len(m["y"]) - 31, 32)]
+    I_D = fisher.diag_fisher_streaming(m["loss_fn"], m["params"], batches,
+                                       chunk_size=8)
+    return {**m, "splits": splits, "I_D": I_D,
+            "adapter": adapters.resnet_adapter(m["cfg"])}
+
+
+def test_sequential_forget_requests(sys_setting):
+    """Two successive forget requests (classes 4 then 1): both forgotten,
+    remainder retained — the on-device service pattern."""
+    m = sys_setting
+    params = m["params"]
+    x, y = m["x"], m["y"]
+    for cls in (4, 1):
+        s = syn.split_forget_retain(x, y, forget_class=cls)
+        fx, fy = s["forget"]
+        params, stats = ficabu.unlearn(
+            m["adapter"], params, m["I_D"], fx[:32], fy[:32],
+            mode="ficabu", alpha=10.0, lam=1.0, tau=1 / 6 + 0.03,
+            checkpoint_every=2)
+    lg = V.resnet_forward(params, m["cfg"], x)
+    for cls in (4, 1):
+        acc = float(metrics.accuracy(lg[y == cls], jnp.asarray(y[y == cls])))
+        assert acc <= 0.30, (cls, acc)
+    keep = ~np.isin(y, (4, 1))
+    acc_keep = float(metrics.accuracy(lg[keep], jnp.asarray(y[keep])))
+    assert acc_keep >= 0.8
+
+
+def test_int8_deployment_path(sys_setting):
+    """INT8 per-tensor quantised weights dampened in the quantised domain
+    (the paper's hardware prototype, Table IV): forgetting still reaches
+    random guess and retain stays high after dequantisation."""
+    m = sys_setting
+    fx, fy = m["splits"]["forget"]
+
+    from repro.models.module import map_with_paths
+    scales = {}
+
+    def quantize(path, x):
+        if x.ndim >= 2:
+            scale = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-12
+            scales[path] = scale
+            return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return x
+
+    qtree = map_with_paths(quantize, m["params"])
+
+    def dequant(path, x):
+        if path in scales:
+            return x.astype(jnp.float32) * scales[path]
+        return x
+
+    deq = map_with_paths(dequant, qtree)
+    acc_q = float(metrics.accuracy(
+        V.resnet_forward(deq, m["cfg"], m["x"]), m["y"]))
+    assert acc_q > 0.9, "int8 quantisation destroyed the model"
+
+    # Fisher on the dequantised model, dampen the INT8 weights directly
+    I_f = fisher.diag_fisher(m["loss_fn"], deq, (fx[:32], fy[:32]),
+                             chunk_size=8)
+
+    def dampen_q(path, x):
+        if path not in scales:
+            return x
+        i_f, i_g = I_f, m["I_D"]
+        for k in path.split("/"):
+            i_f, i_g = i_f[k], i_g[k]
+        return kops.dampen_int8(x, i_f, i_g, 10.0, 1.0)
+
+    qtree2 = map_with_paths(dampen_q, qtree)
+    deq2 = map_with_paths(dequant, qtree2)
+    rx, ry = m["splits"]["retain"]
+    f_acc = float(metrics.accuracy(V.resnet_forward(deq2, m["cfg"], fx),
+                                   jnp.asarray(fy)))
+    r_acc = float(metrics.accuracy(V.resnet_forward(deq2, m["cfg"], rx),
+                                   jnp.asarray(ry)))
+    assert f_acc <= 0.35, f_acc
+    assert r_acc >= 0.8, r_acc
+
+
+def test_energy_proxy_tracks_macs(sys_setting):
+    """The paper's ES metric: energy proxy (MAC-dominated) must scale down
+    with the ficabu MAC reduction."""
+    m = sys_setting
+    fx, fy = m["splits"]["forget"]
+    _, s_ssd = ficabu.unlearn(m["adapter"], m["params"], m["I_D"],
+                              fx[:32], fy[:32], mode="ssd", alpha=10.0)
+    _, s_fic = ficabu.unlearn(m["adapter"], m["params"], m["I_D"],
+                              fx[:32], fy[:32], mode="ficabu", alpha=10.0,
+                              tau=1 / 6 + 0.03, checkpoint_every=2)
+    es = 100.0 * (1.0 - s_fic["macs"] / max(s_ssd["macs"], 1))
+    assert es > 30.0, f"energy saving {es:.1f}% too small"
