@@ -8,10 +8,15 @@ wall-clock is NOT the TPU story.  What we measure + derive instead:
   2. the modeled HBM-traffic ratio on TPU (bytes in/out per pass), which is
      what the IPs' speedups come from: FIMD fuses square+accumulate into the
      gradient stream (paper: 11.7x), Dampening fuses compare/beta/multiply
-     (paper: 7.9x).
+     (paper: 7.9x);
+  3. the compiled unlearning ENGINE vs the legacy three-programs-per-layer
+     sweep on the smoke LM config: steady-state (2nd..Nth forget request)
+     wall-clock per request, recorded to BENCH_engine.json.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -21,6 +26,76 @@ import numpy as np
 from repro.kernels import ref
 
 N = 1 << 22  # 4M params
+
+BENCH_ENGINE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                 "BENCH_engine.json")
+
+
+def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
+    """Fused engine sweep vs legacy 3-program sweep, full-depth (tau=-1) on
+    the smoke LM config. The engine's warm requests replay cached
+    executables; the legacy driver re-traces its per-layer programs and
+    rebuilds the per-checkpoint jits on every request."""
+    from repro import configs
+    from repro.core import adapters, cau, fisher
+    from repro.data import synthetic as syn
+    from repro.engine import UnlearnSession
+    from repro.models import lm as LM
+
+    cfg = configs.get(arch).smoke
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=24,
+                            n_per_domain=8, seed=0)
+    toks, _ = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:16, :-1], toks[:16, 1:]),
+                             chunk_size=4)
+    adapter = adapters.lm_adapter(cfg, 24)
+    fb = toks[:8]
+    ucfg = cau.UnlearnConfig(alpha=8.0, lam=1.0, tau=-1.0, checkpoint_every=2,
+                             balanced=True, chunk_size=4)
+
+    def legacy():
+        return cau.context_adaptive_unlearn_legacy(
+            adapter, params, i_d, fb[:, :-1], fb[:, 1:], ucfg)
+
+    t0 = time.time()
+    legacy()
+    t_legacy_cold = time.time() - t0
+    t0 = time.time()
+    for _ in range(reps):
+        legacy()
+    t_legacy_warm = (time.time() - t0) / reps
+
+    sess = UnlearnSession(adapter, i_d)
+    t0 = time.time()
+    _, s1 = sess.forget(params, fb[:, :-1], fb[:, 1:], ucfg)
+    t_engine_cold = time.time() - t0
+    t0 = time.time()
+    for _ in range(reps):
+        _, sn = sess.forget(params, fb[:, :-1], fb[:, 1:], ucfg)
+    t_engine_warm = (time.time() - t0) / reps
+
+    out = {
+        "config": f"{arch}-smoke full sweep, forget batch 8 x 24",
+        "legacy_cold_s": t_legacy_cold, "legacy_warm_s": t_legacy_warm,
+        "engine_cold_s": t_engine_cold, "engine_warm_s": t_engine_warm,
+        "speedup_warm": t_legacy_warm / t_engine_warm,
+        "speedup_cold": t_legacy_cold / t_engine_cold,
+        "engine_compiles_req1": s1["engine"]["compiles"],
+        "engine_compiles_reqN": sn["engine"]["compiles"],
+    }
+    with open(BENCH_ENGINE_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print("# Engine vs legacy sweep (steady-state per forget request)")
+    print(f"legacy   cold {t_legacy_cold:6.2f}s  warm {t_legacy_warm:6.2f}s")
+    print(f"engine   cold {t_engine_cold:6.2f}s  warm {t_engine_warm:6.2f}s  "
+          f"(compiles req1={out['engine_compiles_req1']}, "
+          f"reqN={out['engine_compiles_reqN']})")
+    print(f"kernels_bench,engine_sweep,{t_engine_warm * 1e6:.0f},"
+          f"speedup={out['speedup_warm']:.2f}")
+    assert out["engine_compiles_reqN"] == 0, "warm request recompiled!"
+    return out
 
 
 def _time(fn, *args, reps=5):
@@ -84,6 +159,7 @@ def main() -> dict:
           f"TPU traffic ratio {damp_traffic_ratio:.2f}x")
     print(f"kernels_bench,fimd,{t_fused:.0f},speedup={out['fimd_cpu_speedup']:.2f}")
     print(f"kernels_bench,dampen,{t_fd:.0f},speedup={out['dampen_cpu_speedup']:.2f}")
+    out["engine"] = engine_bench()
     return out
 
 

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1     # one
+    PYTHONPATH=src python -m benchmarks.run --smoke    # quick CI subset
 
 Each benchmark prints its human-readable table followed by CSV lines
 ``name,us_per_call,derived``.
@@ -10,6 +11,9 @@ from __future__ import annotations
 
 import sys
 import time
+
+# jobs quick enough for the CI smoke lane (no model training required)
+SMOKE_JOBS = ("kernels", "compression")
 
 
 def main() -> None:
@@ -27,7 +31,9 @@ def main() -> None:
         "compression": compression_bench.main,
         "roofline": roofline_report.main,
     }
-    if which != "all":
+    if which == "--smoke":
+        jobs = {k: jobs[k] for k in SMOKE_JOBS}
+    elif which != "all":
         jobs = {which: jobs[which]}
     for name, fn in jobs.items():
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")

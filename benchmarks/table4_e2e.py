@@ -43,6 +43,7 @@ def _quantize(setting):
 
 
 def run(forget_class: int = 2) -> dict:
+    from repro.engine import UnlearnSession
     s = common.trained("resnet")
     qtree, dequant = _quantize(s)
     deq_params = dequant(qtree)
@@ -52,10 +53,16 @@ def run(forget_class: int = 2) -> dict:
     fx, fy = splits["forget"]
     tau = common.RANDOM_GUESS + 0.03
 
+    # one warm engine session serves both the SSD baseline and FiCABU; both
+    # sweeps run the kernel dampening path (bit-equal to the jnp path, see
+    # test_kernel_path_matches_jnp_path) so the FiCABU sweep reuses every
+    # per-layer program the SSD sweep compiled.
+    session = UnlearnSession(s["adapter"], s["I_D"])
+
     # SSD on the INT8-deployed model (baseline processor)
     p_ssd, st_ssd = ficabu.unlearn(
         s["adapter"], deq_params, s["I_D"], fx[:32], fy[:32],
-        mode="ssd", alpha=10.0, lam=1.0)
+        mode="ssd", alpha=10.0, lam=1.0, use_kernel=True, session=session)
     e_ssd = common.eval_model(s, p_ssd, forget_class)
 
     # FiCABU (CAU + BD, kernel dampening path) on the same model
@@ -63,7 +70,7 @@ def run(forget_class: int = 2) -> dict:
     p_fic, st_fic = ficabu.unlearn(
         s["adapter"], deq_params, s["I_D"], fx[:32], fy[:32],
         mode="ficabu", alpha=10.0, lam=1.0, tau=tau, checkpoint_every=2,
-        b_r=10.0, use_kernel=True)
+        b_r=10.0, use_kernel=True, session=session)
     t_fic = time.time() - t0
     e_fic = common.eval_model(s, p_fic, forget_class)
 

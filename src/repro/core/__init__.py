@@ -1,4 +1,5 @@
 """FiCABU core: Fisher-based, context-adaptive, balanced unlearning."""
 from . import adapters, cau, fisher, ficabu, metrics, schedule, ssd  # noqa: F401
-from .cau import ModelAdapter, UnlearnConfig, context_adaptive_unlearn  # noqa: F401
+from .cau import (ModelAdapter, UnlearnConfig,  # noqa: F401
+                  context_adaptive_unlearn, context_adaptive_unlearn_legacy)
 from .ficabu import unlearn, auto_midpoint  # noqa: F401

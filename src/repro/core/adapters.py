@@ -49,6 +49,15 @@ def resnet_adapter(cfg: V.ResNetConfig) -> ModelAdapter:
     def apply_layer(params, j, layer_p, act):
         return V.resnet_apply_layer(layer_p, j, act)
 
+    def layer_key(j):
+        # blocks of equal stride AND equal shapes share one fused program
+        # (shape equality is enforced by the engine's cache signature).
+        if j == 0:
+            return ("stem",)
+        if j == V.RESNET_N_LAYERS - 1:
+            return ("fc",)
+        return ("blk", V._block_stride(j - 1))
+
     return ModelAdapter(
         name=cfg.name, n_layers=V.RESNET_N_LAYERS,
         forward_collect=jax.jit(fc),
@@ -56,7 +65,8 @@ def resnet_adapter(cfg: V.ResNetConfig) -> ModelAdapter:
         get_layer=lambda p, j: V.resnet_layer_params(p, j),
         set_layer=lambda p, j, s: V.resnet_set_layer(p, j, s),
         loss=V.cls_loss, acc=accuracy,
-        layer_fwd_macs=_resnet_macs(cfg))
+        layer_fwd_macs=_resnet_macs(cfg),
+        layer_key=layer_key, layer_ctx=lambda p, j: None)
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +87,13 @@ def vit_adapter(cfg: V.ViTConfig) -> ModelAdapter:
     def apply_layer(params, j, layer_p, act):
         return V.vit_apply_layer(layer_p, j, act, cfg)
 
+    def layer_key(j):
+        if j == 0:
+            return ("patch",)
+        if j == cfg.n_layers + 1:
+            return ("head",)
+        return ("blk",)  # every encoder block shares one fused program
+
     return ModelAdapter(
         name=cfg.name, n_layers=cfg.n_layers + 2,
         forward_collect=jax.jit(fc),
@@ -84,7 +101,8 @@ def vit_adapter(cfg: V.ViTConfig) -> ModelAdapter:
         get_layer=lambda p, j: V.vit_layer_params(p, j, cfg),
         set_layer=lambda p, j, s: V.vit_set_layer(p, j, s, cfg),
         loss=V.cls_loss, acc=accuracy,
-        layer_fwd_macs=_vit_macs(cfg))
+        layer_fwd_macs=_vit_macs(cfg),
+        layer_key=layer_key, layer_ctx=lambda p, j: None)
 
 
 # ---------------------------------------------------------------------------
@@ -130,11 +148,28 @@ def lm_adapter(cfg: LM.LMConfig, seq_len: int,
     Lu = LM.n_unlearn_layers(cfg)
 
     def apply_layer(params, j, layer_p, act):
+        # ``params`` may be the full tree (legacy callers) or the minimal
+        # engine context from layer_ctx below ({} / embed-only for the
+        # tied head) — LM.apply_layer only reads it for the head.
         if j == 0:
             return LM._embed({"embed": layer_p}, cfg, act, prefix)
         B, S = act.shape[0], act.shape[1]
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        return LM.apply_layer(params, cfg, j, layer_p, act, positions)
+        return LM.apply_layer(params or {}, cfg, j, layer_p, act, positions)
+
+    def layer_key(j):
+        if j == 0:
+            return ("embed",)
+        if j == Lu - 1:
+            return ("head",)
+        return ("blk", cfg.layer_types[j - 1])  # same btype => same program
+
+    def layer_ctx(p, j):
+        # the head under tied embeddings reads the embedding matrix; every
+        # other layer is self-contained.
+        if j == Lu - 1 and cfg.tie_embeddings:
+            return {"embed": p["embed"]}
+        return None
 
     def fc(params, tokens):
         acts = [tokens]
@@ -166,7 +201,8 @@ def lm_adapter(cfg: LM.LMConfig, seq_len: int,
         loss=loss, acc=acc,
         layer_fwd_macs=lm_layer_macs(cfg, seq_len),
         int_input_layer0=True,
-        exclude=exclude)
+        exclude=exclude,
+        layer_key=layer_key, layer_ctx=layer_ctx)
 
 
 # ---------------------------------------------------------------------------
@@ -227,10 +263,21 @@ def encdec_adapter(cfg: ED.EncDecConfig, seq_len: int,
         return x, acts
 
     loss = lambda lg, lb: LM.softmax_xent(lg, lb, z_loss=0.0)
+
+    def layer_key(j):
+        # decoder blocks share one fused program; layer_ctx stays at the
+        # default (full params) because apply_layer re-encodes the frames.
+        if j == 0:
+            return ("embed",)
+        if j == Lu - 1:
+            return ("head",)
+        return ("blk",)
+
     return ModelAdapter(
         name=cfg.name, n_layers=Lu,
         forward_collect=jax.jit(fc),
         apply_layer=apply_layer,
         get_layer=get_layer, set_layer=set_layer,
         loss=loss, acc=token_accuracy,
-        layer_fwd_macs=macs, int_input_layer0=True)
+        layer_fwd_macs=macs, int_input_layer0=True,
+        layer_key=layer_key)

@@ -3,7 +3,10 @@
 Control structure mirrors the FiCABU processor: the HOST plays the RISC-V
 Rocket core (layer loop, checkpoint decisions, early stop), while each
 per-layer step — backward GEMMs, Fisher square-accumulate (FIMD IP),
-select/beta/multiply (Dampening IP) — runs as a jitted device program.
+select/beta/multiply (Dampening IP) — runs as ONE fused jitted device
+program via the compiled engine (``repro.engine``, see DESIGN.md).
+``context_adaptive_unlearn_legacy`` keeps the original three-programs-per-
+layer driver as the numerical oracle and benchmark baseline.
 
 Key properties implemented exactly as in the paper:
   * one initial forward pass on the forget batch, caching the INPUT activation
@@ -57,6 +60,16 @@ class ModelAdapter:
     layer_fwd_macs: Sequence[int]                           # per-sample fwd MACs
     int_input_layer0: bool = False                          # token-id inputs
     exclude: Optional[Callable[[str], bool]] = None         # param paths to skip
+    # --- engine hooks (repro.engine): program-cache sharing across layers ---
+    # layer_key(j) -> hashable kind; layers with equal kind AND equal shapes
+    # must compute the same function of (ctx, layer_p, act) so one compiled
+    # fused step serves all of them. None: every depth is its own kind.
+    layer_key: Optional[Callable[[int], Any]] = None
+    # layer_ctx(params, j) -> traced context apply_layer needs beyond the
+    # layer's own params (None when the layer is self-contained). When the
+    # hook itself is None the engine passes the FULL params tree — always
+    # correct, never baked into the program as constants.
+    layer_ctx: Optional[Callable[[Any, int], Any]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,8 +154,35 @@ def _restore_excluded(exclude: Callable[[str], bool], new: Params, old: Params):
 def context_adaptive_unlearn(
         adapter: ModelAdapter, params: Params, fisher_global: Params,
         inputs: Any, labels: jax.Array, cfg: UnlearnConfig,
+        session=None,
 ) -> Tuple[Params, Dict]:
-    """Algorithm 1 (+ optional Balanced Dampening). Returns (params', stats)."""
+    """Algorithm 1 (+ optional Balanced Dampening). Returns (params', stats).
+
+    Routes through the compiled engine (``repro.engine.UnlearnSession``):
+    one fused device program per unique layer shape, checkpoint evaluation
+    as a single traced-depth program, and a program cache that persists on
+    ``session`` so repeated forget requests retrace nothing. Pass a warm
+    ``session`` (serving path) to reuse compiled executables across
+    requests; otherwise an ephemeral session is created.
+    """
+    from repro.engine import UnlearnSession  # deferred: engine imports cau
+    if session is None:
+        session = UnlearnSession(adapter, fisher_global)
+    else:
+        assert session.adapter is adapter, "session bound to another adapter"
+        session.fisher_global = fisher_global
+    return session.forget(params, inputs, labels, cfg)
+
+
+def context_adaptive_unlearn_legacy(
+        adapter: ModelAdapter, params: Params, fisher_global: Params,
+        inputs: Any, labels: jax.Array, cfg: UnlearnConfig,
+) -> Tuple[Params, Dict]:
+    """The pre-engine reference driver: THREE device programs per layer (vjp
+    sweep, Fisher square-accumulate, dampen) plus one fresh jit per
+    checkpoint depth, all retraced on every call. Kept as the bit-exactness
+    oracle for the engine (tests/test_engine.py) and the baseline for
+    benchmarks/kernels_bench.py — do not use in serving paths."""
     L = adapter.n_layers
     cps = (set(checkpoint_set(L, cfg.checkpoint_every))
            if 0 < cfg.checkpoint_every <= L else set())

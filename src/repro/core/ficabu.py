@@ -30,7 +30,10 @@ def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
             alpha: float = 10.0, lam: float = 1.0, tau: float = 0.05,
             checkpoint_every: int = 4, b_r: float = 10.0,
             c_m: Optional[float] = None, chunk_size: int = 8,
-            use_kernel: bool = False) -> Tuple[Params, Dict]:
+            use_kernel: bool = False, session=None) -> Tuple[Params, Dict]:
+    """``session``: a warm ``repro.engine.UnlearnSession`` to reuse compiled
+    per-layer programs across forget requests (serving path); None builds an
+    ephemeral one."""
     assert mode in MODES, f"mode must be one of {MODES}"
     cau_on = mode in ("cau", "ficabu")
     bd_on = mode in ("bd", "ficabu")
@@ -41,7 +44,7 @@ def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
         balanced=bd_on, b_r=b_r, c_m=c_m,
         chunk_size=chunk_size, use_kernel=use_kernel)
     new_params, stats = context_adaptive_unlearn(
-        adapter, params, fisher_global, inputs, labels, cfg)
+        adapter, params, fisher_global, inputs, labels, cfg, session=session)
     stats["mode"] = mode
     return new_params, stats
 

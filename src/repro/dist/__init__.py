@@ -1,0 +1,2 @@
+"""Distributed substrate: sharding rules for the production mesh."""
+from . import sharding  # noqa: F401

@@ -1,0 +1,178 @@
+"""Sharding rules for the production mesh: one place that decides how every
+tensor in the system — parameters, token batches, KV caches — is laid out
+over the ("data", "model") (optionally ("pod", "data", "model")) mesh.
+
+Rules are *structural*: they look only at the parameter path and the leaf
+rank, never at a concrete model config, so the same function covers every
+arch in the zoo (dense, MoE, recurrent, enc-dec) and the engine's per-layer
+subtrees.
+
+Two parallelism modes:
+  "tp"    TP+FSDP hybrid (default): matrices [in, out] are sharded
+          ("data", "model"); the embedding [vocab, d] is transposed to
+          ("model", "data") so the vocab all-gather rides the model axis;
+          stacked MoE expert weights [E, D, F] put experts on "model"
+          (expert parallelism) and D on "data".
+  "fsdp"  pure ZeRO-3: every parameter is sharded over ALL devices along
+          its largest dimension; nothing is model-parallel.
+
+Every public helper accepts an optional mesh; when given, specs are fitted
+with `_fit_spec` so any axis whose mesh extent does not divide the tensor
+dimension degrades to replication instead of erroring — the elastic-mesh
+path (smoke 1x1 meshes, odd vocab sizes, tiny adapter layers) depends on
+this.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis_size(mesh, axis) -> int:
+    """Total devices behind a spec entry (str or tuple of axis names)."""
+    if axis is None:
+        return 1
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    return math.prod(int(mesh.shape[a]) for a in axes)
+
+
+def _mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.shape.keys())
+
+
+def _collapse(axes: Sequence[str]):
+    """Singleton axis tuples collapse to the bare name for readable specs."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def dp_size(mesh) -> int:
+    """Data-parallel degree: the product of the batch-bearing axes."""
+    return math.prod(int(mesh.shape[a]) for a in _mesh_axes(mesh)
+                     if a in ("pod", "data"))
+
+
+def _fit_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Degrade non-dividing axes to replication.
+
+    For each dimension, keep the spec entry only if the total mesh extent
+    behind it divides the tensor dimension; otherwise replicate that dim.
+    ``mesh`` only needs a ``.shape`` mapping (tests pass a fake).
+    """
+    out = []
+    for d, size in enumerate(shape):
+        axis = spec[d] if d < len(spec) else None
+        n = _axis_size(mesh, axis)
+        out.append(axis if size % n == 0 else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _leaf_spec_tp(path: str, shape: Tuple[int, ...]) -> P:
+    leaf_name = path.rsplit("/", 1)[-1]
+    stacked = "period_stack" in path
+    prefix: Tuple = (None,) if stacked and len(shape) >= 1 else ()
+    dims = shape[1:] if stacked else shape
+    r = len(dims)
+
+    if "embed" in path and r == 2:
+        return P(*prefix, "model", "data")          # [vocab, d]
+    if "router" in path:
+        return P(*prefix, *([None] * r))            # tiny; replicate
+    if r == 3 and "ffn" in path and leaf_name.startswith("w_") \
+            and "shared" not in path:
+        return P(*prefix, "model", "data", None)    # MoE experts [E, D, F]
+    if r == 2:
+        return P(*prefix, "data", "model")          # matrices [in, out]
+    if r == 3:
+        return P(*prefix, None, "data", "model")    # unknown leading stack
+    return P(*prefix, *([None] * r))                # vectors / scalars
+
+
+def _leaf_spec_fsdp(path: str, shape: Tuple[int, ...], all_axes) -> P:
+    if len(shape) == 0 or max(shape) <= 1:
+        return P(*([None] * len(shape)))
+    d = max(range(len(shape)), key=lambda i: shape[i])
+    out = [None] * len(shape)
+    out[d] = _collapse(all_axes)
+    return P(*out)
+
+
+def param_pspecs(tree: Params, mesh=None, mode: str = "tp") -> Params:
+    """PartitionSpec tree for a parameter pytree (see module docstring).
+
+    Without a mesh, returns the raw structural rules; with one, every spec
+    is divisibility-fitted for that mesh.
+    """
+    assert mode in ("tp", "fsdp"), mode
+    if mode == "fsdp":
+        axes = ([a for a in _mesh_axes(mesh) if a != "pod"]
+                if mesh is not None else ["data", "model"])
+
+        def rule(path, leaf):
+            return _leaf_spec_fsdp(_path_str(path), tuple(leaf.shape), axes)
+    else:
+        def rule(path, leaf):
+            return _leaf_spec_tp(_path_str(path), tuple(leaf.shape))
+
+    def one(path, leaf):
+        spec = rule(path, leaf)
+        return _fit_spec(spec, tuple(leaf.shape), mesh) if mesh is not None \
+            else spec
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# batches / activations
+# ---------------------------------------------------------------------------
+def batch_pspec(mesh, global_batch: int, ndim: int, mode: str = "tp") -> P:
+    """Spec for a [B, ...] batch tensor: the batch dim rides the DP axes
+    ("pod" + "data"; in fsdp mode also "model" — there is no TP to respect),
+    the rest replicated. Falls back to full replication when the mesh's DP
+    extent does not divide B."""
+    axes = [a for a in _mesh_axes(mesh) if a in ("pod", "data")]
+    if mode == "fsdp" and "model" in _mesh_axes(mesh):
+        axes.append("model")
+    n = math.prod(int(mesh.shape[a]) for a in axes)
+    if not axes or global_batch % n != 0:
+        return P(*([None] * ndim))
+    return P(_collapse(axes), *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache_tree: Params, mesh, global_batch: int) -> Params:
+    """Specs for decode caches (KV blocks, recurrent states): shard the
+    batch dimension on "data", replicate everything else. The batch dim is
+    dim 0 for tail-layer leaves and dim 1 for period-stacked leaves (dim 0
+    is the layer stack)."""
+    data = math.prod(int(mesh.shape[a]) for a in _mesh_axes(mesh)
+                     if a in ("pod", "data"))
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        stacked = "period_stack" in _path_str(path)
+        b_dim = 1 if stacked and len(shape) >= 2 else 0
+        if len(shape) > b_dim and shape[b_dim] == global_batch \
+                and data > 1 and global_batch % data == 0:
+            axes = [a for a in _mesh_axes(mesh) if a in ("pod", "data")]
+            spec[b_dim] = _collapse(axes)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

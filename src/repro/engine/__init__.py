@@ -1,0 +1,4 @@
+"""Compiled unlearning engine: fused per-layer step + cross-request program
+cache. See DESIGN.md."""
+from .fused import TRACE_LOG, build_fused_step, shape_signature  # noqa: F401
+from .session import UnlearnSession  # noqa: F401

@@ -1,0 +1,132 @@
+"""Fused per-layer unlearning step — one device program per layer shape.
+
+The legacy driver (``core.cau.context_adaptive_unlearn_legacy``) lowers THREE
+separate device programs per layer: the vjp backward sweep, the Fisher
+square-accumulate, and the dampening edit.  Between programs the gradient and
+Fisher tensors make full HBM round trips — the software analogue of the DRAM
+streaming the paper's FIMD/Dampening IP fusion eliminates.  ``build_fused_step``
+lowers the whole per-layer step as ONE jitted program:
+
+  * backward GEMMs (vjp on the layer's original weights),
+  * Fisher square-accumulate as a fused epilogue of the wgrad (FIMD IP),
+  * select/beta/multiply consuming the Fisher in-register (Dampening IP,
+    optionally through the Pallas ``kernels.dampen`` path),
+
+with the layer parameter buffer donated so the edit happens in place.  Per
+parameter the fused program reads theta once and writes theta' once; the
+gradient and per-layer Fisher never exist as standalone HBM tensors.  See
+DESIGN.md §"Compiled unlearning engine" for the memory-traffic argument.
+
+(alpha, lambda) arrive as a traced [2] f32 vector so Balanced Dampening's
+per-layer S(l)-scaled values never trigger recompilation — the same contract
+as the Pallas kernel's (1, 2) scalar block.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cau import _restore_excluded
+from repro.core.ssd import dampen_tree
+
+F32 = jnp.float32
+Params = Any
+
+# Appended (a tag string) every time a fused/partial program body is TRACED —
+# python in a jitted function runs only at trace time, so tests count entries
+# here to prove the program cache eliminates retraces.
+TRACE_LOG: List[str] = []
+
+
+def _note_trace(tag: str) -> None:
+    TRACE_LOG.append(tag)
+
+
+def shape_signature(tree: Params) -> Hashable:
+    """Hashable (treedef, leaf shapes/dtypes) key for a pytree of arrays or
+    ShapeDtypeStructs. Two trees with equal signatures lower to the same
+    program."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef,
+            tuple((tuple(x.shape), jnp.dtype(x.dtype).name) for x in leaves))
+
+
+def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
+                     *,
+                     with_act_grad: bool = True,
+                     use_kernel: bool = False,
+                     exclude: Optional[Callable[[str], bool]] = None,
+                     donate: Optional[bool] = None,
+                     tag: str = "fused",
+                     jit_kwargs: Optional[dict] = None):
+    """Build the fused per-layer program.
+
+    ``apply_fn(ctx, layer_p, act) -> out`` is the layer forward; ``ctx`` is
+    whatever traced context the adapter needs beyond the layer's own params
+    (None for self-contained layers).  Returns a jitted
+
+        step(ctx, layer_p, fisher_g, acts_c, cot_c, scalars)
+            -> (new_layer, act_cotangents, n_selected)
+
+    where ``acts_c``/``cot_c`` are chunked [nc, cs, ...] activations and
+    upstream cotangents, ``scalars = [alpha, lam]`` (f32, traced), and
+    ``layer_p`` serves both roles of the legacy path: vjp reference AND edit
+    target (the CAU sweep touches each layer exactly once per request, so
+    when layer l is visited its current params still equal the originals).
+
+    ``donate=None`` donates the layer buffer on accelerator backends only
+    (CPU XLA has no donation and would warn on every call).
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def _grad_chunk(ctx, layer_p, a, c):
+        """One chunk's layer-parameter gradient (+ activation cotangent)."""
+        if with_act_grad:
+            _, vjp_fn = jax.vjp(
+                lambda lp, aa: apply_fn(ctx, lp, aa), layer_p, a)
+            return vjp_fn(c)
+        _, vjp_fn = jax.vjp(lambda lp: apply_fn(ctx, lp, a), layer_p)
+        (g_lp,) = vjp_fn(c)
+        return g_lp, jnp.zeros((), F32)
+
+    def step(ctx, layer_p, fisher_g, acts_c, cot_c, scalars):
+        _note_trace(tag)
+        alpha, lam = scalars[0], scalars[1]
+        nc = jax.tree_util.tree_leaves(acts_c)[0].shape[0]
+
+        if nc == 1:
+            # single chunk: straight-line — a lax.scan of length 1 would
+            # force the f32 Fisher carry through HBM between "iterations".
+            a = jax.tree_util.tree_map(lambda x: x[0], acts_c)
+            c = jax.tree_util.tree_map(lambda x: x[0], cot_c)
+            g_lp, g_a = _grad_chunk(ctx, layer_p, a, c)
+            g_acts = jax.tree_util.tree_map(lambda x: x[None], g_a)
+            fish = jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_lp)
+        else:
+            fish0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, F32), layer_p)
+
+            def body(fish, inp):
+                a, c = inp
+                g_lp, g_a = _grad_chunk(ctx, layer_p, a, c)
+                fish = jax.tree_util.tree_map(
+                    lambda f, g: f + g.astype(F32) ** 2, fish, g_lp)
+                return fish, g_a
+
+            fish, g_acts = jax.lax.scan(body, fish0, (acts_c, cot_c))
+            fish = jax.tree_util.tree_map(lambda f: f / nc, fish)
+
+        new_layer, masks = dampen_tree(layer_p, fish, fisher_g, alpha, lam,
+                                       use_kernel=use_kernel)
+        if exclude is not None:
+            new_layer = _restore_excluded(exclude, new_layer, layer_p)
+        n_sel = sum(jnp.sum(m) for m in jax.tree_util.tree_leaves(masks))
+        return new_layer, g_acts, n_sel
+
+    kw = dict(jit_kwargs or {})
+    if donate:
+        kw.setdefault("donate_argnums", (1,))
+    return jax.jit(step, **kw)

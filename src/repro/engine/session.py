@@ -1,0 +1,242 @@
+"""UnlearnSession — the warm, compiled unlearning engine.
+
+Holds the adapter, the global Fisher importance, and a cross-request program
+cache so a serving device pays compilation ONCE:
+
+  * fused per-layer steps are cached by (layer kind, shape signature): all
+    layers sharing a block shape within one sweep — every ViT/LM block —
+    reuse one executable, and the 2nd..Nth forget request retraces nothing;
+  * checkpoint partial inference is ONE program with the start depth j as a
+    *traced* operand (blocks before j take a lax.cond identity branch), so
+    there is no per-j program family at all when layer activations are
+    shape-uniform (LM/ViT/enc-dec); heterogeneous models (ResNet) fall back
+    to per-depth programs that are still cached across requests.
+
+The host drives the layer loop / checkpoint decisions / early stop exactly
+as the RISC-V core drives the paper's processor; everything else is compiled.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cau import (ModelAdapter, UnlearnConfig, _chunk,
+                            _layer_param_counts, _logit_cotangents)
+from repro.core.metrics import MacCounter
+from repro.core.schedule import checkpoint_set, sigmoid_profile
+
+from .fused import _note_trace, build_fused_step, shape_signature
+
+F32 = jnp.float32
+Params = Any
+
+
+class UnlearnSession:
+    """Compiled unlearning engine bound to (adapter, fisher_global).
+
+    ``donate=None`` lets each fused step donate the layer buffer on
+    accelerator backends (the in-place edit path); the default ``False`` is
+    safe when callers keep references to the pre-edit parameter tree.
+    """
+
+    def __init__(self, adapter: ModelAdapter, fisher_global: Params,
+                 *, donate: bool = False):
+        self.adapter = adapter
+        self.fisher_global = fisher_global
+        self.donate = donate
+        self._fused: Dict[Hashable, Callable] = {}
+        self._partial: Dict[Hashable, Callable] = {}
+        self.stats: Dict[str, int] = {
+            "requests": 0,
+            "fused_compiles": 0, "fused_hits": 0,
+            "partial_compiles": 0, "partial_hits": 0,
+        }
+
+    # -- program cache ------------------------------------------------------
+    def _layer_key(self, j: int) -> Hashable:
+        lk = getattr(self.adapter, "layer_key", None)
+        return ("j", j) if lk is None else lk(j)
+
+    def _layer_ctx(self, params: Params, j: int) -> Params:
+        """Traced context the layer forward needs beyond its own params.
+        Adapters that are self-contained per layer return None; the default
+        (no hook) passes the full tree, which is always correct."""
+        lc = getattr(self.adapter, "layer_ctx", None)
+        return params if lc is None else lc(params, j)
+
+    def fused_program(self, j: int, ctx, layer_p, acts_c, cot_c,
+                      cfg: UnlearnConfig) -> Callable:
+        """The fused per-layer step for depth j, from cache when the layer's
+        kind + shapes were seen before (this request or any earlier one)."""
+        with_act = j > 0
+        key = ("fused", self._layer_key(j), shape_signature(ctx),
+               shape_signature(layer_p), shape_signature(acts_c),
+               shape_signature(cot_c), with_act, cfg.use_kernel,
+               self.adapter.exclude is not None)
+        prog = self._fused.get(key)
+        if prog is None:
+            adapter = self.adapter
+
+            def apply_fn(c, lp, a, _j=j):
+                return adapter.apply_layer(c, _j, lp, a)
+
+            prog = build_fused_step(
+                apply_fn, with_act_grad=with_act, use_kernel=cfg.use_kernel,
+                exclude=adapter.exclude, donate=self.donate,
+                tag=f"fused:{self._layer_key(j)}")
+            self._fused[key] = prog
+            self.stats["fused_compiles"] += 1
+        else:
+            self.stats["fused_hits"] += 1
+        return prog
+
+    # -- checkpoint partial inference ---------------------------------------
+    def _uniform_suffix(self, acts: List[jax.Array]) -> bool:
+        """True when every block input (depths 1..L-2) and the head input
+        share shape+dtype, so one traced-j program covers all checkpoints."""
+        L = self.adapter.n_layers
+        if L < 3:
+            return False
+        ref = acts[1]
+        return all(a.shape == ref.shape and a.dtype == ref.dtype
+                   for a in acts[1:L])
+
+    def _suffix_program(self, params, act, labels) -> Callable:
+        adapter = self.adapter
+        L = adapter.n_layers
+        key = ("suffix", shape_signature(params), shape_signature(act),
+               shape_signature(labels))
+        prog = self._partial.get(key)
+        if prog is None:
+            def run(prm, a, lbl, j):
+                _note_trace("suffix")
+                x = a
+                for jj in range(1, L - 1):
+                    lp = adapter.get_layer(prm, jj)
+
+                    def live(xx, _jj=jj, _lp=lp, _prm=prm):
+                        return adapter.apply_layer(_prm, _jj, _lp, xx)
+
+                    x = jax.lax.cond(jj >= j, live, lambda xx: xx, x)
+                x = adapter.apply_layer(prm, L - 1,
+                                        adapter.get_layer(prm, L - 1), x)
+                return adapter.acc(x, lbl)
+
+            prog = jax.jit(run)
+            self._partial[key] = prog
+            self.stats["partial_compiles"] += 1
+        else:
+            self.stats["partial_hits"] += 1
+        return prog
+
+    def _perj_program(self, j: int, params, act, labels) -> Callable:
+        adapter = self.adapter
+        L = adapter.n_layers
+        key = ("partial", j, shape_signature(params), shape_signature(act),
+               shape_signature(labels))
+        prog = self._partial.get(key)
+        if prog is None:
+            def run(prm, a, lbl, _j=j):
+                _note_trace(f"partial:{_j}")
+                x = a
+                for jj in range(_j, L):
+                    x = adapter.apply_layer(prm, jj,
+                                            adapter.get_layer(prm, jj), x)
+                return adapter.acc(x, lbl)
+
+            prog = jax.jit(run)
+            self._partial[key] = prog
+            self.stats["partial_compiles"] += 1
+        else:
+            self.stats["partial_hits"] += 1
+        return prog
+
+    def partial_acc(self, j: int, params, act, labels, uniform: bool) -> float:
+        """Forget accuracy by partial inference: the cached activation at
+        depth j pushed through the already-edited suffix j..L-1."""
+        if uniform and j >= 1:
+            prog = self._suffix_program(params, act, labels)
+            return float(prog(params, act, labels, jnp.int32(j)))
+        return float(self._perj_program(j, params, act, labels)(
+            params, act, labels))
+
+    # -- the drive loop -----------------------------------------------------
+    def forget(self, params: Params, inputs: Any, labels: jax.Array,
+               cfg: UnlearnConfig) -> Tuple[Params, Dict]:
+        """One forget request: Algorithm 1 (+ optional Balanced Dampening)
+        through the compiled engine. Returns (params', stats)."""
+        adapter = self.adapter
+        self.stats["requests"] += 1
+        hits0 = self.stats["fused_hits"] + self.stats["partial_hits"]
+        comp0 = self.stats["fused_compiles"] + self.stats["partial_compiles"]
+
+        L = adapter.n_layers
+        cps = (set(checkpoint_set(L, cfg.checkpoint_every))
+               if 0 < cfg.checkpoint_every <= L else set())
+        S = (sigmoid_profile(L, cfg.b_r, cfg.c_m) if cfg.balanced
+             else np.ones(L))
+
+        prm_counts = _layer_param_counts(adapter, params)
+        macs = MacCounter(adapter.layer_fwd_macs, prm_counts,
+                          batch=int(jax.tree_util.tree_leaves(labels)[0].shape[0]))
+
+        logits, acts = adapter.forward_collect(params, inputs)
+        macs.add_forward_all()
+        uniform = self._uniform_suffix(acts)
+
+        cs = cfg.chunk_size
+        labels_c = _chunk(labels, cs)
+        cot = _logit_cotangents(adapter.loss, _chunk(logits, cs), labels_c)
+
+        stats: Dict[str, Any] = {
+            "stopped_at_l": L, "checkpoints_hit": [], "selected_per_layer": {},
+            "forget_acc_trace": [], "profile_S": S.tolist(),
+        }
+        sweep_limit = cfg.max_layers or L
+
+        for l in range(1, min(L, sweep_limit) + 1):  # paper index, back->front
+            j = L - l
+            layer_p = adapter.get_layer(params, j)  # untouched == original
+            ctx = self._layer_ctx(params, j)
+            acts_c = _chunk(acts[j], cs)
+            s = float(S[l - 1])
+            scalars = jnp.asarray([cfg.alpha * s, cfg.lam * s], F32)
+            fg_layer = adapter.get_layer(self.fisher_global, j)
+
+            step = self.fused_program(j, ctx, layer_p, acts_c, cot, cfg)
+            new_layer, g_acts, n_sel = step(ctx, layer_p, fg_layer,
+                                            acts_c, cot, scalars)
+            macs.add_backward_layer(j)
+            macs.add_fisher_layer(j)
+            macs.add_dampen_layer(j)
+
+            params = adapter.set_layer(params, j, new_layer)
+            stats["selected_per_layer"][l] = int(n_sel)
+            cot = g_acts if j > 0 else None
+
+            if l in cps:
+                a_forget = self.partial_acc(j, params, acts[j], labels, uniform)
+                macs.add_partial_inference(j, L)
+                stats["checkpoints_hit"].append(l)
+                stats["forget_acc_trace"].append((l, a_forget))
+                if a_forget <= cfg.tau:
+                    stats["stopped_at_l"] = l
+                    break
+        else:
+            stats["stopped_at_l"] = min(L, sweep_limit)
+
+        stats["macs"] = macs.total
+        stats["macs_ssd"] = MacCounter.ssd_total(adapter.layer_fwd_macs,
+                                                 prm_counts, macs.batch)
+        stats["macs_vs_ssd_pct"] = 100.0 * macs.total / max(stats["macs_ssd"], 1)
+        stats["engine"] = {
+            "compiles": (self.stats["fused_compiles"]
+                         + self.stats["partial_compiles"]) - comp0,
+            "cache_hits": (self.stats["fused_hits"]
+                           + self.stats["partial_hits"]) - hits0,
+            "uniform_suffix": uniform,
+        }
+        return params, stats

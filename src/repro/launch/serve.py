@@ -1,20 +1,27 @@
 """Serving launcher with in-place unlearning between batches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
-        --requests 8 --gen-len 16
+        --requests 8 --gen-len 16 --forget-domains 1,2
 
 Serving loop: batched requests -> prefill (forward) -> iterative decode with
-KV caches / recurrent states.  A forget request can arrive at ANY point; the
-server drains in-flight batches, applies FiCABU dampening in place (no
-retraining, no weight reload — the paper's deployment story), and continues
-serving with the edited weights.
+KV caches / recurrent states.  Forget requests can arrive at ANY point; the
+server enqueues them, drains in-flight batches, applies FiCABU dampening in
+place (no retraining, no weight reload — the paper's deployment story), and
+continues serving with the edited weights.
+
+The server keeps ONE warm ``repro.engine.UnlearnSession`` across all forget
+requests: the first request pays compilation for each unique layer shape,
+every later request replays cached executables with zero retraces (asserted
+by tests/test_engine.py).  The global Fisher importance I_D is likewise
+computed once per served model, not per request.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import List
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +30,7 @@ import numpy as np
 from repro import configs
 from repro.core import adapters, ficabu, fisher
 from repro.data import LMDataConfig, lm_split_forget_retain, make_lm_domains
+from repro.engine import UnlearnSession
 from repro.models import lm as LM
 
 
@@ -48,6 +56,75 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
     return np.stack(out, axis=1)
 
 
+class ForgetService:
+    """Queue of forget requests + the warm unlearning engine session.
+
+    ``submit`` enqueues; ``drain`` runs every due request against the
+    current weights and returns the edited weights. The session (and with
+    it every compiled per-layer program) persists across requests."""
+
+    CHUNK = 4  # Fisher/engine chunk size; forget batches are trimmed to it
+
+    def __init__(self, cfg, tokens, domains, seq_len: int):
+        self.cfg = cfg
+        self.tokens = tokens
+        self.domains = domains
+        self.queue: Deque[Dict] = deque()
+        self.adapter = adapters.lm_adapter(cfg, seq_len - 1)
+        self.session: Optional[UnlearnSession] = None
+        self.log: List[Dict] = []
+
+    def submit(self, domain: int, due_batch: int) -> None:
+        self.queue.append({"domain": domain, "due_batch": due_batch})
+
+    def _warm(self, params):
+        if self.session is None:
+            def loss_fn(p, b):
+                return LM.lm_loss(p, self.cfg, b[0], b[1], aux_weight=0.0)
+            sample = self.tokens[:32]
+            i_d = fisher.diag_fisher(loss_fn, params,
+                                     (sample[:, :-1], sample[:, 1:]),
+                                     chunk_size=self.CHUNK)
+            self.session = UnlearnSession(self.adapter, i_d)
+
+    def drain(self, params, batch_idx: int):
+        """Run all requests due at ``batch_idx``; returns (params, ran_any)."""
+        ran = False
+        while self.queue and self.queue[0]["due_batch"] <= batch_idx:
+            req = self.queue.popleft()
+            splits = lm_split_forget_retain(self.tokens, self.domains,
+                                            req["domain"])
+            fb = splits["forget"][:8]
+            fb = fb[:len(fb) - len(fb) % self.CHUNK]
+            if len(fb) == 0:
+                self.log.append({"domain": req["domain"], "batch": batch_idx,
+                                 "skipped": "no forget samples"})
+                print(f"[serve] forget request for domain {req['domain']} "
+                      "skipped: no samples in that domain", flush=True)
+                continue
+            self._warm(params)
+            t0 = time.time()
+            params, stats = ficabu.unlearn(
+                self.adapter, params, self.session.fisher_global,
+                fb[:, :-1], fb[:, 1:],
+                mode="ficabu", alpha=8.0, lam=1.0, tau=0.6,
+                checkpoint_every=2, chunk_size=self.CHUNK,
+                session=self.session)
+            self.log.append({
+                "domain": req["domain"], "batch": batch_idx,
+                "latency_s": round(time.time() - t0, 3),
+                "stopped_at_l": stats["stopped_at_l"],
+                "macs_vs_ssd_pct": stats["macs_vs_ssd_pct"],
+                "engine": stats["engine"],
+            })
+            print(f"[serve] unlearned domain {req['domain']} in place "
+                  f"(stop_l={stats['stopped_at_l']}, "
+                  f"compiles={stats['engine']['compiles']}, "
+                  f"hits={stats['engine']['cache_hits']})", flush=True)
+            ran = True
+        return params, ran
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
@@ -56,8 +133,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--unlearn-after", type=int, default=1,
-                    help="forget request after this many batches (-1: off)")
+                    help="first forget request after this many batches "
+                         "(-1: off)")
     ap.add_argument("--forget-domain", type=int, default=1)
+    ap.add_argument("--forget-domains", default=None,
+                    help="comma-separated domains, one queued request each "
+                         "(overrides --forget-domain)")
     args = ap.parse_args(argv)
 
     spec = configs.get(args.arch)
@@ -74,41 +155,35 @@ def main(argv=None) -> dict:
     decode_jit = jax.jit(
         lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))
 
+    svc = ForgetService(cfg, tokens, domains, dcfg.seq_len)
+    if args.unlearn_after >= 0:
+        doms = ([int(d) for d in args.forget_domains.split(",")]
+                if args.forget_domains else [args.forget_domain])
+        for i, d in enumerate(doms):
+            svc.submit(d, due_batch=args.unlearn_after + i)
+
     served: List[dict] = []
     batches = [tokens[i:i + args.requests, :args.prompt_len]
                for i in range(0, len(tokens) - args.requests,
                               args.requests)][:3]
-    unlearned = False
-    stats = {}
     for bi, prompts in enumerate(batches):
         t0 = time.time()
         gen = generate(params, cfg, jnp.asarray(prompts), args.gen_len,
                        decode_jit)
         served.append({"batch": bi, "latency_s": round(time.time() - t0, 3),
                        "tokens": int(gen.size)})
-        if bi + 1 == args.unlearn_after and not unlearned:
-            # forget request arrives: dampen in place, keep serving
-            def loss_fn(p, b):
-                return LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
-            sample = tokens[:32]
-            I_D = fisher.diag_fisher(loss_fn, params,
-                                     (sample[:, :-1], sample[:, 1:]),
-                                     chunk_size=4)
-            splits = lm_split_forget_retain(tokens, domains,
-                                            args.forget_domain)
-            fb = splits["forget"][:8]
-            adapter = adapters.lm_adapter(cfg, fb.shape[1] - 1)
-            params, stats = ficabu.unlearn(
-                adapter, params, I_D, fb[:, :-1], fb[:, 1:],
-                mode="ficabu", alpha=8.0, lam=1.0, tau=0.6,
-                checkpoint_every=2, chunk_size=4)
-            unlearned = True
-            print(f"[serve] unlearned domain {args.forget_domain} in place "
-                  f"(stop_l={stats['stopped_at_l']})", flush=True)
+        params, _ = svc.drain(params, bi + 1)
+    # flush requests still queued past the last served batch — a forget
+    # request must never be silently dropped at shutdown
+    params, _ = svc.drain(params, float("inf"))
 
-    result = {"served": served, "unlearned": unlearned,
-              "unlearn_stats": {k: stats.get(k) for k in
-                                ("stopped_at_l", "macs_vs_ssd_pct")}}
+    done = [r for r in svc.log if "engine" in r]
+    last = done[-1] if done else {}
+    result = {"served": served, "unlearned": bool(done),
+              "unlearn_requests": svc.log,
+              "unlearn_stats": {k: last.get(k) for k in
+                                ("stopped_at_l", "macs_vs_ssd_pct")},
+              "engine_stats": dict(svc.session.stats) if svc.session else {}}
     print(f"[serve] done: {json.dumps(result)}", flush=True)
     return result
 

@@ -14,6 +14,12 @@ Lowers ONE per-layer CAU step for yi-6b (forget batch 64 x 4096) on the
   "fused"     the TPU re-design (DESIGN.md §2): one program — Fisher is a
               fused epilogue of the wgrad GEMM and dampening consumes it
               in-register; gradients never hit HBM as a standalone tensor.
+              This is the PRODUCTION per-layer step: the same
+              ``repro.engine.build_fused_step`` program the serving
+              engine caches per layer shape, lowered on the pod mesh.
+              (Buffer donation is a no-op under this script's forced CPU
+              host devices, so the analysed program excludes the in-place
+              aliasing a real TPU lowering would add.)
 
 Reported: per-variant roofline terms; the delta is the pod-scale analogue of
 the paper's FIMD/Dampening IP fusion wins.
@@ -87,14 +93,6 @@ def run() -> dict:
         new, _ = dampen_tree(blk, fish, fish_global, ALPHA, LAM)
         return new
 
-    def fused_program(blk, act, cot, fish_global):
-        _, vjp = jax.vjp(layer, blk, act)
-        g_blk, g_act = vjp(cot)
-        fish = jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_blk)
-        from repro.core.ssd import dampen_tree
-        new, _ = dampen_tree(blk, fish, fish_global, ALPHA, LAM)
-        return new, g_act
-
     def analyse(name, jitted, args):
         with mesh:
             compiled = jitted.lower(*args).compile()
@@ -129,10 +127,22 @@ def run() -> dict:
         streamed["bytes"] += 2 * 2 * n_blk_bytes / mesh.devices.size
         streamed["memory_s"] = streamed["bytes"] / RL.HBM_BW
 
-        gf = jax.jit(fused_program, in_shardings=(blk_sh, None, None, None),
-                     out_shardings=(blk_sh, None))
+        # the production fused step (engine), lowered on the pod mesh:
+        # args are (ctx, layer_p, fisher_global, acts_c, cot_c, scalars)
+        # with one [1, N, S, D] chunk.
+        from repro.engine import build_fused_step
+        gf = build_fused_step(
+            lambda ctx, blk, act: layer(blk, act), donate=None,
+            jit_kwargs=dict(
+                in_shardings=(None, blk_sh, None, None, None, None),
+                out_shardings=(blk_sh, None, None)))
+        acts_c_sds = jax.ShapeDtypeStruct(
+            (1,) + act_sds.shape, act_sds.dtype,
+            sharding=NamedSharding(mesh, P(None, "data", None, None)))
+        scal_sds = jax.ShapeDtypeStruct((2,), F32)
         fused = analyse("fused", gf,
-                        (blk_shapes, act_sds, cot_sds, fisher_sds))
+                        (None, blk_shapes, fisher_sds, acts_c_sds,
+                         acts_c_sds, scal_sds))
 
     results = {"streamed": streamed, "fused": fused,
                "speedup_memory_term": streamed["memory_s"] / fused["memory_s"],

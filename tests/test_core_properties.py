@@ -3,7 +3,11 @@ Fisher estimator, Balanced Dampening schedule)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fisher, schedule
 from repro.core.ssd import dampen_array

@@ -1,0 +1,225 @@
+"""Compiled unlearning engine (repro.engine) tests:
+
+  * the fused per-layer step bit-matches the legacy 3-program path
+    (``ssd.dampen_tree`` + ``_sweep_layer``) on ResNet, ViT, and an MoE LM
+    adapter (router exclusion preserved);
+  * the program cache: one fused program per unique layer shape-signature,
+    zero new compilations (and zero retraces, counted at trace time) on the
+    2nd forget request — including through the serve.py forget queue;
+  * the single traced-depth checkpoint program agrees with per-depth
+    partial inference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adapters, cau, fisher
+from repro.data import synthetic as syn
+from repro.engine import TRACE_LOG, UnlearnSession
+from repro.models import lm as LM
+from repro.models import vision as V
+
+
+@pytest.fixture()
+def trace_log():
+    """jax trace counter: engine programs append a tag at TRACE time (python
+    in a jitted body runs only while tracing), so new entries == retraces."""
+    TRACE_LOG.clear()
+    yield TRACE_LOG
+    TRACE_LOG.clear()
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _both(adapter, params, fisher_g, inputs, labels, cfg):
+    p_legacy, s_legacy = cau.context_adaptive_unlearn_legacy(
+        adapter, params, fisher_g, inputs, labels, cfg)
+    sess = UnlearnSession(adapter, fisher_g)
+    p_engine, s_engine = sess.forget(params, inputs, labels, cfg)
+    return (p_legacy, s_legacy), (p_engine, s_engine), sess
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the legacy 3-program path
+# ---------------------------------------------------------------------------
+def test_engine_matches_legacy_resnet(trained_resnet):
+    m = trained_resnet
+    splits = syn.split_forget_retain(m["x"], m["y"], forget_class=2)
+    fx, fy = splits["forget"]
+    batches = [(m["x"][:32], m["y"][:32])]
+    i_d = fisher.diag_fisher_streaming(m["loss_fn"], m["params"], batches,
+                                       chunk_size=8)
+    adapter = adapters.resnet_adapter(m["cfg"])
+    cfg = cau.UnlearnConfig(alpha=10.0, lam=1.0, tau=1 / 6 + 0.03,
+                            checkpoint_every=2, balanced=True, chunk_size=8)
+    (pl, sl), (pe, se), _ = _both(adapter, m["params"], i_d,
+                                  fx[:32], fy[:32], cfg)
+    _assert_trees_equal(pl, pe)
+    assert sl["selected_per_layer"] == se["selected_per_layer"]
+    assert sl["stopped_at_l"] == se["stopped_at_l"]
+    assert sl["forget_acc_trace"] == se["forget_acc_trace"]
+    assert sl["macs"] == se["macs"]
+
+
+def test_engine_matches_legacy_vit(key):
+    cfg_m = V.ViTConfig(name="vit-t", n_layers=4, d_model=32, n_heads=2,
+                        d_ff=64, n_classes=6, img_size=16, patch=4)
+    params = V.init_vit(key, cfg_m)
+    dcfg = syn.ClsDataConfig(n_classes=6, n_per_class=8, img_size=16, seed=0)
+    x, y = syn.make_classification(dcfg)
+    loss_fn = lambda p, b: V.cls_loss(V.vit_forward(p, cfg_m, b[0]), b[1])
+    i_d = fisher.diag_fisher(loss_fn, params, (x[:16], y[:16]), chunk_size=8)
+    adapter = adapters.vit_adapter(cfg_m)
+    cfg = cau.UnlearnConfig(alpha=5.0, lam=1.0, tau=-1.0, checkpoint_every=2,
+                            balanced=True, chunk_size=8)
+    (pl, sl), (pe, se), sess = _both(adapter, params, i_d, x[:16], y[:16], cfg)
+    _assert_trees_equal(pl, pe)
+    assert sl["selected_per_layer"] == se["selected_per_layer"]
+    # all 4 encoder blocks share ONE fused program: patch + head + blk = 3
+    assert sess.stats["fused_compiles"] == 3
+    assert sess.stats["fused_hits"] == 3
+
+
+def test_engine_matches_legacy_moe_lm(key):
+    cfg_m = LM.LMConfig(name="moe-t", n_layers=2, d_model=32, n_heads=4,
+                        n_kv_heads=2, d_ff=64, vocab=64,
+                        moe=LM.MoESpec(num_experts=4, top_k=2))
+    dcfg = syn.LMDataConfig(vocab=64, n_domains=2, seq_len=16,
+                            n_per_domain=8, seed=0)
+    toks, _ = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(key, cfg_m)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg_m, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:, :-1], toks[:, 1:]),
+                             chunk_size=4)
+    adapter = adapters.lm_adapter(cfg_m, 16)
+    assert adapter.exclude is not None  # router exclusion active
+    fb = toks[:8]
+    cfg = cau.UnlearnConfig(alpha=4.0, lam=0.5, tau=-1.0, checkpoint_every=1,
+                            balanced=True, chunk_size=4)
+    (pl, sl), (pe, se), _ = _both(adapter, params, i_d,
+                                  fb[:, :-1], fb[:, 1:], cfg)
+    _assert_trees_equal(pl, pe)
+    assert sl["selected_per_layer"] == se["selected_per_layer"]
+    # routers must come through the fused step untouched
+    for j in range(1, cfg_m.n_layers + 1):
+        orig = adapter.get_layer(params, j)["ffn"]["router"]
+        new = adapter.get_layer(pe, j)["ffn"]["router"]
+        np.testing.assert_array_equal(np.asarray(orig), np.asarray(new))
+
+
+# ---------------------------------------------------------------------------
+# program cache: zero retraces after warm-up
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lm_setting():
+    cfg_m = LM.LMConfig(name="t", n_layers=4, d_model=32, n_heads=4,
+                        n_kv_heads=2, d_ff=64, vocab=64)
+    dcfg = syn.LMDataConfig(vocab=64, n_domains=4, seq_len=16,
+                            n_per_domain=8, seed=1)
+    toks, _ = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg_m)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg_m, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:, :-1], toks[:, 1:]),
+                             chunk_size=4)
+    return {"cfg": cfg_m, "toks": toks, "params": params, "i_d": i_d,
+            "adapter": adapters.lm_adapter(cfg_m, 16)}
+
+
+def test_second_request_zero_compiles_and_traces(lm_setting, trace_log):
+    m = lm_setting
+    fb = m["toks"][:8]
+    cfg = cau.UnlearnConfig(alpha=6.0, lam=0.5, tau=-1.0, checkpoint_every=2,
+                            balanced=True, chunk_size=4)
+    sess = UnlearnSession(m["adapter"], m["i_d"])
+    _, s1 = sess.forget(m["params"], fb[:, :-1], fb[:, 1:], cfg)
+    assert s1["engine"]["compiles"] > 0
+    # transformer blocks share one program: 4 blocks -> >=3 fused hits
+    assert sess.stats["fused_hits"] >= 3
+
+    trace_log.clear()
+    p2, s2 = sess.forget(m["params"], fb[:, :-1], fb[:, 1:], cfg)
+    assert s2["engine"]["compiles"] == 0
+    assert s2["engine"]["cache_hits"] > 0
+    assert len(trace_log) == 0, f"unexpected retraces: {trace_log}"
+
+    # Balanced-Dampening per-layer (alpha, lam) scaling arrives as traced
+    # scalars: changing hyperparameters must not retrace either.
+    cfg2 = cau.UnlearnConfig(alpha=9.0, lam=0.7, tau=-1.0, checkpoint_every=2,
+                             balanced=True, b_r=5.0, chunk_size=4)
+    _, s3 = sess.forget(m["params"], fb[:, :-1], fb[:, 1:], cfg2)
+    assert s3["engine"]["compiles"] == 0
+    assert len(trace_log) == 0
+
+
+def test_legacy_driver_retraces_checkpoints(lm_setting):
+    """The regression the engine fixes: the legacy driver rebuilds its
+    per-checkpoint jits on every call (partial_fns is per-call state)."""
+    m = lm_setting
+    fb = m["toks"][:8]
+    cfg = cau.UnlearnConfig(alpha=6.0, lam=0.5, tau=-1.0, checkpoint_every=2,
+                            chunk_size=4)
+    counter = {"n": 0}
+    orig_jit = jax.jit
+
+    def counting_jit(*a, **kw):
+        counter["n"] += 1
+        return orig_jit(*a, **kw)
+
+    jax.jit, n0 = counting_jit, counter["n"]
+    try:
+        cau.context_adaptive_unlearn_legacy(
+            m["adapter"], m["params"], m["i_d"], fb[:, :-1], fb[:, 1:], cfg)
+        first = counter["n"] - n0
+        cau.context_adaptive_unlearn_legacy(
+            m["adapter"], m["params"], m["i_d"], fb[:, :-1], fb[:, 1:], cfg)
+        second = counter["n"] - n0 - first
+    finally:
+        jax.jit = orig_jit
+    assert first > 0
+    assert second == first  # legacy rebuilds the same programs every request
+
+
+def test_suffix_program_matches_per_depth(lm_setting):
+    """The single traced-depth checkpoint program == per-depth inference."""
+    m = lm_setting
+    adapter = m["adapter"]
+    fb = m["toks"][:8]
+    inputs, labels = fb[:, :-1], fb[:, 1:]
+    sess = UnlearnSession(adapter, m["i_d"])
+    _, acts = adapter.forward_collect(m["params"], inputs)
+    assert sess._uniform_suffix(acts)
+    for j in (1, 2, adapter.n_layers - 1):
+        a_scan = sess.partial_acc(j, m["params"], acts[j], labels,
+                                  uniform=True)
+        x = acts[j]
+        for jj in range(j, adapter.n_layers):
+            x = adapter.apply_layer(m["params"], jj,
+                                    adapter.get_layer(m["params"], jj), x)
+        a_ref = float(adapter.acc(x, labels))
+        assert a_scan == pytest.approx(a_ref, abs=1e-6), j
+    # one compile total for all three depths
+    assert sess.stats["partial_compiles"] == 1
+    assert sess.stats["partial_hits"] == 2
+
+
+# ---------------------------------------------------------------------------
+# serving path: warm session across queued forget requests
+# ---------------------------------------------------------------------------
+def test_serve_queue_second_request_zero_compiles():
+    from repro.launch import serve as serve_mod
+    res = serve_mod.main(["--arch", "gemma3-1b", "--requests", "4",
+                          "--prompt-len", "8", "--gen-len", "4",
+                          "--unlearn-after", "1", "--forget-domains", "1,2"])
+    reqs = res["unlearn_requests"]
+    assert len(reqs) == 2
+    assert reqs[0]["engine"]["compiles"] > 0
+    assert reqs[1]["engine"]["compiles"] == 0, reqs[1]
+    assert reqs[1]["engine"]["cache_hits"] > 0
+    # and the edited model kept serving
+    assert len(res["served"]) >= 2
