@@ -1,0 +1,111 @@
+"""CI bench regression gate.
+
+Compares the freshly measured smoke-bench JSONs against the committed
+baselines and fails (exit 1) when a warm serving path regressed by more
+than ``--max-ratio`` (default 2x).
+
+Absolute wall-clock is not comparable across machines (a CI runner vs the
+box that produced the committed baseline differ severalfold), so each gated
+warm-path time is NORMALISED by a reference measured in the SAME run and
+recorded in the same JSON — the legacy sweep for the engine, the
+sequential/tokenwise paths for serving. The gate then compares the
+fresh normalised cost against the committed normalised cost: a genuine
+engine or serving regression (a lost program cache, a de-coalesced drain,
+prefill falling back to per-token dispatch) moves the normalised number by
+10-100x; machine speed cancels out.
+
+    python -m benchmarks.check_regression \
+        --baseline-dir /tmp/bench-baseline --fresh-dir .
+
+A missing baseline file passes with a note (first run on a branch that
+introduces a new benchmark); a missing FRESH file fails — the smoke bench
+must produce it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# file -> (warm-path key, same-run reference key) pairs; the gated metric is
+# warm/reference, i.e. the warm path's cost relative to its unoptimised
+# sibling measured on the same machine in the same process.
+GATED = {
+    "BENCH_engine.json": (
+        ("engine_warm_s", "legacy_warm_s"),
+    ),
+    "BENCH_serve.json": (
+        ("coalesced_warm_per_domain_s", "sequential_warm_per_domain_s"),
+        ("prefill_chunked_s", "prefill_tokenwise_s"),
+    ),
+}
+
+
+def _norm(rec: dict, warm_key: str, ref_key: str):
+    if warm_key not in rec or ref_key not in rec:
+        return None
+    ref = float(rec[ref_key])
+    return float(rec[warm_key]) / ref if ref > 0 else float("inf")
+
+
+def check(baseline_dir: str, fresh_dir: str, max_ratio: float) -> int:
+    failures = 0
+    for fname, pairs in GATED.items():
+        base_path = os.path.join(baseline_dir, fname)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            print(f"[check_regression] FAIL {fname}: fresh run did not "
+                  f"produce it (looked in {fresh_dir})")
+            failures += 1
+            continue
+        if not os.path.exists(base_path):
+            print(f"[check_regression] note: no committed baseline {fname}; "
+                  "skipping (new benchmark)")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        for warm_key, ref_key in pairs:
+            b = _norm(base, warm_key, ref_key)
+            if b is None:
+                print(f"[check_regression] note: baseline {fname} lacks "
+                      f"{warm_key}/{ref_key}; skipping key")
+                continue
+            fr = _norm(fresh, warm_key, ref_key)
+            if fr is None:
+                print(f"[check_regression] FAIL {fname}: fresh run lacks "
+                      f"{warm_key}/{ref_key}")
+                failures += 1
+                continue
+            ratio = fr / b if b > 0 else float("inf")
+            verdict = "ok" if ratio <= max_ratio else "FAIL"
+            print(f"[check_regression] {verdict} {fname}:{warm_key} "
+                  f"normalised by {ref_key}: baseline={b:.4f} fresh={fr:.4f} "
+                  f"ratio={ratio:.2f} (max {max_ratio:.1f})")
+            if ratio > max_ratio:
+                failures += 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory the smoke benchmarks wrote into")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when fresh/baseline normalised cost "
+                         "exceeds this")
+    args = ap.parse_args(argv)
+    failures = check(args.baseline_dir, args.fresh_dir, args.max_ratio)
+    if failures:
+        print(f"[check_regression] {failures} gated metric(s) regressed")
+        return 1
+    print("[check_regression] all gated metrics within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,11 @@ wall-clock is NOT the TPU story.  What we measure + derive instead:
      (paper: 7.9x);
   3. the compiled unlearning ENGINE vs the legacy three-programs-per-layer
      sweep on the smoke LM config: steady-state (2nd..Nth forget request)
-     wall-clock per request, recorded to BENCH_engine.json.
+     wall-clock per request, recorded to BENCH_engine.json;
+  4. the SERVING hot paths: coalesced multi-domain drain vs sequential
+     per-domain sweeps, and chunked prefill vs the token-by-token decode
+     walk, recorded to BENCH_serve.json (gated by
+     benchmarks/check_regression.py in CI).
 """
 from __future__ import annotations
 
@@ -29,6 +33,112 @@ N = 1 << 22  # 4M params
 
 BENCH_ENGINE_PATH = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_engine.json")
+BENCH_SERVE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_serve.json")
+
+
+def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
+                ) -> dict:
+    """The two serving hot paths, steady state, recorded to BENCH_serve.json:
+
+      1. coalesced K-domain drain (ONE ``forget_many`` sweep) vs K sequential
+         single-domain sweeps through the same warm session;
+      2. chunked prefill (``LM.prefill``, blocks of tokens per dispatch) vs
+         the legacy token-by-token walk of the decode path.
+    """
+    from repro import configs
+    from repro.core import adapters, cau, fisher
+    from repro.data import synthetic as syn
+    from repro.engine import UnlearnSession
+    from repro.models import lm as LM
+
+    cfg = configs.get(arch).smoke
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=24,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:16, :-1], toks[:16, 1:]),
+                             chunk_size=4)
+    adapter = adapters.lm_adapter(cfg, 24)
+    ucfg = cau.UnlearnConfig(alpha=8.0, lam=1.0, tau=-1.0, checkpoint_every=2,
+                             balanced=True, chunk_size=4)
+    sets = []
+    for d in range(n_domains):
+        fb = toks[doms == d][:8]
+        sets.append((fb[:, :-1], fb[:, 1:]))
+
+    sess = UnlearnSession(adapter, i_d)
+    # warm both program families (single-set + split-edit group variants)
+    sess.forget(params, *sets[0], ucfg)
+    _, _, g_warm = sess.forget_many(params, sets, ucfg)
+
+    t0 = time.time()
+    for _ in range(reps):
+        for s in sets:
+            sess.forget(params, *s, ucfg)
+    t_seq = (time.time() - t0) / (reps * n_domains)
+
+    t0 = time.time()
+    for _ in range(reps):
+        _, _, gs = sess.forget_many(params, sets, ucfg)
+    t_coal = (time.time() - t0) / (reps * n_domains)
+    assert gs["engine"]["compiles"] == 0, "warm coalesced drain recompiled!"
+
+    # --- chunked prefill vs token-by-token decode-path walk
+    B, P, G = 8, 16, 8
+    prompts = jnp.asarray(toks[:B, :P])
+    decode_jit = jax.jit(lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))
+
+    def tokenwise():
+        cache = LM.init_cache(cfg, B, P + G)
+        lg = None
+        for i in range(P):
+            lg, cache = decode_jit(params, cache, prompts[:, i:i + 1],
+                                   jnp.int32(i))
+        return lg
+
+    def chunked():
+        cache = LM.init_cache(cfg, B, P + G)
+        lg, cache = LM.prefill(params, cfg, prompts, cache, block=8)
+        return lg
+
+    tokenwise()[0].block_until_ready()
+    chunked()[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        tokenwise()[0].block_until_ready()
+    t_tok = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        chunked()[0].block_until_ready()
+    t_chunk = (time.time() - t0) / reps
+
+    out = {
+        "config": (f"{arch}-smoke: {n_domains}-domain drain, forget batch "
+                   f"8 x 24; prefill {B} x {P} tokens, block 8"),
+        "sequential_warm_per_domain_s": t_seq,
+        "coalesced_warm_per_domain_s": t_coal,
+        "coalesce_speedup": t_seq / t_coal,
+        "coalesced_compiles_warm": int(gs["engine"]["compiles"]),
+        "prefill_tokenwise_s": t_tok,
+        "prefill_chunked_s": t_chunk,
+        "prefill_speedup": t_tok / t_chunk,
+    }
+    with open(BENCH_SERVE_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print("# Serving hot paths (steady state)")
+    print(f"forget sweep  sequential {t_seq:8.4f}s/domain  "
+          f"coalesced {t_coal:8.4f}s/domain  "
+          f"speedup {out['coalesce_speedup']:.2f}x")
+    print(f"prefill       tokenwise  {t_tok:8.4f}s        "
+          f"chunked   {t_chunk:8.4f}s        "
+          f"speedup {out['prefill_speedup']:.2f}x")
+    print(f"kernels_bench,coalesced_sweep,{t_coal * 1e6:.0f},"
+          f"speedup={out['coalesce_speedup']:.2f}")
+    print(f"kernels_bench,chunked_prefill,{t_chunk * 1e6:.0f},"
+          f"speedup={out['prefill_speedup']:.2f}")
+    return out
 
 
 def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
@@ -160,6 +270,7 @@ def main() -> dict:
     print(f"kernels_bench,fimd,{t_fused:.0f},speedup={out['fimd_cpu_speedup']:.2f}")
     print(f"kernels_bench,dampen,{t_fd:.0f},speedup={out['dampen_cpu_speedup']:.2f}")
     out["engine"] = engine_bench()
+    out["serve"] = serve_bench()
     return out
 
 

@@ -35,13 +35,18 @@ def main() -> None:
         jobs = {k: jobs[k] for k in SMOKE_JOBS}
     elif which != "all":
         jobs = {which: jobs[which]}
+    failed = []
     for name, fn in jobs.items():
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         try:
             fn()
         except Exception as e:  # keep the harness going; report at the end
             print(f"{name},FAILED,0,error={e!r}")
-    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+            failed.append(name)
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s"
+          + (f", FAILED: {failed}" if failed else ""))
+    if failed:  # CI must not treat a crashed benchmark as a quiet pass
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

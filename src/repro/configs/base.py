@@ -22,9 +22,18 @@ class ShapeCell:
 SHAPES: Dict[str, ShapeCell] = {
     "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
     "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    # the SERVING prefill program: one chunked-prefill block (see
+    # repro.models.lm.prefill_block) against a 32k decode cache
+    "prefill_chunked_32k": ShapeCell("prefill_chunked_32k", 32_768, 32,
+                                     "prefill_chunked"),
     "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeCell("long_500k", 524_288, 1, "long_decode"),
 }
+
+ENCDEC_CHUNKED_SKIP = ("enc-dec serving prefills the short decoder prompt "
+                       "full-sequence; chunked prefill targets LM prompts")
+PREFIX_CHUNKED_SKIP = ("stub modality prefix is injected ahead of the token "
+                       "stream; chunked prefill covers the token path only")
 
 
 @dataclasses.dataclass(frozen=True)

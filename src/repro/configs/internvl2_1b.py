@@ -1,7 +1,8 @@
 """InternVL2-1B — InternViT frontend (STUB: precomputed patch embeddings)
 + InternLM2/Qwen2-0.5B-class LM backbone. [arXiv:2404.16821; hf]"""
 from repro.models.lm import LMConfig
-from .base import ArchSpec, FULL_ATTENTION_SKIP, register
+from .base import (ArchSpec, FULL_ATTENTION_SKIP, PREFIX_CHUNKED_SKIP,
+                   register)
 
 FULL = LMConfig(
     name="internvl2-1b", n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
@@ -16,4 +17,5 @@ SMOKE = LMConfig(
 SPEC = register(ArchSpec(
     arch_id="internvl2-1b", kind="lm", full=FULL, smoke=SMOKE,
     source="arXiv:2404.16821; hf",
-    skip_shapes={"long_500k": FULL_ATTENTION_SKIP}))
+    skip_shapes={"long_500k": FULL_ATTENTION_SKIP,
+                 "prefill_chunked_32k": PREFIX_CHUNKED_SKIP}))

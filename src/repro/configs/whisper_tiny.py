@@ -1,7 +1,7 @@
 """Whisper-tiny — encoder-decoder; conv/mel frontend is a STUB supplying
 precomputed frame embeddings. [arXiv:2212.04356; unverified]"""
 from repro.models.encdec import EncDecConfig
-from .base import ArchSpec, register
+from .base import ArchSpec, ENCDEC_CHUNKED_SKIP, register
 
 FULL = EncDecConfig(
     name="whisper-tiny", n_enc_layers=4, n_dec_layers=4, d_model=384,
@@ -16,4 +16,5 @@ SPEC = register(ArchSpec(
     arch_id="whisper-tiny", kind="encdec", full=FULL, smoke=SMOKE,
     source="arXiv:2212.04356; unverified",
     skip_shapes={"long_500k": "enc-dec audio arch: 500k-token decode is out "
-                              "of family scope (448-token decoder ceiling)"}))
+                              "of family scope (448-token decoder ceiling)",
+                 "prefill_chunked_32k": ENCDEC_CHUNKED_SKIP}))

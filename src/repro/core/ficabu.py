@@ -8,6 +8,9 @@ runs one forget request.  Modes:
   "cau"     Context-Adaptive Unlearning only (paper §III-A, Table I).
   "bd"      Balanced Dampening only (paper §III-B, Table II).
   "ficabu"  CAU + BD — the full method (paper §IV-B, Table IV).
+
+``unlearn_group(...)`` coalesces several forget sets into ONE back-end-first
+sweep (serving drains; DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -25,6 +28,21 @@ Params = Any
 MODES = ("ssd", "cau", "bd", "ficabu")
 
 
+def _mode_config(mode: str, alpha, lam, tau, checkpoint_every, b_r, c_m,
+                 chunk_size, use_kernel) -> UnlearnConfig:
+    """Shared mode -> UnlearnConfig mapping for the single-request and
+    coalesced-group entry points (they must never diverge)."""
+    assert mode in MODES, f"mode must be one of {MODES}"
+    cau_on = mode in ("cau", "ficabu")
+    bd_on = mode in ("bd", "ficabu")
+    return UnlearnConfig(
+        alpha=alpha, lam=lam,
+        tau=tau if cau_on else -1.0,                       # -1 => never early-stop
+        checkpoint_every=checkpoint_every if cau_on else 0,  # 0 => no checkpoints
+        balanced=bd_on, b_r=b_r, c_m=c_m,
+        chunk_size=chunk_size, use_kernel=use_kernel)
+
+
 def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
             inputs: Any, labels: jax.Array, *, mode: str = "ficabu",
             alpha: float = 10.0, lam: float = 1.0, tau: float = 0.05,
@@ -34,19 +52,46 @@ def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
     """``session``: a warm ``repro.engine.UnlearnSession`` to reuse compiled
     per-layer programs across forget requests (serving path); None builds an
     ephemeral one."""
-    assert mode in MODES, f"mode must be one of {MODES}"
-    cau_on = mode in ("cau", "ficabu")
-    bd_on = mode in ("bd", "ficabu")
-    cfg = UnlearnConfig(
-        alpha=alpha, lam=lam,
-        tau=tau if cau_on else -1.0,                       # -1 => never early-stop
-        checkpoint_every=checkpoint_every if cau_on else 0,  # 0 => no checkpoints
-        balanced=bd_on, b_r=b_r, c_m=c_m,
-        chunk_size=chunk_size, use_kernel=use_kernel)
+    cfg = _mode_config(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
+                       chunk_size, use_kernel)
     new_params, stats = context_adaptive_unlearn(
         adapter, params, fisher_global, inputs, labels, cfg, session=session)
     stats["mode"] = mode
     return new_params, stats
+
+
+def unlearn_group(adapter: ModelAdapter, params: Params, fisher_global: Params,
+                  forget_sets, *, mode: str = "ficabu",
+                  alpha: float = 10.0, lam: float = 1.0, tau: float = 0.05,
+                  checkpoint_every: int = 4, b_r: float = 10.0,
+                  c_m: Optional[float] = None, chunk_size: int = 8,
+                  use_kernel: bool = False, session=None, reference=None
+                  ) -> Tuple[Params, list, Dict]:
+    """One coalesced back-end-first sweep over a GROUP of forget sets.
+
+    ``forget_sets`` is a list of (inputs, labels) pairs — e.g. every forget
+    request due at a serving drain point. The layer stack is walked once for
+    the whole group (engine ``UnlearnSession.forget_many``): each set's
+    Fisher/activations come from the shared ``reference`` snapshot (default:
+    the entry weights) and the per-layer dampening edits compose, while each
+    set keeps its own checkpoint trace, ``stopped_at_l`` and MAC accounting.
+
+    Returns (params', [stats per set], group_stats).
+    """
+    cfg = _mode_config(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
+                       chunk_size, use_kernel)
+    from repro.engine import UnlearnSession  # deferred: engine imports cau
+    if session is None:
+        session = UnlearnSession(adapter, fisher_global)
+    else:
+        assert session.adapter is adapter, "session bound to another adapter"
+        session.fisher_global = fisher_global
+    new_params, stats_k, group_stats = session.forget_many(
+        params, list(forget_sets), cfg, reference=reference)
+    for st in stats_k:
+        st["mode"] = mode
+    group_stats["mode"] = mode
+    return new_params, stats_k, group_stats
 
 
 def auto_midpoint(ssd_stats: Dict) -> float:

@@ -59,6 +59,7 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
                      use_kernel: bool = False,
                      exclude: Optional[Callable[[str], bool]] = None,
                      donate: Optional[bool] = None,
+                     split_edit: bool = False,
                      tag: str = "fused",
                      jit_kwargs: Optional[dict] = None):
     """Build the fused per-layer program.
@@ -76,8 +77,21 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
     target (the CAU sweep touches each layer exactly once per request, so
     when layer l is visited its current params still equal the originals).
 
-    ``donate=None`` donates the layer buffer on accelerator backends only
-    (CPU XLA has no donation and would warn on every call).
+    ``split_edit=True`` builds the COALESCED-SWEEP variant
+
+        step(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c, scalars)
+            -> (new_edit_layer, act_cotangents, n_selected)
+
+    separating the vjp/Fisher reference (``ref_layer``: the drain-point
+    weights snapshot every forget set in the group backprops through) from
+    the edit target (``edit_layer``: the layer as already dampened by
+    earlier sets in the group).  Dampening's select/beta depend only on the
+    Fisher pair, so per-layer edits from the group compose multiplicatively
+    onto ``edit_layer`` while every set's importance estimate stays pinned
+    to the snapshot (DESIGN.md §8).
+
+    ``donate=None`` donates the edit-target buffer on accelerator backends
+    only (CPU XLA has no donation and would warn on every call).
     """
     if donate is None:
         donate = jax.default_backend() != "cpu"
@@ -92,8 +106,7 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
         (g_lp,) = vjp_fn(c)
         return g_lp, jnp.zeros((), F32)
 
-    def step(ctx, layer_p, fisher_g, acts_c, cot_c, scalars):
-        _note_trace(tag)
+    def _body(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c, scalars):
         alpha, lam = scalars[0], scalars[1]
         nc = jax.tree_util.tree_leaves(acts_c)[0].shape[0]
 
@@ -102,16 +115,16 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
             # force the f32 Fisher carry through HBM between "iterations".
             a = jax.tree_util.tree_map(lambda x: x[0], acts_c)
             c = jax.tree_util.tree_map(lambda x: x[0], cot_c)
-            g_lp, g_a = _grad_chunk(ctx, layer_p, a, c)
+            g_lp, g_a = _grad_chunk(ctx, ref_layer, a, c)
             g_acts = jax.tree_util.tree_map(lambda x: x[None], g_a)
             fish = jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_lp)
         else:
             fish0 = jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape, F32), layer_p)
+                lambda x: jnp.zeros(x.shape, F32), ref_layer)
 
             def body(fish, inp):
                 a, c = inp
-                g_lp, g_a = _grad_chunk(ctx, layer_p, a, c)
+                g_lp, g_a = _grad_chunk(ctx, ref_layer, a, c)
                 fish = jax.tree_util.tree_map(
                     lambda f, g: f + g.astype(F32) ** 2, fish, g_lp)
                 return fish, g_a
@@ -119,14 +132,27 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
             fish, g_acts = jax.lax.scan(body, fish0, (acts_c, cot_c))
             fish = jax.tree_util.tree_map(lambda f: f / nc, fish)
 
-        new_layer, masks = dampen_tree(layer_p, fish, fisher_g, alpha, lam,
+        new_layer, masks = dampen_tree(edit_layer, fish, fisher_g, alpha, lam,
                                        use_kernel=use_kernel)
         if exclude is not None:
-            new_layer = _restore_excluded(exclude, new_layer, layer_p)
+            new_layer = _restore_excluded(exclude, new_layer, edit_layer)
         n_sel = sum(jnp.sum(m) for m in jax.tree_util.tree_leaves(masks))
         return new_layer, g_acts, n_sel
 
+    if split_edit:
+        def step(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c, scalars):
+            _note_trace(tag)
+            return _body(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c,
+                         scalars)
+        donate_argnums = (2,)
+    else:
+        def step(ctx, layer_p, fisher_g, acts_c, cot_c, scalars):
+            _note_trace(tag)
+            return _body(ctx, layer_p, layer_p, fisher_g, acts_c, cot_c,
+                         scalars)
+        donate_argnums = (1,)
+
     kw = dict(jit_kwargs or {})
     if donate:
-        kw.setdefault("donate_argnums", (1,))
+        kw.setdefault("donate_argnums", donate_argnums)
     return jax.jit(step, **kw)

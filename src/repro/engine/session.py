@@ -50,7 +50,7 @@ class UnlearnSession:
         self._fused: Dict[Hashable, Callable] = {}
         self._partial: Dict[Hashable, Callable] = {}
         self.stats: Dict[str, int] = {
-            "requests": 0,
+            "requests": 0, "group_sweeps": 0,
             "fused_compiles": 0, "fused_hits": 0,
             "partial_compiles": 0, "partial_hits": 0,
         }
@@ -68,11 +68,18 @@ class UnlearnSession:
         return params if lc is None else lc(params, j)
 
     def fused_program(self, j: int, ctx, layer_p, acts_c, cot_c,
-                      cfg: UnlearnConfig) -> Callable:
+                      cfg: UnlearnConfig, *, split_edit: bool = False
+                      ) -> Callable:
         """The fused per-layer step for depth j, from cache when the layer's
-        kind + shapes were seen before (this request or any earlier one)."""
+        kind + shapes were seen before (this request or any earlier one).
+
+        ``split_edit`` selects the coalesced-sweep variant: vjp/Fisher on the
+        snapshot layer, dampening applied to the group-edited layer (the edit
+        target shares the reference's shape signature, so the cache key only
+        differs in the kind prefix)."""
         with_act = j > 0
-        key = ("fused", self._layer_key(j), shape_signature(ctx),
+        kind = "gfused" if split_edit else "fused"
+        key = (kind, self._layer_key(j), shape_signature(ctx),
                shape_signature(layer_p), shape_signature(acts_c),
                shape_signature(cot_c), with_act, cfg.use_kernel,
                self.adapter.exclude is not None)
@@ -83,10 +90,16 @@ class UnlearnSession:
             def apply_fn(c, lp, a, _j=j):
                 return adapter.apply_layer(c, _j, lp, a)
 
+            # split-edit programs never donate: with the default
+            # reference=params the first set's edit target IS the snapshot
+            # buffer later sets (and this call's vjp) still read — donating
+            # it would delete the reference mid-group.
             prog = build_fused_step(
                 apply_fn, with_act_grad=with_act, use_kernel=cfg.use_kernel,
-                exclude=adapter.exclude, donate=self.donate,
-                tag=f"fused:{self._layer_key(j)}")
+                exclude=adapter.exclude,
+                donate=False if split_edit else self.donate,
+                split_edit=split_edit,
+                tag=f"{kind}:{self._layer_key(j)}")
             self._fused[key] = prog
             self.stats["fused_compiles"] += 1
         else:
@@ -240,3 +253,137 @@ class UnlearnSession:
             "uniform_suffix": uniform,
         }
         return params, stats
+
+    # -- coalesced multi-set sweep ------------------------------------------
+    def forget_many(self, params: Params, forget_sets: List[Tuple[Any, jax.Array]],
+                    cfg: UnlearnConfig, *, reference: Optional[Params] = None
+                    ) -> Tuple[Params, List[Dict], Dict]:
+        """One back-to-front sweep serving a GROUP of forget sets.
+
+        ``forget_sets`` is a list of (inputs, labels) pairs — e.g. every
+        forget request due at a serving drain point, one per domain. The
+        layer stack is walked ONCE: at each layer every still-active set
+        runs the split-edit fused step (vjp/Fisher against the drain-point
+        snapshot ``reference``, dampening composed onto the group-edited
+        layer), so K coalesced requests pay one layer walk, one set of
+        cached executables, and one checkpoint program instead of K.
+
+        Per-set halting accounting is preserved: each set keeps its own
+        cotangent stream, MAC counter, checkpoint trace and ``stopped_at_l``
+        — checkpoints are evaluated against the composed suffix (the weights
+        that would actually be deployed), and a set that reaches tau stops
+        contributing edits to more frontal layers while the others continue.
+
+        ``reference`` (default: ``params`` at entry) is the statistics
+        snapshot: with the default, a coalesced drain is numerically
+        identical to sequential per-domain sweeps that share the drain-point
+        snapshot for their Fisher/activations (tests/test_engine.py).
+
+        Returns (params', [stats per set], group_stats).
+        """
+        adapter = self.adapter
+        K = len(forget_sets)
+        assert K >= 1, "forget_many needs at least one forget set"
+        ref_tree = params if reference is None else reference
+        self.stats["requests"] += K
+        self.stats["group_sweeps"] += 1
+        hits0 = self.stats["fused_hits"] + self.stats["partial_hits"]
+        comp0 = self.stats["fused_compiles"] + self.stats["partial_compiles"]
+
+        L = adapter.n_layers
+        cps = (set(checkpoint_set(L, cfg.checkpoint_every))
+               if 0 < cfg.checkpoint_every <= L else set())
+        S = (sigmoid_profile(L, cfg.b_r, cfg.c_m) if cfg.balanced
+             else np.ones(L))
+        prm_counts = _layer_param_counts(adapter, ref_tree)
+        cs = cfg.chunk_size
+
+        acts_k: List[List[jax.Array]] = []
+        cot_k: List[Any] = []
+        labels_k: List[jax.Array] = []
+        macs_k: List[MacCounter] = []
+        stats_k: List[Dict] = []
+        for inputs, labels in forget_sets:
+            logits, acts = adapter.forward_collect(ref_tree, inputs)
+            macs = MacCounter(adapter.layer_fwd_macs, prm_counts,
+                              batch=int(jax.tree_util.tree_leaves(labels)[0].shape[0]))
+            macs.add_forward_all()
+            labels_c = _chunk(labels, cs)
+            cot_k.append(_logit_cotangents(adapter.loss, _chunk(logits, cs),
+                                           labels_c))
+            acts_k.append(acts)
+            labels_k.append(labels)
+            macs_k.append(macs)
+            stats_k.append({
+                "stopped_at_l": L, "checkpoints_hit": [],
+                "selected_per_layer": {}, "forget_acc_trace": [],
+                "profile_S": S.tolist(),
+            })
+        uniform = self._uniform_suffix(acts_k[0])
+
+        active = [True] * K
+        sweep_limit = cfg.max_layers or L
+
+        for l in range(1, min(L, sweep_limit) + 1):  # paper index, back->front
+            j = L - l
+            ref_layer = adapter.get_layer(ref_tree, j)   # snapshot == original
+            ctx = self._layer_ctx(ref_tree, j)
+            cur = adapter.get_layer(params, j)
+            s = float(S[l - 1])
+            scalars = jnp.asarray([cfg.alpha * s, cfg.lam * s], F32)
+            fg_layer = adapter.get_layer(self.fisher_global, j)
+
+            for k in range(K):
+                if not active[k]:
+                    continue
+                acts_c = _chunk(acts_k[k][j], cs)
+                step = self.fused_program(j, ctx, ref_layer, acts_c,
+                                          cot_k[k], cfg, split_edit=True)
+                cur, g_acts, n_sel = step(ctx, ref_layer, cur, fg_layer,
+                                          acts_c, cot_k[k], scalars)
+                macs_k[k].add_backward_layer(j)
+                macs_k[k].add_fisher_layer(j)
+                macs_k[k].add_dampen_layer(j)
+                stats_k[k]["selected_per_layer"][l] = int(n_sel)
+                cot_k[k] = g_acts if j > 0 else None
+
+            params = adapter.set_layer(params, j, cur)
+
+            if l in cps:
+                for k in range(K):
+                    if not active[k]:
+                        continue
+                    a_forget = self.partial_acc(j, params, acts_k[k][j],
+                                                labels_k[k], uniform)
+                    macs_k[k].add_partial_inference(j, L)
+                    stats_k[k]["checkpoints_hit"].append(l)
+                    stats_k[k]["forget_acc_trace"].append((l, a_forget))
+                    if a_forget <= cfg.tau:
+                        stats_k[k]["stopped_at_l"] = l
+                        active[k] = False
+                if not any(active):
+                    break
+        else:
+            for k in range(K):
+                if active[k]:
+                    stats_k[k]["stopped_at_l"] = min(L, sweep_limit)
+
+        for k in range(K):
+            st = stats_k[k]
+            st["macs"] = macs_k[k].total
+            st["macs_ssd"] = MacCounter.ssd_total(adapter.layer_fwd_macs,
+                                                  prm_counts, macs_k[k].batch)
+            st["macs_vs_ssd_pct"] = 100.0 * st["macs"] / max(st["macs_ssd"], 1)
+        group_stats = {
+            "sets": K, "sweeps": 1,
+            "stopped_at_l": [st["stopped_at_l"] for st in stats_k],
+            "macs": sum(st["macs"] for st in stats_k),
+            "engine": {
+                "compiles": (self.stats["fused_compiles"]
+                             + self.stats["partial_compiles"]) - comp0,
+                "cache_hits": (self.stats["fused_hits"]
+                               + self.stats["partial_hits"]) - hits0,
+                "uniform_suffix": uniform,
+            },
+        }
+        return params, stats_k, group_stats

@@ -3,17 +3,30 @@
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
         --requests 8 --gen-len 16 --forget-domains 1,2
 
-Serving loop: batched requests -> prefill (forward) -> iterative decode with
-KV caches / recurrent states.  Forget requests can arrive at ANY point; the
-server enqueues them, drains in-flight batches, applies FiCABU dampening in
-place (no retraining, no weight reload — the paper's deployment story), and
-continues serving with the edited weights.
+Serving loop: batched requests -> chunked prefill (``repro.models.lm.prefill``
+consumes the prompt in blocks against the decode caches) -> iterative decode
+with KV caches / recurrent states.  Forget requests can arrive at ANY point;
+the server enqueues them, drains in-flight batches, applies FiCABU dampening
+in place (no retraining, no weight reload — the paper's deployment story),
+and continues serving with the edited weights.
 
-The server keeps ONE warm ``repro.engine.UnlearnSession`` across all forget
-requests: the first request pays compilation for each unique layer shape,
-every later request replays cached executables with zero retraces (asserted
-by tests/test_engine.py).  The global Fisher importance I_D is likewise
-computed once per served model, not per request.
+Forget requests due at the same drain point are COALESCED: the drain unions
+them into one group and runs a single back-end-first engine sweep
+(``ficabu.unlearn_group``) for the whole group — K queued deletions pay one
+layer walk and one set of cached executables instead of K, while each domain
+keeps its own halting/MAC accounting.  The server keeps ONE warm
+``repro.engine.UnlearnSession`` across all drains: the first sweep pays
+compilation for each unique layer shape, every later drain replays cached
+executables with zero retraces (asserted by tests/test_engine.py and the
+``--check`` CI gate).  The global Fisher importance I_D is likewise computed
+once per served model, not per request.
+
+``--forget-domains`` accepts burst syntax: ``1,2`` queues one request per
+domain on consecutive batches (two drains); ``1,2;3,2`` queues bursts —
+domains within a burst share a due batch and coalesce into one sweep.
+``--coalesce`` folds a comma list into a single burst.  ``--check`` exits
+non-zero if any drain ran more sweeps than coalesced groups or any drain
+after the first recompiled.
 """
 from __future__ import annotations
 
@@ -35,18 +48,16 @@ from repro.models import lm as LM
 
 
 def generate(params, cfg, prompts: jax.Array, gen_len: int,
-             decode_jit) -> np.ndarray:
+             decode_jit, prefill_block: int = 8) -> np.ndarray:
     """prompts [B, P] -> greedy continuation [B, gen_len]."""
     B, Plen = prompts.shape
     S_max = Plen + gen_len
     cache = LM.init_cache(cfg, B, S_max)
-    # prefill token-by-token through the decode path (exercises the cache
-    # exactly as a pod would; a chunked prefill is a serving optimisation).
-    tok = prompts[:, :1]
-    logits = None
-    for i in range(Plen):
-        logits, cache = decode_jit(params, cache, prompts[:, i:i + 1],
-                                   jnp.int32(i))
+    # chunked prefill: the prompt is consumed in blocks against the decode
+    # caches (bit-exact vs the old token-by-token walk of the decode path,
+    # see tests/test_models_smoke.py::test_chunked_prefill_bit_exact).
+    logits, cache = LM.prefill(params, cfg, prompts, cache,
+                               block=prefill_block)
     out = []
     tok = jnp.argmax(logits[:, -1:], axis=-1)
     for j in range(gen_len):
@@ -59,11 +70,12 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
 class ForgetService:
     """Queue of forget requests + the warm unlearning engine session.
 
-    ``submit`` enqueues; ``drain`` runs every due request against the
-    current weights and returns the edited weights. The session (and with
-    it every compiled per-layer program) persists across requests."""
+    ``submit`` enqueues; ``drain`` coalesces every request due at the drain
+    point into ONE engine sweep over the unioned forget sets and returns the
+    edited weights. The session (and with it every compiled per-layer
+    program) persists across drains."""
 
-    CHUNK = 4  # Fisher/engine chunk size; forget batches are trimmed to it
+    CHUNK = 4  # Fisher/engine chunk size; forget batches are padded to it
 
     def __init__(self, cfg, tokens, domains, seq_len: int):
         self.cfg = cfg
@@ -72,7 +84,10 @@ class ForgetService:
         self.queue: Deque[Dict] = deque()
         self.adapter = adapters.lm_adapter(cfg, seq_len - 1)
         self.session: Optional[UnlearnSession] = None
-        self.log: List[Dict] = []
+        self.log: List[Dict] = []        # one entry per domain request
+        self.group_log: List[Dict] = []  # one entry per coalesced sweep
+        self.sweeps = 0
+        self.groups = 0
 
     def submit(self, domain: int, due_batch: int) -> None:
         self.queue.append({"domain": domain, "due_batch": due_batch})
@@ -87,42 +102,103 @@ class ForgetService:
                                      chunk_size=self.CHUNK)
             self.session = UnlearnSession(self.adapter, i_d)
 
+    def _forget_batch(self, domain: int):
+        """Forget samples for one domain, PADDED (never trimmed) to a CHUNK
+        multiple — trimming could silently drop a whole domain's samples
+        when fewer than CHUNK exist. Returns (batch | None, n_padded)."""
+        splits = lm_split_forget_retain(self.tokens, self.domains, domain)
+        fb = splits["forget"][:8]
+        if len(fb) == 0:
+            return None, 0
+        pad = (-len(fb)) % self.CHUNK
+        if pad:
+            reps = np.concatenate([fb] * (pad // len(fb) + 1))[:pad]
+            fb = np.concatenate([fb, reps])
+        return fb, pad
+
     def drain(self, params, batch_idx: int):
-        """Run all requests due at ``batch_idx``; returns (params, ran_any)."""
-        ran = False
+        """Coalesce all requests due at ``batch_idx`` into one sweep;
+        returns (params, ran_any)."""
+        due: List[Dict] = []
         while self.queue and self.queue[0]["due_batch"] <= batch_idx:
-            req = self.queue.popleft()
-            splits = lm_split_forget_retain(self.tokens, self.domains,
-                                            req["domain"])
-            fb = splits["forget"][:8]
-            fb = fb[:len(fb) - len(fb) % self.CHUNK]
-            if len(fb) == 0:
-                self.log.append({"domain": req["domain"], "batch": batch_idx,
-                                 "skipped": "no forget samples"})
-                print(f"[serve] forget request for domain {req['domain']} "
-                      "skipped: no samples in that domain", flush=True)
+            due.append(self.queue.popleft())
+        if not due:
+            return params, False
+
+        group: List[Dict] = []
+        seen = set()
+        n_merged = 0
+        for req in due:
+            dom = req["domain"]
+            if dom in seen:
+                # same-domain duplicates union trivially, but every submitted
+                # deletion request must leave an audit-log trace
+                self.log.append({"domain": dom, "batch": batch_idx,
+                                 "merged_into_group": self.groups})
+                n_merged += 1
                 continue
-            self._warm(params)
-            t0 = time.time()
-            params, stats = ficabu.unlearn(
-                self.adapter, params, self.session.fisher_global,
-                fb[:, :-1], fb[:, 1:],
-                mode="ficabu", alpha=8.0, lam=1.0, tau=0.6,
-                checkpoint_every=2, chunk_size=self.CHUNK,
-                session=self.session)
+            fb, pad = self._forget_batch(dom)
+            if fb is None:
+                self.log.append({"domain": dom, "batch": batch_idx,
+                                 "skipped": "no forget samples"})
+                print(f"[serve] forget request for domain {dom} skipped: "
+                      "no samples in that domain", flush=True)
+                continue
+            if pad:
+                print(f"[serve] forget batch for domain {dom} padded by "
+                      f"{pad} repeated samples to a multiple of "
+                      f"{self.CHUNK}", flush=True)
+            seen.add(dom)
+            group.append({"domain": dom, "fb": fb, "padded": pad})
+        if not group:
+            return params, False
+
+        self._warm(params)
+        t0 = time.time()
+        params, stats_k, gstats = ficabu.unlearn_group(
+            self.adapter, params, self.session.fisher_global,
+            [(g["fb"][:, :-1], g["fb"][:, 1:]) for g in group],
+            mode="ficabu", alpha=8.0, lam=1.0, tau=0.6,
+            checkpoint_every=2, chunk_size=self.CHUNK,
+            session=self.session)
+        latency = round(time.time() - t0, 3)
+        self.sweeps += gstats["sweeps"]
+        self.groups += 1
+        gi = self.groups - 1
+        self.group_log.append({
+            "group": gi, "batch": batch_idx,
+            "domains": [g["domain"] for g in group],
+            "requests": len(group) + n_merged,
+            "sweeps": gstats["sweeps"], "latency_s": latency,
+            "engine": gstats["engine"],
+        })
+        for g, st in zip(group, stats_k):
             self.log.append({
-                "domain": req["domain"], "batch": batch_idx,
-                "latency_s": round(time.time() - t0, 3),
-                "stopped_at_l": stats["stopped_at_l"],
-                "macs_vs_ssd_pct": stats["macs_vs_ssd_pct"],
-                "engine": stats["engine"],
+                "domain": g["domain"], "batch": batch_idx, "group": gi,
+                "latency_s": latency, "padded": g["padded"],
+                "stopped_at_l": st["stopped_at_l"],
+                "macs_vs_ssd_pct": st["macs_vs_ssd_pct"],
+                "engine": gstats["engine"],
             })
-            print(f"[serve] unlearned domain {req['domain']} in place "
-                  f"(stop_l={stats['stopped_at_l']}, "
-                  f"compiles={stats['engine']['compiles']}, "
-                  f"hits={stats['engine']['cache_hits']})", flush=True)
-            ran = True
-        return params, ran
+        print(f"[serve] coalesced sweep {gi}: unlearned domains "
+              f"{[g['domain'] for g in group]} in place "
+              f"(sweeps={gstats['sweeps']}, "
+              f"stop_l={[st['stopped_at_l'] for st in stats_k]}, "
+              f"compiles={gstats['engine']['compiles']}, "
+              f"hits={gstats['engine']['cache_hits']})", flush=True)
+        return params, True
+
+
+def _parse_bursts(args) -> List[List[int]]:
+    """Burst k is due at ``--unlearn-after + k``; domains within a burst
+    coalesce into one sweep."""
+    if args.forget_domains:
+        if ";" in args.forget_domains:
+            return [[int(d) for d in b.split(",") if d]
+                    for b in args.forget_domains.split(";") if b]
+        doms = [int(d) for d in args.forget_domains.split(",")]
+        return [doms] if args.coalesce else [[d] for d in doms]
+    return [[args.forget_domain]]
 
 
 def main(argv=None) -> dict:
@@ -132,13 +208,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--prefill-block", type=int, default=8,
+                    help="chunked-prefill block size (tokens per dispatch)")
     ap.add_argument("--unlearn-after", type=int, default=1,
-                    help="first forget request after this many batches "
+                    help="first forget burst after this many batches "
                          "(-1: off)")
     ap.add_argument("--forget-domain", type=int, default=1)
     ap.add_argument("--forget-domains", default=None,
-                    help="comma-separated domains, one queued request each "
-                         "(overrides --forget-domain)")
+                    help="domains to forget: '1,2' = one request per domain "
+                         "on consecutive batches; '1,2;3' = bursts (comma "
+                         "within a burst, ';' between) — a burst coalesces "
+                         "into one sweep (overrides --forget-domain)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="fold a comma list into a single same-due burst")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless sweeps == coalesced groups "
+                         "and no drain after the first recompiled")
+    ap.add_argument("--out", default=None,
+                    help="write the result JSON to this path")
     args = ap.parse_args(argv)
 
     spec = configs.get(args.arch)
@@ -157,10 +244,9 @@ def main(argv=None) -> dict:
 
     svc = ForgetService(cfg, tokens, domains, dcfg.seq_len)
     if args.unlearn_after >= 0:
-        doms = ([int(d) for d in args.forget_domains.split(",")]
-                if args.forget_domains else [args.forget_domain])
-        for i, d in enumerate(doms):
-            svc.submit(d, due_batch=args.unlearn_after + i)
+        for i, burst in enumerate(_parse_bursts(args)):
+            for d in burst:
+                svc.submit(d, due_batch=args.unlearn_after + i)
 
     served: List[dict] = []
     batches = [tokens[i:i + args.requests, :args.prompt_len]
@@ -169,7 +255,7 @@ def main(argv=None) -> dict:
     for bi, prompts in enumerate(batches):
         t0 = time.time()
         gen = generate(params, cfg, jnp.asarray(prompts), args.gen_len,
-                       decode_jit)
+                       decode_jit, prefill_block=args.prefill_block)
         served.append({"batch": bi, "latency_s": round(time.time() - t0, 3),
                        "tokens": int(gen.size)})
         params, _ = svc.drain(params, bi + 1)
@@ -181,10 +267,41 @@ def main(argv=None) -> dict:
     last = done[-1] if done else {}
     result = {"served": served, "unlearned": bool(done),
               "unlearn_requests": svc.log,
+              "coalesced_groups": svc.groups, "sweeps": svc.sweeps,
+              "group_log": svc.group_log,
               "unlearn_stats": {k: last.get(k) for k in
                                 ("stopped_at_l", "macs_vs_ssd_pct")},
               "engine_stats": dict(svc.session.stats) if svc.session else {}}
     print(f"[serve] done: {json.dumps(result)}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    if args.check:
+        problems = []
+        # coalescing gate: ONE engine sweep per drain point, however many
+        # requests were due there — a regression to per-request sweeps shows
+        # up as several group entries (or sweeps) at the same drain batch
+        sweeps_by_batch: Dict = {}
+        for g in svc.group_log:
+            sweeps_by_batch[g["batch"]] = (sweeps_by_batch.get(g["batch"], 0)
+                                           + g["sweeps"])
+        for b, n in sorted(sweeps_by_batch.items()):
+            if n > 1:
+                problems.append(f"drain at batch {b} ran {n} engine sweeps "
+                                "— due requests were not coalesced into "
+                                "one group")
+        for g in svc.group_log[1:]:
+            if g["engine"]["compiles"] > 0:
+                problems.append(f"drain {g['group']} recompiled "
+                                f"{g['engine']['compiles']} programs "
+                                "(warm-session cache regressed)")
+        if problems:
+            print("[serve] CHECK FAILED: " + "; ".join(problems), flush=True)
+            raise SystemExit(1)
+        n_req = sum(g["requests"] for g in svc.group_log)
+        print(f"[serve] check ok: {n_req} request(s) in {svc.groups} "
+              f"group(s), one sweep per drain, zero recompiles after the "
+              "first drain", flush=True)
     return result
 
 

@@ -22,6 +22,10 @@ from repro.models.module import map_with_paths
 F32 = jnp.float32
 I32 = jnp.int32
 
+# Tokens per serving-prefill dispatch (the block LM.prefill consumes); the
+# prefill_chunked cell lowers exactly one such block against the full cache.
+CHUNKED_PREFILL_BLOCK = 512
+
 
 @dataclasses.dataclass
 class CellSpec:
@@ -46,6 +50,12 @@ def _slstm_correction(cfg: LM.LMConfig, cell: ShapeCell) -> float:
     IS counted)."""
     B = cell.global_batch
     S = cell.seq_len if cell.kind in ("train", "prefill") else 1
+    if cell.kind == "prefill_chunked":
+        # one serving-prefill block; for recurrent blocks the program scans
+        # decode steps over the block, which cost_analysis counts once — the
+        # same undercount class as the forward-form recurrences (approximate
+        # with the forward-form per-step terms).
+        S = CHUNKED_PREFILL_BLOCK
     if S <= 1:
         return 0.0
     mult = 3.0 if cell.kind == "train" else 1.0
@@ -106,7 +116,11 @@ def _param_counts(cfg) -> Tuple[int, int]:
 
 def _model_flops(cfg, cell: ShapeCell, n_active: int) -> float:
     """MODEL_FLOPS = 6*N_active*D for train; 2*N_active*D for inference."""
-    tokens = cell.global_batch * (cell.seq_len if cell.kind in ("train", "prefill") else 1)
+    if cell.kind == "prefill_chunked":
+        tokens = cell.global_batch * CHUNKED_PREFILL_BLOCK  # one block
+    else:
+        tokens = cell.global_batch * (cell.seq_len
+                                      if cell.kind in ("train", "prefill") else 1)
     mult = 6.0 if cell.kind == "train" else 2.0
     return mult * n_active * tokens
 
@@ -204,6 +218,33 @@ def _lm_cell(spec: ArchSpec, cell: ShapeCell, mesh,
             n_params=n_total, n_active_params=n_active,
             scan_correction_flops=_slstm_correction(cfg, cell))
 
+    if cell.kind == "prefill_chunked":
+        # The SERVING prefill program (launch/serve.py::generate): ONE
+        # LM.prefill_block chunk of C tokens against the full decode cache,
+        # cache donated exactly as the server threads it block to block.
+        C = min(CHUNKED_PREFILL_BLOCK, S)
+        cache_shapes = jax.eval_shape(lambda: LM.init_cache(cfg, B, S))
+        cache_specs = shd.cache_pspecs(cache_shapes, mesh, B)
+        cache_sh = _sh(mesh, cache_specs)
+        # mirror LM.prefill's mode choice: wide when no attention cache can
+        # wrap over the full prompt, scan-of-decode-steps otherwise
+        attn_sizes = [S if bt == "attn" else min(S, cfg.window)
+                      for bt in cfg.layer_types if bt in ("attn", "local")]
+        wide = S <= min(attn_sizes) if attn_sizes else True
+
+        def prefill_chunk(p, cache, tokens, pos0):
+            return LM.prefill_block(p, cfg, tokens, cache, pos0, wide, True)
+
+        args = (p_shapes, cache_shapes, _sds((B, C), I32, mesh, tok_spec),
+                _sds((), I32, mesh, P()))
+        return CellSpec(
+            name=f"{spec.arch_id}:{cell.name}", fn=prefill_chunk, args=args,
+            in_shardings=(p_sh, cache_sh, NamedSharding(mesh, tok_spec),
+                          NamedSharding(mesh, P())),
+            out_shardings=(None, cache_sh), donate_argnums=(1,),
+            model_flops=mflops, n_params=n_total, n_active_params=n_active,
+            scan_correction_flops=_slstm_correction(cfg, cell))
+
     # decode / long_decode: one new token against a seq_len cache
     cache_shapes = jax.eval_shape(lambda: LM.init_cache(cfg, B, S))
     cache_specs = shd.cache_pspecs(cache_shapes, mesh, B)
@@ -240,6 +281,9 @@ def _encdec_cell(spec: ArchSpec, cell: ShapeCell, mesh,
     n_total, n_active = _param_counts(cfg)
     mflops = _model_flops(cfg, cell, n_active)
 
+    if cell.kind == "prefill_chunked":
+        raise ValueError(f"{spec.arch_id} skips {cell.name}: "
+                         "chunked prefill cell is LM-only")
     tok_spec = shd.batch_pspec(mesh, B, 2)
     frames_sds = _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16, mesh,
                       shd.batch_pspec(mesh, B, 3))

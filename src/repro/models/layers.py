@@ -269,6 +269,38 @@ def attention_decode(p: Dict, cfg: AttnConfig, x: jax.Array, cache: Dict,
     return out, {"k": k, "v": v}
 
 
+def attention_prefill(p: Dict, cfg: AttnConfig, x: jax.Array, cache: Dict,
+                      pos0: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Chunked prefill: C tokens at once against the KV cache.
+
+    x: [B, C, D] for positions pos0..pos0+C-1.  Writes the chunk's K/V into
+    the cache at those slots and attends each query to its causal prefix
+    with ONE wide SDPA — bit-exact vs C ``attention_decode`` steps (same
+    mask values, same key axis length/order, row-independent projections).
+
+    Requires the no-wrap regime: pos0 + C <= cache size, i.e. every prefill
+    position maps to its own slot (ring-buffer window caches never wrap
+    during the chunk).  ``repro.models.lm.prefill`` checks this per layer
+    and falls back to the scan-of-decode-steps path otherwise.
+    """
+    B, C = x.shape[0], x.shape[1]
+    q, k_new, v_new = _qkv(p, cfg, x)
+    if cfg.use_rope:
+        pvec = jnp.broadcast_to(pos0 + jnp.arange(C)[None], (B, C))
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k_new = apply_rope(k_new, pvec, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos0, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos0, 0, 0))
+    # No-wrap means the window bound never binds inside the cache (cache size
+    # <= window for ring caches), so the mask is causal-only — exactly the
+    # slot-validity mask attention_decode applies.
+    out = _sdpa_block(q, k, v, x.dtype, causal=True, window=0, q_offset=pos0)
+    out = _proj(out.reshape(B, C, -1), p["wo"])
+    return out, {"k": k, "v": v}
+
+
 def init_kv_cache(cfg: AttnConfig, batch: int, seq_len: int, dtype) -> Dict:
     size = min(seq_len, cfg.window) if cfg.window > 0 else seq_len
     shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)

@@ -20,6 +20,8 @@ Execution modes
 ---------------
 * ``forward``      — scan over stacked pattern periods (training / prefill).
 * ``decode_step``  — single-token decode with per-block caches.
+* ``prefill``      — chunked serving prefill: [B, P] prompts consumed in
+  blocks against the decode caches, bit-exact vs token-by-token decode.
 * ``unrolled`` API — per-layer access used by the FiCABU CAU driver: the host
   iterates layers back-to-front (the paper's Rocket-core control loop), while
   each per-layer VJP/dampen runs jitted on device.
@@ -377,6 +379,132 @@ def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
             x, new_cache["tail"][str(i)] = block_decode(
                 params["tail"][str(i)], cfg, bt, x, cache["tail"][str(i)], pos)
     return _head(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (serving): consume [B, P] prompts in blocks
+# ---------------------------------------------------------------------------
+# The decode path is untouched; prefill fills the SAME caches decode reads.
+# Two per-block modes, both bit-exact vs running decode_step token-by-token
+# (asserted in tests/test_models_smoke.py):
+#   * wide — attention blocks process the whole chunk in one SDPA against the
+#     cache (layers.attention_prefill); dense FFNs are row-independent so the
+#     chunk goes through them as one matmul.  Valid only in the no-wrap
+#     regime (P <= every attention cache's slot count) and for non-MoE FFNs
+#     (MoE capacity/overflow couples tokens within a dispatch).
+#   * scan — lax.scan of block_decode over the chunk's tokens inside ONE
+#     program: same per-token math as decode, minus P host dispatches.
+def block_prefill(p: Params, cfg: LMConfig, btype: str, x: jax.Array,
+                  cache: Any, pos0: jax.Array, wide: bool
+                  ) -> Tuple[jax.Array, Any]:
+    """x [B, C, D] for positions pos0..pos0+C-1 -> (x_out, new cache)."""
+    if wide and btype in ("attn", "local") and cfg.moe is None:
+        h = L.rmsnorm(p["ln1"], x)
+        m, cache = L.attention_prefill(p["mixer"], cfg.attn_cfg(btype), h,
+                                       cache, pos0)
+        x = x + m
+        if cfg.d_ff > 0:
+            x = x + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x))
+        return x, cache
+
+    C = x.shape[1]
+
+    def step(st, inp):
+        x_t, pos = inp
+        y, st = block_decode(p, cfg, btype, x_t[:, None], st, pos)
+        return st, y[:, 0]
+
+    cache, ys = jax.lax.scan(
+        step, cache, (x.transpose(1, 0, 2), pos0 + jnp.arange(C)))
+    return ys.transpose(1, 0, 2), cache
+
+
+def prefill_block(params: Params, cfg: LMConfig, tokens: jax.Array,
+                  cache: Params, pos0: jax.Array, wide: bool = True,
+                  last_only: bool = True) -> Tuple[jax.Array, Params]:
+    """One prefill chunk: tokens [B, C] at positions pos0.. -> (logits, cache).
+
+    ``last_only`` applies the LM head to the chunk's final position only
+    (all a serving prefill needs); False returns [B, C, V] for bit-exactness
+    tests. Jittable; ``wide``/``last_only`` are static.
+    """
+    x = params["embed"]["w"].astype(cfg.dtype)[tokens]
+    pat = cfg.block_pattern
+    new_cache: Params = {}
+
+    if "period_stack" in params:
+        def body(x_c, inp):
+            period_p, period_cache = inp
+            new_c = {}
+            for i, bt in enumerate(pat):
+                x_c, new_c[str(i)] = block_prefill(
+                    period_p[str(i)], cfg, bt, x_c, period_cache[str(i)],
+                    pos0, wide)
+            return x_c, new_c
+
+        if cfg.unroll_layers:
+            outs = []
+            for pi in range(cfg.n_periods):
+                x, nc = body(x, (index_tree(params["period_stack"], pi),
+                                 index_tree(cache["period_stack"], pi)))
+                outs.append(nc)
+            new_cache["period_stack"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_cache["period_stack"] = jax.lax.scan(
+                body, x, (params["period_stack"], cache["period_stack"]))
+    if "tail" in params:
+        base = cfg.n_periods * len(pat)
+        new_cache["tail"] = {}
+        for i in range(cfg.n_tail):
+            bt = cfg.layer_types[base + i]
+            x, new_cache["tail"][str(i)] = block_prefill(
+                params["tail"][str(i)], cfg, bt, x, cache["tail"][str(i)],
+                pos0, wide)
+    if last_only:
+        x = x[:, -1:]
+    return _head(params, cfg, x), new_cache
+
+
+_prefill_block_jit = jax.jit(prefill_block, static_argnums=(1, 5, 6))
+
+
+def _min_attn_cache(cfg: LMConfig, cache: Params) -> int:
+    """Smallest attention-cache slot count — the no-wrap bound for wide
+    prefill (ring-buffer window caches wrap past it)."""
+    sizes = []
+    pat = cfg.block_pattern
+    if "period_stack" in cache:
+        for i, bt in enumerate(pat):
+            if bt in ("attn", "local"):
+                sizes.append(cache["period_stack"][str(i)]["k"].shape[2])
+    if "tail" in cache:
+        base = cfg.n_periods * len(pat)
+        for i in range(cfg.n_tail):
+            if cfg.layer_types[base + i] in ("attn", "local"):
+                sizes.append(cache["tail"][str(i)]["k"].shape[1])
+    return min(sizes) if sizes else (1 << 30)
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jax.Array, cache: Params,
+            *, block: int = 32, last_only: bool = True,
+            jit: bool = True) -> Tuple[jax.Array, Params]:
+    """Chunked prefill of prompts [B, P] in blocks of ``block`` tokens.
+
+    Returns (logits, cache) with the cache positioned for decode at P.
+    Bit-exact vs P token-by-token decode_step calls; wide mode is selected
+    automatically when no attention cache can wrap (P <= slot count).
+    """
+    B, P = tokens.shape
+    wide = P <= _min_attn_cache(cfg, cache)
+    fn = _prefill_block_jit if jit else prefill_block
+    outs = []
+    for p0 in range(0, P, block):
+        blk = tokens[:, p0:p0 + block]
+        logits, cache = fn(params, cfg, blk, cache, jnp.int32(p0), wide,
+                           last_only)
+        outs.append(logits)
+    return (outs[-1] if last_only else jnp.concatenate(outs, axis=1)), cache
 
 
 # ---------------------------------------------------------------------------

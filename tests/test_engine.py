@@ -209,6 +209,109 @@ def test_suffix_program_matches_per_depth(lm_setting):
 
 
 # ---------------------------------------------------------------------------
+# coalesced multi-set sweeps (forget_many)
+# ---------------------------------------------------------------------------
+def _domain_sets(toks, doms, domains, n=8):
+    out = []
+    for d in domains:
+        fb = toks[doms == d][:n]
+        out.append((fb[:, :-1], fb[:, 1:]))
+    return out
+
+
+@pytest.fixture(scope="module")
+def lm_domain_setting():
+    cfg_m = LM.LMConfig(name="t2", n_layers=4, d_model=32, n_heads=4,
+                        n_kv_heads=2, d_ff=64, vocab=64)
+    dcfg = syn.LMDataConfig(vocab=64, n_domains=4, seq_len=16,
+                            n_per_domain=8, seed=1)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg_m)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg_m, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:, :-1], toks[:, 1:]),
+                             chunk_size=4)
+    return {"cfg": cfg_m, "toks": toks, "doms": doms, "params": params,
+            "i_d": i_d, "adapter": adapters.lm_adapter(cfg_m, 16)}
+
+
+def test_coalesced_matches_sequential_on_snapshot(lm_domain_setting):
+    """A coalesced 2-domain drain is numerically identical to sequential
+    per-domain sweeps that share the drain-point weights snapshot for their
+    Fisher/activations (the ``reference`` kwarg)."""
+    m = lm_domain_setting
+    setA, setB = _domain_sets(m["toks"], m["doms"], (1, 2))
+    cfg = cau.UnlearnConfig(alpha=6.0, lam=0.5, tau=-1.0, checkpoint_every=2,
+                            balanced=True, chunk_size=4)
+    sess = UnlearnSession(m["adapter"], m["i_d"])
+    p_co, st_co, gs = sess.forget_many(m["params"], [setA, setB], cfg)
+    assert gs["sets"] == 2 and gs["sweeps"] == 1
+
+    sess2 = UnlearnSession(m["adapter"], m["i_d"])
+    p1, st1, _ = sess2.forget_many(m["params"], [setA], cfg)
+    p2, st2, _ = sess2.forget_many(p1, [setB], cfg, reference=m["params"])
+    _assert_trees_equal(p_co, p2)
+    assert st_co[0]["selected_per_layer"] == st1[0]["selected_per_layer"]
+    assert st_co[1]["selected_per_layer"] == st2[0]["selected_per_layer"]
+
+
+def test_coalesced_single_set_matches_forget(lm_domain_setting):
+    """forget_many([A]) runs the split-edit program family, yet is bit-equal
+    to forget(A) — stats included (per-set MACs accounting preserved)."""
+    m = lm_domain_setting
+    (setA,) = _domain_sets(m["toks"], m["doms"], (1,))
+    cfg = cau.UnlearnConfig(alpha=6.0, lam=0.5, tau=-1.0, checkpoint_every=2,
+                            balanced=True, chunk_size=4)
+    p_g, st_g, _ = UnlearnSession(m["adapter"], m["i_d"]).forget_many(
+        m["params"], [setA], cfg)
+    p_f, st_f = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], *setA, cfg)
+    _assert_trees_equal(p_g, p_f)
+    assert st_g[0]["selected_per_layer"] == st_f["selected_per_layer"]
+    assert st_g[0]["stopped_at_l"] == st_f["stopped_at_l"]
+    assert st_g[0]["macs"] == st_f["macs"]
+    assert st_g[0]["macs_vs_ssd_pct"] == st_f["macs_vs_ssd_pct"]
+
+
+def test_coalesced_second_drain_zero_compiles(lm_domain_setting, trace_log):
+    m = lm_domain_setting
+    sets = _domain_sets(m["toks"], m["doms"], (1, 2))
+    cfg = cau.UnlearnConfig(alpha=6.0, lam=0.5, tau=-1.0, checkpoint_every=2,
+                            balanced=True, chunk_size=4)
+    sess = UnlearnSession(m["adapter"], m["i_d"])
+    _, _, g1 = sess.forget_many(m["params"], sets, cfg)
+    assert g1["engine"]["compiles"] > 0
+    trace_log.clear()
+    _, _, g2 = sess.forget_many(m["params"], sets, cfg)
+    assert g2["engine"]["compiles"] == 0
+    assert g2["engine"]["cache_hits"] > 0
+    assert len(trace_log) == 0, f"unexpected retraces: {trace_log}"
+
+
+def test_coalesced_per_set_halting(lm_domain_setting):
+    """Per-domain halting inside one coalesced sweep: an easy-to-forget set
+    (random labels) halts at the first checkpoint while a hard one (the
+    model's own argmax labels) sweeps on — each reports its own
+    stopped_at_l, and the early-halted set stops contributing edits."""
+    m = lm_domain_setting
+    setA, setB = _domain_sets(m["toks"], m["doms"], (1, 2))
+    logits, _ = m["adapter"].forward_collect(m["params"], setA[0])
+    labA = jnp.argmax(logits, -1)                       # acc ~1.0: no halt
+    labB = jax.random.randint(jax.random.PRNGKey(7), setB[1].shape, 0, 64)
+    cfg = cau.UnlearnConfig(alpha=32.0, lam=0.9, tau=0.5, checkpoint_every=1,
+                            balanced=False, chunk_size=4)
+    sess = UnlearnSession(m["adapter"], m["i_d"])
+    _, st, gs = sess.forget_many(
+        m["params"], [(setA[0], labA), (setB[0], labB)], cfg)
+    L = m["adapter"].n_layers
+    assert st[1]["stopped_at_l"] == 1, st[1]["forget_acc_trace"]
+    assert st[0]["stopped_at_l"] == L, st[0]["forget_acc_trace"]
+    assert gs["stopped_at_l"] == [L, 1]
+    # the halted set paid for 1 layer + its checkpoints, not the full sweep
+    assert st[1]["macs"] < st[0]["macs"]
+    assert list(st[1]["selected_per_layer"]) == [1]
+
+
+# ---------------------------------------------------------------------------
 # serving path: warm session across queued forget requests
 # ---------------------------------------------------------------------------
 def test_serve_queue_second_request_zero_compiles():
@@ -223,3 +326,25 @@ def test_serve_queue_second_request_zero_compiles():
     assert reqs[1]["engine"]["cache_hits"] > 0
     # and the edited model kept serving
     assert len(res["served"]) >= 2
+
+
+def test_serve_coalesced_drain_one_sweep():
+    """K=2 same-due-batch forget requests execute exactly ONE engine sweep,
+    and a second burst drains with zero recompiles."""
+    from repro.launch import serve as serve_mod
+    res = serve_mod.main(["--arch", "gemma3-1b", "--requests", "4",
+                          "--prompt-len", "8", "--gen-len", "4",
+                          "--unlearn-after", "1",
+                          "--forget-domains", "1,2;3,2"])
+    assert res["coalesced_groups"] == 2
+    assert res["sweeps"] == 2                  # one sweep per burst, not per request
+    g0, g1 = res["group_log"]
+    assert g0["domains"] == [1, 2] and g0["sweeps"] == 1
+    assert g1["domains"] == [3, 2] and g1["sweeps"] == 1
+    assert g1["engine"]["compiles"] == 0, g1
+    # per-domain accounting survives coalescing
+    doms = [r["domain"] for r in res["unlearn_requests"]]
+    assert doms == [1, 2, 3, 2]
+    for r in res["unlearn_requests"]:
+        assert r["stopped_at_l"] >= 1
+        assert r["macs_vs_ssd_pct"] is not None

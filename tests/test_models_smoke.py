@@ -180,3 +180,74 @@ def test_param_count_kimi_is_about_1t():
     total, active = _param_counts(configs.get("kimi-k2-1t-a32b").full)
     assert 0.7e12 < total < 1.4e12, f"kimi total {total/1e12:.2f}T"
     assert 20e9 < active < 50e9, f"kimi active {active/1e9:.1f}B"
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: bit-exact vs the token-by-token decode walk
+# ---------------------------------------------------------------------------
+def _tokenwise_prefill(params, cfg, toks, S_max):
+    decode_jit = jax.jit(lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))
+    cache = LM.init_cache(cfg, toks.shape[0], S_max)
+    logits = []
+    for i in range(toks.shape[1]):
+        lg, cache = decode_jit(params, cache, toks[:, i:i + 1], jnp.int32(i))
+        logits.append(np.asarray(lg))
+    return np.concatenate(logits, axis=1), cache
+
+
+@pytest.mark.parametrize("arch_id,P,block", [
+    ("gemma3-1b", 12, 5),        # local+global attention, wide mode
+    ("gemma3-1b", 20, 7),        # P > window 16: ring wrap -> scan mode
+    ("recurrentgemma-9b", 12, 4),  # RG-LRU + local hybrid
+    ("xlstm-125m", 12, 6),       # mLSTM/sLSTM states
+])
+def test_chunked_prefill_bit_exact(arch_id, P, block, key):
+    """LM.prefill consumes the prompt in blocks yet must reproduce the
+    decode path EXACTLY — logits and every cache leaf — in both the wide
+    and the scan (ring-wrap / recurrent) modes."""
+    cfg = configs.get(arch_id).smoke
+    params = LM.init_lm(key, cfg)
+    B, G = 2, 4
+    S_max = P + G
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, P), 0, cfg.vocab)
+    ref_logits, ref_cache = _tokenwise_prefill(params, cfg, toks, S_max)
+
+    cache = LM.init_cache(cfg, B, S_max)
+    wide = P <= LM._min_attn_cache(cfg, cache)
+    assert wide == (not (arch_id == "gemma3-1b" and P == 20))
+    logits, cache = LM.prefill(params, cfg, toks, cache, block=block,
+                               last_only=False)
+    np.testing.assert_array_equal(np.asarray(logits), ref_logits)
+    for a, b in zip(jax.tree_util.tree_leaves(cache),
+                    jax.tree_util.tree_leaves(ref_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # last_only returns exactly the final position's logits
+    cache2 = LM.init_cache(cfg, B, S_max)
+    last, _ = LM.prefill(params, cfg, toks, cache2, block=block)
+    np.testing.assert_array_equal(np.asarray(last), ref_logits[:, -1:])
+
+
+def test_chunked_prefill_then_decode_matches(key):
+    """Greedy decode from a chunked prefill continues identically to one
+    from the token-by-token prefill (the serving handoff point)."""
+    cfg = configs.get("gemma3-1b").smoke
+    params = LM.init_lm(key, cfg)
+    B, P, G = 2, 10, 6
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0, cfg.vocab)
+    decode_jit = jax.jit(lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))
+
+    def continue_from(logits, cache):
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out = []
+        for j in range(G):
+            out.append(np.asarray(tok)[:, 0])
+            logits, cache = decode_jit(params, cache, tok, jnp.int32(P + j))
+            tok = jnp.argmax(logits[:, -1:], axis=-1)
+        return np.stack(out, axis=1)
+
+    lg_ref, cache_ref = _tokenwise_prefill(params, cfg, toks, P + G)
+    gen_ref = continue_from(jnp.asarray(lg_ref[:, -1:]), cache_ref)
+    cache = LM.init_cache(cfg, B, P + G)
+    lg, cache = LM.prefill(params, cfg, toks, cache, block=4)
+    gen = continue_from(lg, cache)
+    np.testing.assert_array_equal(gen, gen_ref)
