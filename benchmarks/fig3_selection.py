@@ -2,7 +2,7 @@
 and ViT — demonstrates the back-end concentration that motivates CAU/BD."""
 from __future__ import annotations
 
-from repro.core import ficabu
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
 from repro.data import synthetic as syn
 
 from . import common
@@ -15,8 +15,10 @@ def run(models=("resnet", "vit"), forget_class: int = 2) -> dict:
         alpha, lam = common.HPARAMS[model]
         splits = syn.split_forget_retain(s["x"], s["y"], forget_class)
         fx, fy = splits["forget"]
-        _, st = ficabu.unlearn(s["adapter"], s["params"], s["I_D"],
-                               fx[:32], fy[:32], mode="ssd", alpha=alpha, lam=lam)
+        unl = Unlearner(s["adapter"], s["I_D"],
+                        UnlearnSpec.for_mode("ssd", alpha=alpha, lam=lam))
+        _, st = unl.forget(ForgetRequest(fx[:32], fy[:32]),
+                           params=s["params"])
         out[model] = st["selected_per_layer"]
     return out
 

@@ -47,9 +47,9 @@ def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
          the legacy token-by-token walk of the decode path.
     """
     from repro import configs
-    from repro.core import adapters, cau, fisher
+    from repro.api import UnlearnSpec, Unlearner
+    from repro.core import adapters, fisher
     from repro.data import synthetic as syn
-    from repro.engine import UnlearnSession
     from repro.models import lm as LM
 
     cfg = configs.get(arch).smoke
@@ -61,27 +61,27 @@ def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
     i_d = fisher.diag_fisher(loss_fn, params, (toks[:16, :-1], toks[:16, 1:]),
                              chunk_size=4)
     adapter = adapters.lm_adapter(cfg, 24)
-    ucfg = cau.UnlearnConfig(alpha=8.0, lam=1.0, tau=-1.0, checkpoint_every=2,
-                             balanced=True, chunk_size=4)
+    spec = UnlearnSpec.for_mode("ficabu", alpha=8.0, lam=1.0, tau=-1.0,
+                                checkpoint_every=2, chunk_size=4)
     sets = []
     for d in range(n_domains):
         fb = toks[doms == d][:8]
         sets.append((fb[:, :-1], fb[:, 1:]))
 
-    sess = UnlearnSession(adapter, i_d)
+    unl = Unlearner(adapter, i_d, spec)
     # warm both program families (single-set + split-edit group variants)
-    sess.forget(params, *sets[0], ucfg)
-    _, _, g_warm = sess.forget_many(params, sets, ucfg)
+    unl.forget(sets[0], params=params)
+    _, _, g_warm = unl.forget_group(sets, params=params)
 
     t0 = time.time()
     for _ in range(reps):
         for s in sets:
-            sess.forget(params, *s, ucfg)
+            unl.forget(s, params=params)
     t_seq = (time.time() - t0) / (reps * n_domains)
 
     t0 = time.time()
     for _ in range(reps):
-        _, _, gs = sess.forget_many(params, sets, ucfg)
+        _, _, gs = unl.forget_group(sets, params=params)
     t_coal = (time.time() - t0) / (reps * n_domains)
     assert gs["engine"]["compiles"] == 0, "warm coalesced drain recompiled!"
 
@@ -147,9 +147,9 @@ def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
     executables; the legacy driver re-traces its per-layer programs and
     rebuilds the per-checkpoint jits on every request."""
     from repro import configs
+    from repro.api import ForgetRequest, UnlearnSpec, Unlearner
     from repro.core import adapters, cau, fisher
     from repro.data import synthetic as syn
-    from repro.engine import UnlearnSession
     from repro.models import lm as LM
 
     cfg = configs.get(arch).smoke
@@ -162,8 +162,10 @@ def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
                              chunk_size=4)
     adapter = adapters.lm_adapter(cfg, 24)
     fb = toks[:8]
-    ucfg = cau.UnlearnConfig(alpha=8.0, lam=1.0, tau=-1.0, checkpoint_every=2,
-                             balanced=True, chunk_size=4)
+    spec = UnlearnSpec.for_mode("ficabu", alpha=8.0, lam=1.0, tau=-1.0,
+                                checkpoint_every=2, chunk_size=4)
+    ucfg = spec.to_config()  # the identical engine config, for the baseline
+    req = ForgetRequest(fb[:, :-1], fb[:, 1:])
 
     def legacy():
         return cau.context_adaptive_unlearn_legacy(
@@ -177,13 +179,13 @@ def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
         legacy()
     t_legacy_warm = (time.time() - t0) / reps
 
-    sess = UnlearnSession(adapter, i_d)
+    unl = Unlearner(adapter, i_d, spec)
     t0 = time.time()
-    _, s1 = sess.forget(params, fb[:, :-1], fb[:, 1:], ucfg)
+    _, s1 = unl.forget(req, params=params)
     t_engine_cold = time.time() - t0
     t0 = time.time()
     for _ in range(reps):
-        _, sn = sess.forget(params, fb[:, :-1], fb[:, 1:], ucfg)
+        _, sn = unl.forget(req, params=params)
     t_engine_warm = (time.time() - t0) / reps
 
     out = {

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import ficabu
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
 from repro.data import synthetic as syn
 
 from . import common
@@ -17,22 +17,25 @@ def run(models=("resnet", "vit"), forget_classes=(2, 5)) -> list:
         s = common.trained(model)
         alpha, lam = common.HPARAMS[model]
         tau = common.RANDOM_GUESS + 0.03
+        # one warm facade per model: the SSD and CAU variants share the
+        # compiled-program cache across every forget class
+        unl_ssd = Unlearner(s["adapter"], s["I_D"],
+                            UnlearnSpec.for_mode("ssd", alpha=alpha, lam=lam))
+        unl_cau = unl_ssd.with_spec(UnlearnSpec.for_mode(
+            "cau", alpha=alpha, lam=lam, tau=tau, checkpoint_every=2))
         for cls in forget_classes:
             splits = syn.split_forget_retain(s["x"], s["y"], cls)
             fx, fy = splits["forget"]
             base = common.eval_model(s, s["params"], cls)
+            req = ForgetRequest(fx[:32], fy[:32], tag=cls)
 
             t0 = time.time()
-            p_ssd, st_ssd = ficabu.unlearn(
-                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
-                mode="ssd", alpha=alpha, lam=lam)
+            p_ssd, st_ssd = unl_ssd.forget(req, params=s["params"])
             t_ssd = time.time() - t0
             e_ssd = common.eval_model(s, p_ssd, cls)
 
             t0 = time.time()
-            p_cau, st_cau = ficabu.unlearn(
-                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
-                mode="cau", alpha=alpha, lam=lam, tau=tau, checkpoint_every=2)
+            p_cau, st_cau = unl_cau.forget(req, params=s["params"])
             t_cau = time.time() - t0
             e_cau = common.eval_model(s, p_cau, cls)
 

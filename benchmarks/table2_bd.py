@@ -4,7 +4,9 @@ from __future__ import annotations
 
 import time
 
-from repro.core import ficabu, metrics
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+from repro.core import metrics
+from repro.core.ficabu import auto_midpoint
 from repro.data import synthetic as syn
 
 from . import common
@@ -15,21 +17,22 @@ def run(models=("resnet", "vit"), forget_classes=(2, 5)) -> list:
     for model in models:
         s = common.trained(model)
         alpha, lam = common.HPARAMS[model]
+        unl_ssd = Unlearner(s["adapter"], s["I_D"],
+                            UnlearnSpec.for_mode("ssd", alpha=alpha, lam=lam))
         for cls in forget_classes:
             splits = syn.split_forget_retain(s["x"], s["y"], cls)
             fx, fy = splits["forget"]
             base = common.eval_model(s, s["params"], cls)
+            req = ForgetRequest(fx[:32], fy[:32], tag=cls)
 
-            p_ssd, st_ssd = ficabu.unlearn(
-                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
-                mode="ssd", alpha=alpha, lam=lam)
+            p_ssd, st_ssd = unl_ssd.forget(req, params=s["params"])
             e_ssd = common.eval_model(s, p_ssd, cls)
-            c_m = ficabu.auto_midpoint(st_ssd)
+            c_m = auto_midpoint(st_ssd)
 
+            unl_bd = unl_ssd.with_spec(UnlearnSpec.for_mode(
+                "bd", alpha=alpha, lam=lam, b_r=common.B_R[model], c_m=c_m))
             t0 = time.time()
-            p_bd, st_bd = ficabu.unlearn(
-                s["adapter"], s["params"], s["I_D"], fx[:32], fy[:32],
-                mode="bd", alpha=alpha, lam=lam, b_r=common.B_R[model], c_m=c_m)
+            p_bd, st_bd = unl_bd.forget(req, params=s["params"])
             t_bd = time.time() - t0
             e_bd = common.eval_model(s, p_bd, cls)
 

@@ -13,7 +13,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ficabu, fisher, metrics
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+from repro.core import metrics
 from repro.data import synthetic as syn
 from repro.models.module import map_with_paths
 
@@ -43,7 +44,6 @@ def _quantize(setting):
 
 
 def run(forget_class: int = 2) -> dict:
-    from repro.engine import UnlearnSession
     s = common.trained("resnet")
     qtree, dequant = _quantize(s)
     deq_params = dequant(qtree)
@@ -53,24 +53,24 @@ def run(forget_class: int = 2) -> dict:
     fx, fy = splits["forget"]
     tau = common.RANDOM_GUESS + 0.03
 
-    # one warm engine session serves both the SSD baseline and FiCABU; both
-    # sweeps run the kernel dampening path (bit-equal to the jnp path, see
+    # one warm facade serves both the SSD baseline and FiCABU; both sweeps
+    # run the kernel dampening path (bit-equal to the jnp path, see
     # test_kernel_path_matches_jnp_path) so the FiCABU sweep reuses every
     # per-layer program the SSD sweep compiled.
-    session = UnlearnSession(s["adapter"], s["I_D"])
+    unl_ssd = Unlearner(s["adapter"], s["I_D"], UnlearnSpec.for_mode(
+        "ssd", alpha=10.0, lam=1.0, use_kernel=True))
+    unl_fic = unl_ssd.with_spec(UnlearnSpec.for_mode(
+        "ficabu", alpha=10.0, lam=1.0, tau=tau, checkpoint_every=2,
+        b_r=10.0, use_kernel=True))
+    req = ForgetRequest(fx[:32], fy[:32], tag=forget_class)
 
     # SSD on the INT8-deployed model (baseline processor)
-    p_ssd, st_ssd = ficabu.unlearn(
-        s["adapter"], deq_params, s["I_D"], fx[:32], fy[:32],
-        mode="ssd", alpha=10.0, lam=1.0, use_kernel=True, session=session)
+    p_ssd, st_ssd = unl_ssd.forget(req, params=deq_params)
     e_ssd = common.eval_model(s, p_ssd, forget_class)
 
     # FiCABU (CAU + BD, kernel dampening path) on the same model
     t0 = time.time()
-    p_fic, st_fic = ficabu.unlearn(
-        s["adapter"], deq_params, s["I_D"], fx[:32], fy[:32],
-        mode="ficabu", alpha=10.0, lam=1.0, tau=tau, checkpoint_every=2,
-        b_r=10.0, use_kernel=True, session=session)
+    p_fic, st_fic = unl_fic.forget(req, params=deq_params)
     t_fic = time.time() - t0
     e_fic = common.eval_model(s, p_fic, forget_class)
 
@@ -87,11 +87,9 @@ def run(forget_class: int = 2) -> dict:
     splits2 = syn.split_forget_retain(s["x"], s["y"], forget2)
     f2x, f2y = splits2["forget"]
     t0 = time.time()
-    p_co, st_k, gstats = ficabu.unlearn_group(
-        s["adapter"], deq_params, s["I_D"],
-        [(fx[:32], fy[:32]), (f2x[:32], f2y[:32])],
-        mode="ficabu", alpha=10.0, lam=1.0, tau=tau, checkpoint_every=2,
-        b_r=10.0, use_kernel=True, session=session)
+    p_co, st_k, gstats = unl_fic.forget_group(
+        [req, ForgetRequest(f2x[:32], f2y[:32], tag=forget2)],
+        params=deq_params)
     t_co = time.time() - t0
     e_co1 = common.eval_model(s, p_co, forget_class)
     e_co2 = common.eval_model(s, p_co, forget2)

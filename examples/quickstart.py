@@ -1,16 +1,18 @@
 """Quickstart: FiCABU in ~60 lines.
 
-Trains a small classifier on synthetic data, computes the stored global
-Fisher importance once (as SSD prescribes), then serves a forget request
-with the full FiCABU method (Context-Adaptive Unlearning + Balanced
-Dampening) and prints the before/after metrics.
+Trains a small classifier on synthetic data, stands up an ``Unlearner``
+facade (which computes and stores the global Fisher importance once, as SSD
+prescribes), then serves a forget request with the full FiCABU method
+(Context-Adaptive Unlearning + Balanced Dampening) and prints the
+before/after metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import adapters, ficabu, fisher, metrics
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+from repro.core import adapters, metrics
 from repro.data import synthetic as syn
 from repro.models import vision as V
 from repro.optim import AdamWConfig, init_adamw, make_train_step
@@ -32,11 +34,17 @@ for _ in range(150):
     params, opt, loss = step(params, opt, next(bt))
 print(f"pre-trained, final loss {float(loss):.4f}")
 
-# 3. Global importance I_D — computed ONCE after training and stored.
-I_D = fisher.diag_fisher(loss_fn, params, (x[:128], y[:128]), chunk_size=8)
+# 3. The unlearning service: one typed spec + one facade. The facade
+#    computes the global importance I_D ONCE after training and stores it.
+adapter = adapters.resnet_adapter(cfg)
+unl = Unlearner(adapter, spec=UnlearnSpec.for_mode(
+    "ficabu",                 # CAU + Balanced Dampening
+    alpha=10.0, lam=1.0,      # the paper's SSD hyperparameters
+    tau=1 / 6 + 0.03,         # random-guess target
+    checkpoint_every=2))      # checkpoints every 2 layers
+unl.ensure_fisher(loss_fn, params, (x[:128], y[:128]), chunk_size=8)
 
 # 4. A forget request arrives: unlearn class 3 with FiCABU.
-adapter = adapters.resnet_adapter(cfg)
 fx, fy = splits["forget"]
 
 
@@ -49,12 +57,8 @@ def report(tag, p):
 
 
 report("before", params)
-new_params, stats = ficabu.unlearn(
-    adapter, params, I_D, fx[:32], fy[:32],
-    mode="ficabu",            # CAU + Balanced Dampening
-    alpha=10.0, lam=1.0,      # the paper's SSD hyperparameters
-    tau=1 / 6 + 0.03,         # random-guess target
-    checkpoint_every=2)       # checkpoints every 2 layers
+new_params, stats = unl.forget(ForgetRequest(fx[:32], fy[:32], tag="class-3"),
+                               params=params)
 report("after", new_params)
 print(f"early-stopped at layer l={stats['stopped_at_l']} of "
       f"{adapter.n_layers}; MACs vs SSD: {stats['macs_vs_ssd_pct']:.1f}%")

@@ -2,18 +2,39 @@
 with a forget request applied IN PLACE between batches — no retraining,
 no weight reload; the server keeps serving on the edited weights.
 
+Serving drives unlearning through the ``repro.api.Unlearner`` facade with
+one typed ``UnlearnSpec`` (echoed into the result for auditability), and
+``--cache-dir`` keeps JAX's persistent compilation cache on disk: the
+second (cold-process) run below replays every compiled program instead of
+recompiling.
+
     PYTHONPATH=src python examples/serve_with_unlearning.py
 """
+import tempfile
+
 from repro.launch import serve
 
-res = serve.main([
-    "--arch", "gemma3-1b",
-    "--requests", "4",
-    "--prompt-len", "12",
-    "--gen-len", "6",
-    "--unlearn-after", "1",
-    "--forget-domain", "1",
-])
-assert res["unlearned"]
-print("served batches:", [r["latency_s"] for r in res["served"]])
-print("unlearning stopped at layer:", res["unlearn_stats"]["stopped_at_l"])
+with tempfile.TemporaryDirectory() as cache_dir:
+    args = [
+        "--arch", "gemma3-1b",
+        "--requests", "4",
+        "--prompt-len", "12",
+        "--gen-len", "6",
+        "--unlearn-after", "1",
+        "--forget-domain", "1",
+        "--cache-dir", cache_dir,
+    ]
+    res = serve.main(args)
+    assert res["unlearned"]
+    print("served batches:", [r["latency_s"] for r in res["served"]])
+    print("unlearning stopped at layer:", res["unlearn_stats"]["stopped_at_l"])
+    print("unlearn spec:", res["unlearn_spec"])
+    n_cached = res["compilation_cache"]["entries_new"]
+    print(f"compilation cache: {n_cached} programs persisted to disk")
+
+    # serve again against the warm disk cache: within this process the
+    # already-initialized cache config keeps pointing at cache_dir, so the
+    # --check gate verifies zero new entries were written
+    res2 = serve.main(args + ["--check"])
+    assert res2["compilation_cache"]["entries_new"] == 0
+    print("warm-cache rerun compiled nothing new")

@@ -10,7 +10,8 @@ other domains keep theirs.
 """
 import jax
 
-from repro.core import adapters, ficabu, fisher, metrics
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+from repro.core import adapters, metrics
 from repro.data import synthetic as syn
 from repro.models import lm as LM
 from repro.optim import AdamWConfig, init_adamw, make_train_step
@@ -44,14 +45,15 @@ pre = domain_accs(params)
 print("next-token acc per domain (pre): ",
       " ".join(f"{a * 100:5.1f}%" for a in pre))
 
-I_D = fisher.diag_fisher(loss_fn, params,
-                         (tokens[:64, :-1], tokens[:64, 1:]), chunk_size=8)
 splits = syn.lm_split_forget_retain(tokens, domains, forget_domain=1)
 fb = splits["forget"][:24]
 adapter = adapters.lm_adapter(cfg, 24)
-params2, stats = ficabu.unlearn(
-    adapter, params, I_D, fb[:, :-1], fb[:, 1:],
-    mode="ficabu", alpha=6.0, lam=0.5, tau=pre[1] * 0.5, checkpoint_every=1)
+unl = Unlearner(adapter, spec=UnlearnSpec.for_mode(
+    "ficabu", alpha=6.0, lam=0.5, tau=pre[1] * 0.5, checkpoint_every=1))
+unl.ensure_fisher(loss_fn, params, (tokens[:64, :-1], tokens[:64, 1:]),
+                  chunk_size=8)
+params2, stats = unl.forget(ForgetRequest(fb[:, :-1], fb[:, 1:],
+                                          tag="domain-1"), params=params)
 
 post = domain_accs(params2)
 print("next-token acc per domain (post):",

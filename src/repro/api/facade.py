@@ -1,0 +1,314 @@
+"""``Unlearner`` — the one facade every unlearning call site drives.
+
+Owns the three long-lived pieces of the FiCABU service:
+
+  * the ``ModelAdapter`` (the per-layer view of the served model),
+  * the global Fisher importance I_D and its lifecycle (computed once per
+    served model, structure-locked thereafter — a refresh with a
+    structurally different tree is a ``ValueError``, never a silent clobber),
+  * ONE warm ``repro.engine.UnlearnSession`` whose compiled-program cache
+    persists across every forget request and coalesced drain.
+
+The same object drives serve.py drains, the pod-mesh dry-run
+(``shard(mesh)``: parameters/batches/Fisher laid out by
+``ExecSpec.param_pspecs``/``batch_pspec``, fused steps donating layer
+buffers), benchmarks and the examples.  Requests are ``ForgetRequest``s (or
+bare ``(inputs, labels)`` pairs); configuration is an ``UnlearnSpec``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.cau import ModelAdapter, UnlearnConfig
+from repro.engine import UnlearnSession, shape_signature
+
+from .specs import UnlearnSpec
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ForgetRequest:
+    """One forget set: the model inputs and the labels whose mapping must be
+    destroyed.  ``tag`` is free-form audit metadata (domain id, ticket id)
+    carried into the returned stats."""
+    inputs: Any
+    labels: Any
+    tag: Optional[Any] = None
+
+
+def enable_compilation_cache(cache_dir: str) -> int:
+    """Point JAX's persistent compilation cache at ``cache_dir`` (created if
+    missing) with thresholds dropped to zero so every program is eligible.
+    Returns the number of entries already on disk — a cold process start
+    with a warm cache should then add ZERO new entries (the serve.py
+    ``--check`` gate asserts exactly that).  Idempotent for the same dir;
+    the cache is PROCESS-GLOBAL, so pointing it somewhere else after it was
+    configured raises instead of silently repointing every facade's cache
+    (per-tenant cache dirs are the ROADMAP multi-tenant item, not this)."""
+    current = jax.config.jax_compilation_cache_dir
+    if current and os.path.abspath(current) != os.path.abspath(cache_dir):
+        raise ValueError(
+            f"the persistent compilation cache already points at {current!r} "
+            f"for this process; refusing to repoint it to {cache_dir!r} — "
+            "JAX's cache dir is process-global, so concurrent facades would "
+            "intermix entries and corrupt each other's cold-start accounting")
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    return compilation_cache_entries(cache_dir)
+
+
+def compilation_cache_entries(cache_dir: str) -> int:
+    """Number of serialized executables currently in ``cache_dir``."""
+    try:
+        return sum(1 for n in os.listdir(cache_dir)
+                   if not n.startswith("."))
+    except FileNotFoundError:
+        return 0
+
+
+def _coerce_request(req) -> ForgetRequest:
+    if isinstance(req, ForgetRequest):
+        return req
+    if isinstance(req, (tuple, list)) and len(req) == 2:
+        return ForgetRequest(inputs=req[0], labels=req[1])
+    raise ValueError(
+        "a forget request must be a ForgetRequest or an (inputs, labels) "
+        f"pair, got {type(req).__name__}")
+
+
+class Unlearner:
+    """The unlearning service facade: ``forget`` / ``forget_group`` /
+    ``shard``, all configured by one ``UnlearnSpec``.
+
+    >>> unl = Unlearner(adapter, fisher_global, UnlearnSpec.for_mode("ficabu"))
+    >>> params, stats = unl.forget(ForgetRequest(fx, fy), params=params)
+
+    ``session=`` adopts an existing warm ``UnlearnSession`` (its compiled
+    programs survive); otherwise the facade builds one lazily on the first
+    request.  A Fisher tree whose structure differs from the session's is
+    rejected — refresh values, never shape (the engine's cached programs are
+    specialized to the Fisher leaf shapes).
+    """
+
+    def __init__(self, adapter: ModelAdapter,
+                 fisher_global: Optional[Params] = None,
+                 spec: Optional[UnlearnSpec] = None, *,
+                 session: Optional[UnlearnSession] = None):
+        if not isinstance(adapter, ModelAdapter):
+            raise ValueError(
+                f"Unlearner needs a repro.core.ModelAdapter (see "
+                f"repro.core.adapters), got {type(adapter).__name__}")
+        spec = UnlearnSpec() if spec is None else spec
+        if not isinstance(spec, UnlearnSpec):
+            raise ValueError(
+                f"spec must be an UnlearnSpec (see repro.api), "
+                f"got {type(spec).__name__}")
+        self.adapter = adapter
+        self.spec = spec
+        self.mesh = None
+        self._fisher: Optional[Params] = None
+        self._session: Optional[UnlearnSession] = None
+        if session is not None:
+            if session.adapter is not adapter:
+                raise ValueError(
+                    "the supplied UnlearnSession is bound to adapter "
+                    f"{session.adapter.name!r}, not {adapter.name!r}; a warm "
+                    "session's compiled programs are adapter-specific — "
+                    "build a new Unlearner for the other model")
+            self._session = session
+            self._fisher = session.fisher_global
+        if fisher_global is not None:
+            self.set_fisher(fisher_global)
+        if spec.exec.cache_dir is not None:
+            enable_compilation_cache(spec.exec.cache_dir)
+
+    # -- Fisher lifecycle ---------------------------------------------------
+    @property
+    def fisher_global(self) -> Optional[Params]:
+        return self._fisher
+
+    def set_fisher(self, tree: Params) -> "Unlearner":
+        """Install / refresh the global Fisher importance I_D.
+
+        Values may be refreshed at any time (the streamed-refresh path);
+        STRUCTURE may not: a tree whose treedef / leaf shapes / dtypes
+        differ from the one the warm session compiled against raises
+        ``ValueError`` instead of silently clobbering the session state
+        (the old ``ficabu.unlearn_group`` bug)."""
+        if tree is None:
+            raise ValueError("set_fisher needs a Fisher pytree; to compute "
+                             "one, use ensure_fisher(loss_fn, params, batch)")
+        anchor = self._fisher
+        if anchor is not None \
+                and shape_signature(tree) != shape_signature(anchor):
+            raise ValueError(
+                "refusing to replace the session's global Fisher with a "
+                "structurally different tree (treedef/leaf shapes/dtypes "
+                "changed) — the warm session's compiled programs are "
+                "specialized to the current structure. Refresh Fisher "
+                "VALUES with the same structure, or build a new Unlearner "
+                "for the new model.")
+        if self.mesh is not None:
+            tree = self.place_params(tree)  # same layout rule as params
+        self._fisher = tree
+        if self._session is not None:
+            self._session.fisher_global = tree
+        return self
+
+    def ensure_fisher(self, loss_fn, params: Params, batch,
+                      chunk_size: Optional[int] = None) -> Params:
+        """Compute the global Fisher ONCE (diagonal, over ``batch``) if this
+        facade does not hold one yet; later calls are no-ops returning the
+        stored tree (the once-per-served-model lifecycle)."""
+        if self._fisher is None:
+            from repro.core import fisher as fisher_mod
+            cs = self.spec.exec.chunk_size if chunk_size is None else chunk_size
+            self.set_fisher(fisher_mod.diag_fisher(loss_fn, params, batch,
+                                                   chunk_size=cs))
+        return self._fisher
+
+    # -- session ------------------------------------------------------------
+    @property
+    def session(self) -> Optional[UnlearnSession]:
+        """The warm engine session (None until the first request)."""
+        return self._session
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Engine program-cache counters (empty dict before the first
+        request)."""
+        return dict(self._session.stats) if self._session else {}
+
+    def _ensure_session(self) -> UnlearnSession:
+        if self._session is None:
+            if self._fisher is None:
+                raise ValueError(
+                    "no global Fisher importance installed — pass "
+                    "fisher_global to Unlearner(...), call set_fisher(tree), "
+                    "or ensure_fisher(loss_fn, params, batch) first")
+            # coerce explicitly: the ENGINE maps donate=None to auto-donate
+            # on accelerators, but the facade's None means NO donation —
+            # migrated call sites routinely reuse the pre-edit tree, so
+            # in-place editing is strictly opt-in (ExecSpec.donate=True)
+            donate = bool(self.spec.exec.donate)
+            self._session = UnlearnSession(self.adapter, self._fisher,
+                                           donate=donate)
+        return self._session
+
+    def with_spec(self, spec: UnlearnSpec) -> "Unlearner":
+        """A sibling facade over the SAME adapter, Fisher, warm session and
+        mesh, with a different request configuration — e.g. one deployment
+        running "ssd" (baseline) and "ficabu" requests against one
+        compiled-program cache.  The session is materialized here (if a
+        Fisher is installed) so both facades share its warmth; the session's
+        ``donate`` setting stays as first configured."""
+        sess = self._session
+        if sess is None and self._fisher is not None:
+            sess = self._ensure_session()
+        sib = Unlearner(self.adapter, self._fisher, spec, session=sess)
+        if self.mesh is not None:
+            sib.shard(self.mesh)
+        return sib
+
+    # -- mesh execution -----------------------------------------------------
+    def shard(self, mesh) -> "Unlearner":
+        """Bind a device mesh: from here on every request's parameters and
+        forget batches are laid out by ``ExecSpec.param_pspecs`` /
+        ``batch_pspec`` before the sweep, and the stored Fisher is placed
+        immediately.  Call before the first request — re-placing inputs
+        after programs compiled would retrace them."""
+        if mesh is None:
+            raise ValueError("shard(mesh) needs a jax Mesh; to drop mesh "
+                             "placement build a new Unlearner")
+        axes = self.spec.exec.mesh_axes
+        if axes is not None:
+            missing = [a for a in axes if a not in mesh.shape]
+            if missing:
+                raise ValueError(
+                    f"ExecSpec.mesh_axes {axes} not all present on the mesh "
+                    f"(axes {tuple(mesh.shape)}): missing {missing}")
+        self.mesh = mesh
+        if self._fisher is not None:
+            self.set_fisher(self._fisher)  # re-place on the new mesh
+        return self
+
+    def _named(self, pspec):
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, pspec)
+
+    def place_params(self, params: Params) -> Params:
+        """device_put a parameter tree with this facade's layout rule
+        (no-op without a mesh)."""
+        if self.mesh is None:
+            return params
+        specs = self.spec.exec.param_pspecs(params, self.mesh)
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, self._named(s)), params, specs)
+
+    def place_batch(self, batch):
+        """device_put a [B, ...] batch pytree with the DP layout (no-op
+        without a mesh)."""
+        if self.mesh is None:
+            return batch
+
+        def one(x):
+            x = jax.numpy.asarray(x)
+            ps = self.spec.exec.batch_pspec(self.mesh, int(x.shape[0]),
+                                            x.ndim)
+            return jax.device_put(x, self._named(ps))
+
+        return jax.tree_util.tree_map(one, batch)
+
+    # -- the API ------------------------------------------------------------
+    def forget(self, request, *, params: Params,
+               cfg: Optional[UnlearnConfig] = None
+               ) -> Tuple[Params, Dict]:
+        """Serve one forget request through the warm engine.  Returns
+        ``(params', stats)``; ``cfg`` overrides the spec-derived engine
+        config (legacy-shim path — normal callers configure via the spec)."""
+        req = _coerce_request(request)
+        sess = self._ensure_session()
+        cfg = self.spec.to_config() if cfg is None else cfg
+        if self.mesh is not None:
+            params = self.place_params(params)
+        inputs, labels = self.place_batch((req.inputs, req.labels))
+        new_params, stats = sess.forget(params, inputs, labels, cfg)
+        stats["mode"] = self.spec.mode
+        if req.tag is not None:
+            stats["tag"] = req.tag
+        return new_params, stats
+
+    def forget_group(self, requests: Sequence, *, params: Params,
+                     reference: Optional[Params] = None,
+                     cfg: Optional[UnlearnConfig] = None
+                     ) -> Tuple[Params, List[Dict], Dict]:
+        """Serve a GROUP of forget requests as ONE coalesced back-end-first
+        sweep (a serving drain).  Returns ``(params', [stats per request],
+        group_stats)``; per-request halting/MAC accounting is preserved."""
+        reqs = [_coerce_request(r) for r in requests]
+        if not reqs:
+            raise ValueError("forget_group needs at least one forget "
+                             "request; an empty drain should be skipped by "
+                             "the caller")
+        sess = self._ensure_session()
+        cfg = self.spec.to_config() if cfg is None else cfg
+        if self.mesh is not None:
+            params = self.place_params(params)
+            if reference is not None:
+                reference = self.place_params(reference)
+        sets = [self.place_batch((r.inputs, r.labels)) for r in reqs]
+        new_params, stats_k, group_stats = sess.forget_many(
+            params, sets, cfg, reference=reference)
+        for r, st in zip(reqs, stats_k):
+            st["mode"] = self.spec.mode
+            if r.tag is not None:
+                st["tag"] = r.tag
+        group_stats["mode"] = self.spec.mode
+        return new_params, stats_k, group_stats

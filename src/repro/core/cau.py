@@ -158,20 +158,19 @@ def context_adaptive_unlearn(
 ) -> Tuple[Params, Dict]:
     """Algorithm 1 (+ optional Balanced Dampening). Returns (params', stats).
 
-    Routes through the compiled engine (``repro.engine.UnlearnSession``):
-    one fused device program per unique layer shape, checkpoint evaluation
-    as a single traced-depth program, and a program cache that persists on
-    ``session`` so repeated forget requests retrace nothing. Pass a warm
-    ``session`` (serving path) to reuse compiled executables across
-    requests; otherwise an ephemeral session is created.
+    Routes through the ``repro.api.Unlearner`` facade over the compiled
+    engine (``repro.engine.UnlearnSession``): one fused device program per
+    unique layer shape, checkpoint evaluation as a single traced-depth
+    program, and a program cache that persists on ``session`` so repeated
+    forget requests retrace nothing. Pass a warm ``session`` (serving path)
+    to reuse compiled executables across requests; otherwise an ephemeral
+    one is created.
     """
-    from repro.engine import UnlearnSession  # deferred: engine imports cau
-    if session is None:
-        session = UnlearnSession(adapter, fisher_global)
-    else:
-        assert session.adapter is adapter, "session bound to another adapter"
-        session.fisher_global = fisher_global
-    return session.forget(params, inputs, labels, cfg)
+    from repro.api import Unlearner  # deferred: api imports cau
+    unl = Unlearner(adapter, fisher_global, session=session)
+    new_params, stats = unl.forget((inputs, labels), params=params, cfg=cfg)
+    stats.pop("mode", None)  # this entry point predates modes
+    return new_params, stats
 
 
 def context_adaptive_unlearn_legacy(

@@ -1,46 +1,62 @@
-"""FiCABU top-level API.
+"""FiCABU top-level API — DEPRECATED kwarg shims over ``repro.api``.
 
-``unlearn(adapter, params, fisher_global, inputs, labels, mode=..., ...)``
-runs one forget request.  Modes:
+The public entry points now live in ``repro.api``:
+
+    from repro.api import Unlearner, UnlearnSpec, ForgetRequest
+    unl = Unlearner(adapter, fisher_global, UnlearnSpec.for_mode("ficabu"))
+    params, stats = unl.forget(ForgetRequest(inputs, labels), params=params)
+
+``unlearn`` / ``unlearn_group`` below keep the historical loose-kwargs
+signatures for existing callers: each emits a ``DeprecationWarning``, builds
+the equivalent ``UnlearnSpec``, and routes through the facade — producing
+bit-identical parameters and stats (asserted in tests/test_api.py).
+
+Modes (unchanged):
 
   "ssd"     vanilla SSD via the layer sweep (no early stop, uniform (alpha,
             lambda)) — the paper's baseline, MAC-normalised to 100%.
   "cau"     Context-Adaptive Unlearning only (paper §III-A, Table I).
   "bd"      Balanced Dampening only (paper §III-B, Table II).
   "ficabu"  CAU + BD — the full method (paper §IV-B, Table IV).
-
-``unlearn_group(...)`` coalesces several forget sets into ONE back-end-first
-sweep (serving drains; DESIGN.md §8).
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import numpy as np
 
-from .cau import ModelAdapter, UnlearnConfig, context_adaptive_unlearn
-from .schedule import midpoint_from_selection
+from .cau import ModelAdapter, UnlearnConfig
 
 Params = Any
 
 MODES = ("ssd", "cau", "bd", "ficabu")
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.ficabu.{old} is deprecated; use {new} (repro.api). "
+        "This shim routes through the facade and stays bit-identical.",
+        DeprecationWarning, stacklevel=3)
+
+
+def _spec(mode, alpha, lam, tau, checkpoint_every, b_r, c_m, chunk_size,
+          use_kernel):
+    from repro.api import UnlearnSpec
+    return UnlearnSpec.for_mode(
+        mode, alpha=alpha, lam=lam, tau=tau,
+        checkpoint_every=checkpoint_every, b_r=b_r, c_m=c_m,
+        chunk_size=chunk_size, use_kernel=use_kernel)
+
+
 def _mode_config(mode: str, alpha, lam, tau, checkpoint_every, b_r, c_m,
                  chunk_size, use_kernel) -> UnlearnConfig:
-    """Shared mode -> UnlearnConfig mapping for the single-request and
-    coalesced-group entry points (they must never diverge)."""
-    assert mode in MODES, f"mode must be one of {MODES}"
-    cau_on = mode in ("cau", "ficabu")
-    bd_on = mode in ("bd", "ficabu")
-    return UnlearnConfig(
-        alpha=alpha, lam=lam,
-        tau=tau if cau_on else -1.0,                       # -1 => never early-stop
-        checkpoint_every=checkpoint_every if cau_on else 0,  # 0 => no checkpoints
-        balanced=bd_on, b_r=b_r, c_m=c_m,
-        chunk_size=chunk_size, use_kernel=use_kernel)
+    """DEPRECATED shim: the mode -> engine-config mapping now lives in
+    ``UnlearnSpec.to_config()`` (one source of truth for the single-request
+    and coalesced-group entry points)."""
+    _deprecated("_mode_config", "UnlearnSpec.for_mode(mode, ...).to_config()")
+    return _spec(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
+                 chunk_size, use_kernel).to_config()
 
 
 def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
@@ -49,15 +65,18 @@ def unlearn(adapter: ModelAdapter, params: Params, fisher_global: Params,
             checkpoint_every: int = 4, b_r: float = 10.0,
             c_m: Optional[float] = None, chunk_size: int = 8,
             use_kernel: bool = False, session=None) -> Tuple[Params, Dict]:
-    """``session``: a warm ``repro.engine.UnlearnSession`` to reuse compiled
+    """DEPRECATED shim for ``Unlearner.forget``.
+
+    ``session``: a warm ``repro.engine.UnlearnSession`` to reuse compiled
     per-layer programs across forget requests (serving path); None builds an
     ephemeral one."""
-    cfg = _mode_config(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
-                       chunk_size, use_kernel)
-    new_params, stats = context_adaptive_unlearn(
-        adapter, params, fisher_global, inputs, labels, cfg, session=session)
-    stats["mode"] = mode
-    return new_params, stats
+    _deprecated("unlearn", "Unlearner.forget")
+    from repro.api import ForgetRequest, Unlearner
+    unl = Unlearner(adapter, fisher_global,
+                    _spec(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
+                          chunk_size, use_kernel),
+                    session=session)
+    return unl.forget(ForgetRequest(inputs, labels), params=params)
 
 
 def unlearn_group(adapter: ModelAdapter, params: Params, fisher_global: Params,
@@ -67,36 +86,31 @@ def unlearn_group(adapter: ModelAdapter, params: Params, fisher_global: Params,
                   c_m: Optional[float] = None, chunk_size: int = 8,
                   use_kernel: bool = False, session=None, reference=None
                   ) -> Tuple[Params, list, Dict]:
-    """One coalesced back-end-first sweep over a GROUP of forget sets.
-
-    ``forget_sets`` is a list of (inputs, labels) pairs — e.g. every forget
-    request due at a serving drain point. The layer stack is walked once for
-    the whole group (engine ``UnlearnSession.forget_many``): each set's
-    Fisher/activations come from the shared ``reference`` snapshot (default:
-    the entry weights) and the per-layer dampening edits compose, while each
-    set keeps its own checkpoint trace, ``stopped_at_l`` and MAC accounting.
-
-    Returns (params', [stats per set], group_stats).
-    """
-    cfg = _mode_config(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
-                       chunk_size, use_kernel)
-    from repro.engine import UnlearnSession  # deferred: engine imports cau
-    if session is None:
-        session = UnlearnSession(adapter, fisher_global)
-    else:
-        assert session.adapter is adapter, "session bound to another adapter"
-        session.fisher_global = fisher_global
-    new_params, stats_k, group_stats = session.forget_many(
-        params, list(forget_sets), cfg, reference=reference)
-    for st in stats_k:
-        st["mode"] = mode
-    group_stats["mode"] = mode
-    return new_params, stats_k, group_stats
+    """DEPRECATED shim for ``Unlearner.forget_group``: one coalesced
+    back-end-first sweep over a GROUP of (inputs, labels) forget sets (a
+    serving drain; DESIGN.md §8).  Returns (params', [stats per set],
+    group_stats)."""
+    _deprecated("unlearn_group", "Unlearner.forget_group")
+    from repro.api import Unlearner
+    unl = Unlearner(adapter, fisher_global,
+                    _spec(mode, alpha, lam, tau, checkpoint_every, b_r, c_m,
+                          chunk_size, use_kernel),
+                    session=session)
+    return unl.forget_group(list(forget_sets), params=params,
+                            reference=reference)
 
 
 def auto_midpoint(ssd_stats: Dict) -> float:
     """Derive c_m from a baseline-SSD run's layer-wise selection counts
     (paper §III-B step (i)-(ii))."""
+    from .schedule import midpoint_from_selection
+    if not isinstance(ssd_stats, dict) or "selected_per_layer" not in ssd_stats:
+        have = sorted(ssd_stats) if isinstance(ssd_stats, dict) else \
+            type(ssd_stats).__name__
+        raise ValueError(
+            "auto_midpoint needs the stats dict of a completed SSD sweep "
+            "(must contain 'selected_per_layer', as returned by "
+            f"Unlearner.forget with mode='ssd'); got {have}")
     sel = ssd_stats["selected_per_layer"]
     counts = [sel.get(l, 0) for l in sorted(sel)]
     return midpoint_from_selection(counts)

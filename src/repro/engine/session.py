@@ -40,10 +40,15 @@ class UnlearnSession:
     ``donate=None`` lets each fused step donate the layer buffer on
     accelerator backends (the in-place edit path); the default ``False`` is
     safe when callers keep references to the pre-edit parameter tree.
+
+    This is the ENGINE layer: call sites should drive it through the
+    ``repro.api.Unlearner`` facade (which owns the Fisher lifecycle and the
+    session's warmth across requests) rather than constructing sessions
+    directly — CI's api-gate enforces that outside repro.api/repro.engine.
     """
 
     def __init__(self, adapter: ModelAdapter, fisher_global: Params,
-                 *, donate: bool = False):
+                 *, donate: Optional[bool] = False):
         self.adapter = adapter
         self.fisher_global = fisher_global
         self.donate = donate
@@ -283,7 +288,10 @@ class UnlearnSession:
         """
         adapter = self.adapter
         K = len(forget_sets)
-        assert K >= 1, "forget_many needs at least one forget set"
+        if K < 1:
+            raise ValueError("forget_many needs at least one (inputs, "
+                             "labels) forget set; skip the drain instead of "
+                             "passing an empty group")
         ref_tree = params if reference is None else reference
         self.stats["requests"] += K
         self.stats["group_sweeps"] += 1

@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
 on the production mesh and record memory / cost / collective analysis.
@@ -10,6 +13,15 @@ on the production mesh and record memory / cost / collective analysis.
 
 Results land in one JSON per cell (the roofline table in EXPERIMENTS.md is
 generated from these by benchmarks/roofline_report.py).
+
+``--unlearn-session`` runs the ENGINE ON THE MESH end-to-end (the ROADMAP
+item the single lowered cell of unlearn_cell.py only approximated): a full
+coalesced forget-sweep session driven through the ``repro.api.Unlearner``
+facade with parameters/Fisher/batches laid out by ``dist.sharding`` specs
+and fused-step layer buffers donated — then a second drain through the same
+warm session to prove zero retraces survive the sharded layouts.
+``--sweep-mesh RxC`` sizes the ("data", "model") mesh (a submesh of the
+forced host devices; numerics, not just lowering, so keep it small on CPU).
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -130,6 +142,118 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def run_unlearn_session(arch_id: str, mesh_shape=(2, 2),
+                        n_domains: int = 2) -> dict:
+    """Full session sweep on a ("data", "model") mesh: sharded params,
+    sharded Fisher, DP-sharded forget batches, donated fused-step buffers —
+    all driven through the ``Unlearner`` facade exactly as serve.py drives
+    it on one device. Returns the record written to the out dir."""
+    import warnings
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import ExecSpec, ForgetRequest, UnlearnSpec, Unlearner
+    from repro.core import adapters
+    from repro.data import synthetic as syn
+    from repro.models import lm as LM
+
+    # CPU host devices cannot donate; the flag still exercises the
+    # donate_argnums plumbing the TPU path uses, so silence the XLA note.
+    warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+
+    cfg = configs.get(arch_id).smoke
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                         devices=jax.devices()[:int(np.prod(mesh_shape))])
+    spec = UnlearnSpec(
+        mode="ficabu",
+        dampen={"alpha": 8.0, "lam": 1.0},
+        # tau=-1: never early-stop, so the sweep walks EVERY layer kind
+        # (head, blocks, embedding) through the sharded fused step
+        halt={"tau": -1.0, "checkpoint_every": 2},
+        exec=ExecSpec(chunk_size=4, donate=True,
+                      mesh_axes=("data", "model"), sharding="tp"))
+
+    seq = 17
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=seq,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    adapter = adapters.lm_adapter(cfg, seq - 1)
+
+    unl = Unlearner(adapter, spec=spec).shard(mesh)
+    params = unl.place_params(params)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
+    unl.ensure_fisher(loss_fn, params, (toks[:16, :-1], toks[:16, 1:]))
+
+    reqs = [ForgetRequest(toks[doms == d][:8, :-1], toks[doms == d][:8, 1:],
+                          tag=int(d)) for d in range(n_domains)]
+    t0 = time.time()
+    p1, stats_k, g1 = unl.forget_group(reqs, params=params)
+    t_cold = time.time() - t0
+    t0 = time.time()
+    _, _, g2 = unl.forget_group(reqs, params=params)  # warm: zero retraces
+    t_warm = time.time() - t0
+
+    def _sharded_leaves(tree):
+        leaves = jax.tree_util.tree_leaves(tree)
+        return sum(1 for x in leaves
+                   if not x.sharding.is_fully_replicated), len(leaves)
+
+    n_sharded, n_leaves = _sharded_leaves(p1)
+    fi_sharded, fi_leaves = _sharded_leaves(unl.fisher_global)
+    finite = all(bool(jnp.isfinite(x).all())
+                 for x in jax.tree_util.tree_leaves(p1))
+
+    # the DONATING program family: group sweeps pin the snapshot and never
+    # donate (repro.engine.fused), so exercise donation through a
+    # single-request sweep — its fused steps get donate_argnums on the
+    # sharded layer buffers. p1 is consumed here; don't read it after.
+    comp0 = unl.stats["fused_compiles"]
+    _, st_single = unl.forget(reqs[0], params=p1)
+    donated_compiles = unl.stats["fused_compiles"] - comp0
+
+    rec = {
+        "arch": arch_id, "cell": "unlearn_session",
+        "mesh": "x".join(str(s) for s in mesh_shape),
+        "spec": spec.to_dict(),
+        "domains": [r.tag for r in reqs],
+        "stopped_at_l": g1["stopped_at_l"],
+        "sweeps": g1["sweeps"],
+        "params_leaves_sharded": [n_sharded, n_leaves],
+        "fisher_leaves_sharded": [fi_sharded, fi_leaves],
+        "donating_single_request": {
+            "fused_compiles": donated_compiles,
+            "stopped_at_l": st_single["stopped_at_l"],
+        },
+        "engine_cold": g1["engine"], "engine_warm": g2["engine"],
+        "t_cold_s": round(t_cold, 3), "t_warm_s": round(t_warm, 3),
+        "status": "ok",
+    }
+    errors = []
+    if g2["engine"]["compiles"] != 0:
+        errors.append(f"warm drain recompiled {g2['engine']['compiles']} "
+                      "programs on the mesh")
+    if donated_compiles == 0:
+        errors.append("the donating single-request family compiled "
+                      "nothing — donation path not exercised")
+    if n_sharded == 0:
+        errors.append("no edited parameter leaf ended up sharded")
+    if not finite:
+        errors.append("non-finite parameters after the mesh sweep")
+    if errors:
+        rec["status"] = "error"
+        rec["error"] = "; ".join(errors)
+    print(f"[dryrun] unlearn_session {arch_id} @ {rec['mesh']}: "
+          f"stop_l={rec['stopped_at_l']} "
+          f"sharded={n_sharded}/{n_leaves} params, "
+          f"{fi_sharded}/{fi_leaves} fisher, "
+          f"donating family compiles={donated_compiles}, "
+          f"cold {t_cold:.1f}s warm {t_warm:.2f}s "
+          f"(warm compiles={g2['engine']['compiles']})", flush=True)
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -137,8 +261,30 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--mesh", choices=("single", "multi", "both"),
                     default="single")
+    ap.add_argument("--unlearn-session", action="store_true",
+                    help="run the full facade-driven forget-sweep session "
+                         "on the mesh (sharded params + donation) instead "
+                         "of lowering cells")
+    ap.add_argument("--sweep-mesh", default="2x2",
+                    help="data x model mesh shape for --unlearn-session")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+
+    if args.unlearn_session:
+        arch = args.arch or "gemma3-1b"
+        shape = tuple(int(s) for s in args.sweep_mesh.split("x"))
+        os.makedirs(args.out, exist_ok=True)
+        try:
+            rec = run_unlearn_session(arch, shape)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "cell": "unlearn_session",
+                   "status": "error", "error": repr(e)}
+        tag = f"unlearn_session__{arch.replace('.', '_')}__{args.sweep_mesh}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] unlearn-session done: {rec['status']}", flush=True)
+        raise SystemExit(0 if rec["status"] == "ok" else 1)
 
     os.makedirs(args.out, exist_ok=True)
     cells = []

@@ -10,16 +10,18 @@ the server enqueues them, drains in-flight batches, applies FiCABU dampening
 in place (no retraining, no weight reload — the paper's deployment story),
 and continues serving with the edited weights.
 
-Forget requests due at the same drain point are COALESCED: the drain unions
-them into one group and runs a single back-end-first engine sweep
-(``ficabu.unlearn_group``) for the whole group — K queued deletions pay one
-layer walk and one set of cached executables instead of K, while each domain
-keeps its own halting/MAC accounting.  The server keeps ONE warm
-``repro.engine.UnlearnSession`` across all drains: the first sweep pays
-compilation for each unique layer shape, every later drain replays cached
-executables with zero retraces (asserted by tests/test_engine.py and the
-``--check`` CI gate).  The global Fisher importance I_D is likewise computed
-once per served model, not per request.
+Unlearning is driven exclusively through the ``repro.api.Unlearner``
+facade, configured by one typed ``UnlearnSpec`` (DESIGN.md §9).  Forget
+requests due at the same drain point are COALESCED: the drain unions them
+into one group and runs a single back-end-first engine sweep
+(``Unlearner.forget_group``) for the whole group — K queued deletions pay
+one layer walk and one set of cached executables instead of K, while each
+domain keeps its own halting/MAC accounting.  The facade keeps ONE warm
+engine session across all drains: the first sweep pays compilation for each
+unique layer shape, every later drain replays cached executables with zero
+retraces (asserted by tests/test_engine.py and the ``--check`` CI gate).
+The global Fisher importance I_D is likewise computed once per served model
+(``Unlearner.ensure_fisher``), not per request.
 
 ``--forget-domains`` accepts burst syntax: ``1,2`` queues one request per
 domain on consecutive batches (two drains); ``1,2;3,2`` queues bursts —
@@ -27,6 +29,12 @@ domains within a burst share a due batch and coalesce into one sweep.
 ``--coalesce`` folds a comma list into a single burst.  ``--check`` exits
 non-zero if any drain ran more sweeps than coalesced groups or any drain
 after the first recompiled.
+
+``--cache-dir`` points JAX's persistent compilation cache at a directory
+(``ExecSpec.cache_dir``): a COLD server start with a warm disk cache then
+replays every compiled program — prefill, decode, and the engine's fused
+steps — from disk.  With ``--check``, a warm-disk cold start that writes
+any new cache entry (i.e. recompiled anything) fails the gate.
 """
 from __future__ import annotations
 
@@ -41,9 +49,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import adapters, ficabu, fisher
+from repro.api import (ForgetRequest, UnlearnSpec, Unlearner,
+                       compilation_cache_entries, enable_compilation_cache)
+from repro.core import adapters
 from repro.data import LMDataConfig, lm_split_forget_retain, make_lm_domains
-from repro.engine import UnlearnSession
 from repro.models import lm as LM
 
 
@@ -67,23 +76,35 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
     return np.stack(out, axis=1)
 
 
+def default_serve_spec(chunk_size: int = 4,
+                       cache_dir: Optional[str] = None) -> UnlearnSpec:
+    """The serving deployment's unlearning configuration as ONE auditable
+    spec (logged verbatim into the result JSON)."""
+    return UnlearnSpec.for_mode(
+        "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
+        chunk_size=chunk_size, cache_dir=cache_dir)
+
+
 class ForgetService:
-    """Queue of forget requests + the warm unlearning engine session.
+    """Queue of forget requests + the warm ``Unlearner`` facade.
 
     ``submit`` enqueues; ``drain`` coalesces every request due at the drain
     point into ONE engine sweep over the unioned forget sets and returns the
-    edited weights. The session (and with it every compiled per-layer
-    program) persists across drains."""
+    edited weights. The facade's session (and with it every compiled
+    per-layer program) persists across drains."""
 
     CHUNK = 4  # Fisher/engine chunk size; forget batches are padded to it
 
-    def __init__(self, cfg, tokens, domains, seq_len: int):
+    def __init__(self, cfg, tokens, domains, seq_len: int,
+                 spec: Optional[UnlearnSpec] = None):
         self.cfg = cfg
         self.tokens = tokens
         self.domains = domains
         self.queue: Deque[Dict] = deque()
         self.adapter = adapters.lm_adapter(cfg, seq_len - 1)
-        self.session: Optional[UnlearnSession] = None
+        self.spec = spec if spec is not None else \
+            default_serve_spec(chunk_size=self.CHUNK)
+        self.unlearner: Optional[Unlearner] = None
         self.log: List[Dict] = []        # one entry per domain request
         self.group_log: List[Dict] = []  # one entry per coalesced sweep
         self.sweeps = 0
@@ -92,15 +113,16 @@ class ForgetService:
     def submit(self, domain: int, due_batch: int) -> None:
         self.queue.append({"domain": domain, "due_batch": due_batch})
 
-    def _warm(self, params):
-        if self.session is None:
+    def _warm(self, params) -> Unlearner:
+        if self.unlearner is None:
+            self.unlearner = Unlearner(self.adapter, spec=self.spec)
+
             def loss_fn(p, b):
                 return LM.lm_loss(p, self.cfg, b[0], b[1], aux_weight=0.0)
             sample = self.tokens[:32]
-            i_d = fisher.diag_fisher(loss_fn, params,
-                                     (sample[:, :-1], sample[:, 1:]),
-                                     chunk_size=self.CHUNK)
-            self.session = UnlearnSession(self.adapter, i_d)
+            self.unlearner.ensure_fisher(
+                loss_fn, params, (sample[:, :-1], sample[:, 1:]))
+        return self.unlearner
 
     def _forget_batch(self, domain: int):
         """Forget samples for one domain, PADDED (never trimmed) to a CHUNK
@@ -153,14 +175,12 @@ class ForgetService:
         if not group:
             return params, False
 
-        self._warm(params)
+        unl = self._warm(params)
         t0 = time.time()
-        params, stats_k, gstats = ficabu.unlearn_group(
-            self.adapter, params, self.session.fisher_global,
-            [(g["fb"][:, :-1], g["fb"][:, 1:]) for g in group],
-            mode="ficabu", alpha=8.0, lam=1.0, tau=0.6,
-            checkpoint_every=2, chunk_size=self.CHUNK,
-            session=self.session)
+        params, stats_k, gstats = unl.forget_group(
+            [ForgetRequest(g["fb"][:, :-1], g["fb"][:, 1:], tag=g["domain"])
+             for g in group],
+            params=params)
         latency = round(time.time() - t0, 3)
         self.sweeps += gstats["sweeps"]
         self.groups += 1
@@ -222,11 +242,22 @@ def main(argv=None) -> dict:
     ap.add_argument("--coalesce", action="store_true",
                     help="fold a comma list into a single same-due burst")
     ap.add_argument("--check", action="store_true",
-                    help="exit non-zero unless sweeps == coalesced groups "
-                         "and no drain after the first recompiled")
+                    help="exit non-zero unless sweeps == coalesced groups, "
+                         "no drain after the first recompiled, and (with a "
+                         "warm --cache-dir) a cold start wrote zero new "
+                         "cache entries")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent XLA compilation cache directory "
+                         "(ExecSpec.cache_dir): cold restarts replay "
+                         "compiled programs from disk")
     ap.add_argument("--out", default=None,
                     help="write the result JSON to this path")
     args = ap.parse_args(argv)
+
+    # the cache must be live BEFORE the first compile (prefill/decode too,
+    # not just the engine) for a cold start to be replayable from disk
+    cache_entries0 = (enable_compilation_cache(args.cache_dir)
+                      if args.cache_dir else 0)
 
     spec = configs.get(args.arch)
     assert spec.kind == "lm"
@@ -242,7 +273,10 @@ def main(argv=None) -> dict:
     decode_jit = jax.jit(
         lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))
 
-    svc = ForgetService(cfg, tokens, domains, dcfg.seq_len)
+    svc = ForgetService(cfg, tokens, domains, dcfg.seq_len,
+                        spec=default_serve_spec(
+                            chunk_size=ForgetService.CHUNK,
+                            cache_dir=args.cache_dir))
     if args.unlearn_after >= 0:
         for i, burst in enumerate(_parse_bursts(args)):
             for d in burst:
@@ -265,13 +299,21 @@ def main(argv=None) -> dict:
 
     done = [r for r in svc.log if "engine" in r]
     last = done[-1] if done else {}
+    cache_info = None
+    if args.cache_dir:
+        cache_info = {"dir": args.cache_dir,
+                      "entries_before": cache_entries0,
+                      "entries_new": (compilation_cache_entries(args.cache_dir)
+                                      - cache_entries0)}
     result = {"served": served, "unlearned": bool(done),
               "unlearn_requests": svc.log,
               "coalesced_groups": svc.groups, "sweeps": svc.sweeps,
               "group_log": svc.group_log,
               "unlearn_stats": {k: last.get(k) for k in
                                 ("stopped_at_l", "macs_vs_ssd_pct")},
-              "engine_stats": dict(svc.session.stats) if svc.session else {}}
+              "engine_stats": svc.unlearner.stats if svc.unlearner else {},
+              "unlearn_spec": svc.spec.to_dict(),
+              "compilation_cache": cache_info}
     print(f"[serve] done: {json.dumps(result)}", flush=True)
     if args.out:
         with open(args.out, "w") as f:
@@ -295,6 +337,15 @@ def main(argv=None) -> dict:
                 problems.append(f"drain {g['group']} recompiled "
                                 f"{g['engine']['compiles']} programs "
                                 "(warm-session cache regressed)")
+        # cold-start gate: a process start against a WARM disk cache must
+        # replay every program (prefill, decode, fused steps) from disk —
+        # any new cache entry is a recompile the persistence layer missed
+        if cache_info and cache_info["entries_before"] > 0 \
+                and cache_info["entries_new"] > 0:
+            problems.append(
+                f"cold start with a warm compilation cache "
+                f"({cache_info['entries_before']} entries) still compiled "
+                f"{cache_info['entries_new']} new program(s)")
         if problems:
             print("[serve] CHECK FAILED: " + "; ".join(problems), flush=True)
             raise SystemExit(1)

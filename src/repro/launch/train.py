@@ -31,7 +31,7 @@ from repro import configs
 from repro.data import Batches, LMDataConfig, make_lm_domains, lm_split_forget_retain
 from repro.models import lm as LM
 from repro.optim import AdamWConfig, Int8Codec, init_adamw, adamw_update
-from repro.core import adapters, ficabu, fisher, metrics
+from repro.core import adapters, fisher, metrics
 
 
 def build(arch_id: str, smoke: bool, seq: int, vocab_cap: Optional[int] = None):
@@ -139,10 +139,13 @@ def main(argv=None) -> dict:
             I_D = fisher.diag_fisher_streaming(loss_fn, params, batches,
                                                chunk_size=4)
             adapter = adapters.lm_adapter(cfg, args.seq)
-            params, stats = ficabu.unlearn(
-                adapter, params, I_D, fb[:, :-1], fb[:, 1:],
-                mode="ficabu", alpha=8.0, lam=1.0, tau=0.6,
-                checkpoint_every=2, chunk_size=4)
+            from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+            unl = Unlearner(adapter, I_D, UnlearnSpec.for_mode(
+                "ficabu", alpha=8.0, lam=1.0, tau=0.6,
+                checkpoint_every=2, chunk_size=4))
+            params, stats = unl.forget(
+                ForgetRequest(fb[:, :-1], fb[:, 1:],
+                              tag=args.forget_domain), params=params)
             print(f"[unlearn] stopped at l={stats['stopped_at_l']} "
                   f"macs%={stats['macs_vs_ssd_pct']:.1f}", flush=True)
 

@@ -34,6 +34,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.api import UnlearnSpec  # noqa: E402
 from repro.launch import roofline as RL  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import lm as LM  # noqa: E402
@@ -41,7 +42,10 @@ from repro.models import lm as LM  # noqa: E402
 F32 = jnp.float32
 N_FORGET = 64
 SEQ = 4096
-ALPHA, LAM = 10.0, 1.0
+# the analysed cell's configuration, as the same typed spec serving uses
+# (mode "ssd": one uniform-strength layer step, no CAU machinery involved)
+SPEC = UnlearnSpec.for_mode("ssd", alpha=10.0, lam=1.0, chunk_size=1,
+                            mesh_axes=("data", "model"), sharding="tp")
 
 
 def _setup():
@@ -51,8 +55,7 @@ def _setup():
     # one mid-stack block + its input activations (the CAU unit of work)
     blk_shapes = jax.eval_shape(
         lambda k: LM.init_block(k, cfg, "attn"), jax.random.PRNGKey(0))
-    from repro.dist import sharding as shd
-    blk_specs = shd.param_pspecs(blk_shapes, mesh)
+    blk_specs = SPEC.exec.param_pspecs(blk_shapes, mesh)
     blk_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
                                     blk_specs,
                                     is_leaf=lambda s: isinstance(s, P))
@@ -90,7 +93,8 @@ def run() -> dict:
 
     def dampen_program(blk, fish, fish_global):
         from repro.core.ssd import dampen_tree
-        new, _ = dampen_tree(blk, fish, fish_global, ALPHA, LAM)
+        new, _ = dampen_tree(blk, fish, fish_global,
+                             SPEC.dampen.alpha, SPEC.dampen.lam)
         return new
 
     def analyse(name, jitted, args):
@@ -146,7 +150,8 @@ def run() -> dict:
 
     results = {"streamed": streamed, "fused": fused,
                "speedup_memory_term": streamed["memory_s"] / fused["memory_s"],
-               "cell": f"yi-6b CAU layer step, N={N_FORGET} S={SEQ}, 16x16"}
+               "cell": f"yi-6b CAU layer step, N={N_FORGET} S={SEQ}, 16x16",
+               "spec": SPEC.to_dict()}
     return results
 
 

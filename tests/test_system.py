@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import adapters, ficabu, fisher, metrics
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+from repro.core import adapters, fisher, metrics
 from repro.data import synthetic as syn
 from repro.kernels import ops as kops
 from repro.models import vision as V
@@ -32,13 +33,14 @@ def test_sequential_forget_requests(sys_setting):
     m = sys_setting
     params = m["params"]
     x, y = m["x"], m["y"]
+    unl = Unlearner(m["adapter"], m["I_D"], UnlearnSpec.for_mode(
+        "ficabu", alpha=10.0, lam=1.0, tau=1 / 6 + 0.03,
+        checkpoint_every=2))
     for cls in (4, 1):
         s = syn.split_forget_retain(x, y, forget_class=cls)
         fx, fy = s["forget"]
-        params, stats = ficabu.unlearn(
-            m["adapter"], params, m["I_D"], fx[:32], fy[:32],
-            mode="ficabu", alpha=10.0, lam=1.0, tau=1 / 6 + 0.03,
-            checkpoint_every=2)
+        params, stats = unl.forget(ForgetRequest(fx[:32], fy[:32], tag=cls),
+                                   params=params)
     lg = V.resnet_forward(params, m["cfg"], x)
     for cls in (4, 1):
         acc = float(metrics.accuracy(lg[y == cls], jnp.asarray(y[y == cls])))
@@ -105,10 +107,12 @@ def test_energy_proxy_tracks_macs(sys_setting):
     with the ficabu MAC reduction."""
     m = sys_setting
     fx, fy = m["splits"]["forget"]
-    _, s_ssd = ficabu.unlearn(m["adapter"], m["params"], m["I_D"],
-                              fx[:32], fy[:32], mode="ssd", alpha=10.0)
-    _, s_fic = ficabu.unlearn(m["adapter"], m["params"], m["I_D"],
-                              fx[:32], fy[:32], mode="ficabu", alpha=10.0,
-                              tau=1 / 6 + 0.03, checkpoint_every=2)
+    req = ForgetRequest(fx[:32], fy[:32])
+    unl_ssd = Unlearner(m["adapter"], m["I_D"],
+                        UnlearnSpec.for_mode("ssd", alpha=10.0))
+    _, s_ssd = unl_ssd.forget(req, params=m["params"])
+    _, s_fic = unl_ssd.with_spec(UnlearnSpec.for_mode(
+        "ficabu", alpha=10.0, tau=1 / 6 + 0.03, checkpoint_every=2)).forget(
+        req, params=m["params"])
     es = 100.0 * (1.0 - s_fic["macs"] / max(s_ssd["macs"], 1))
     assert es > 30.0, f"energy saving {es:.1f}% too small"

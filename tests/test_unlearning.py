@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import adapters, cau, ficabu, fisher, metrics
+from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+from repro.core import adapters, cau, fisher, metrics
 from repro.data import synthetic as syn
 from repro.models import lm as LM
 from repro.models import vision as V
@@ -43,8 +44,10 @@ def _run(setting, mode, **kw):
     kw.setdefault("lam", 1.0)
     kw.setdefault("tau", RANDOM_GUESS)
     kw.setdefault("checkpoint_every", 2)
-    return ficabu.unlearn(setting["adapter"], setting["params"],
-                          setting["I_D"], fx[:32], fy[:32], mode=mode, **kw)
+    unl = Unlearner(setting["adapter"], setting["I_D"],
+                    UnlearnSpec.for_mode(mode, **kw))
+    return unl.forget(ForgetRequest(fx[:32], fy[:32]),
+                      params=setting["params"])
 
 
 @pytest.fixture(scope="module")
@@ -202,10 +205,11 @@ def test_lm_adapter_unlearns_domain(key):
     I_D = fisher.diag_fisher_streaming(loss_fn, params, batches, chunk_size=8)
     adapter = adapters.lm_adapter(cfg, 24)
     fb = splits["forget"][:24]
-    newp, stats = ficabu.unlearn(adapter, params, I_D, fb[:, :-1], fb[:, 1:],
-                                 mode="ficabu", alpha=6.0, lam=0.5,
-                                 tau=pre[1] * 0.5, checkpoint_every=1,
-                                 chunk_size=8)
+    unl = Unlearner(adapter, I_D, UnlearnSpec.for_mode(
+        "ficabu", alpha=6.0, lam=0.5, tau=pre[1] * 0.5, checkpoint_every=1,
+        chunk_size=8))
+    newp, stats = unl.forget(ForgetRequest(fb[:, :-1], fb[:, 1:]),
+                             params=params)
     post = [dom_acc(newp, d) for d in range(4)]
     assert post[1] < pre[1] * 0.75, (pre, post)          # forgotten
     others = [post[d] for d in (0, 2, 3)]
@@ -225,10 +229,11 @@ def test_encdec_adapter_runs(key):
     I_D = fisher.diag_fisher(loss_fn, params, (toks[:, :-1], toks[:, 1:]),
                              chunk_size=4)
     adapter = adapters.encdec_adapter(cfg, 8, frames[:8])
-    newp, stats = ficabu.unlearn(adapter, params, I_D,
-                                 toks[:8, :-1], toks[:8, 1:],
-                                 mode="cau", alpha=5.0, lam=0.5, tau=-1.0,
-                                 checkpoint_every=2, chunk_size=4)
+    unl = Unlearner(adapter, I_D, UnlearnSpec.for_mode(
+        "cau", alpha=5.0, lam=0.5, tau=-1.0, checkpoint_every=2,
+        chunk_size=4))
+    newp, stats = unl.forget(ForgetRequest(toks[:8, :-1], toks[:8, 1:]),
+                             params=params)
     assert stats["stopped_at_l"] == adapter.n_layers  # tau=-1: full sweep
     assert all(np.isfinite(np.asarray(x)).all()
                for x in jax.tree_util.tree_leaves(newp))

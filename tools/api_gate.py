@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""api-gate: the ``repro.api.Unlearner`` facade is the only way into the
+unlearning engine.
+
+Fails (exit 1) if any scanned module outside the whitelisted facade/shim
+files
+
+  * references the deprecated ``ficabu._mode_config`` (the mode mapping now
+    lives in ``UnlearnSpec.for_mode(...).to_config()``), or
+  * constructs ``UnlearnSession(...)`` directly (sessions belong to the
+    facade, which owns the Fisher lifecycle and cross-request warmth).
+
+Scanned trees: src/repro, benchmarks, examples.  tests/ are exempt — they
+exercise the engine layer itself by design (tests/test_engine.py).
+
+    python tools/api_gate.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN = ("src/repro", "benchmarks", "examples")
+ALLOW = {
+    "src/repro/api/facade.py",      # the facade owns the session
+    "src/repro/api/specs.py",       # documents the _mode_config succession
+    "src/repro/engine/session.py",  # the class definition itself
+    "src/repro/core/ficabu.py",     # the deprecation shim being gated
+}
+RULES = (
+    (re.compile(r"\b_mode_config\b"),
+     "references deprecated ficabu._mode_config "
+     "(use UnlearnSpec.for_mode)"),
+    (re.compile(r"\bUnlearnSession\("),
+     "constructs UnlearnSession directly "
+     "(drive it through repro.api.Unlearner)"),
+)
+
+
+def main(argv=None) -> int:
+    problems = []
+    for rel in SCAN:
+        for path in sorted((ROOT / rel).rglob("*.py")):
+            rp = path.relative_to(ROOT).as_posix()
+            if rp in ALLOW:
+                continue
+            for ln, line in enumerate(path.read_text().splitlines(), 1):
+                code = line.split("#", 1)[0]
+                for rx, why in RULES:
+                    if rx.search(code):
+                        problems.append(f"{rp}:{ln}: {why}\n"
+                                        f"    {line.strip()}")
+    if problems:
+        print(f"[api-gate] FAILED: {len(problems)} engine-layer use(s) "
+              "outside the facade/shim —")
+        for p in problems:
+            print("  " + p)
+        return 1
+    print("[api-gate] ok: no _mode_config use or direct UnlearnSession "
+          "construction outside the facade/shim "
+          f"(scanned {', '.join(SCAN)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
