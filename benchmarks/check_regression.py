@@ -34,6 +34,10 @@ import sys
 GATED = {
     "BENCH_engine.json": (
         ("engine_warm_s", "legacy_warm_s"),
+        # streamed I_D refresh: one warm EMA fold vs the from-scratch
+        # diag_fisher_streaming recompute measured in the same run — a lost
+        # refresh-program cache shows up as this ratio collapsing toward 1
+        ("refresh_fold_warm_s", "fisher_recompute_full_s"),
     ),
     "BENCH_serve.json": (
         ("coalesced_warm_per_domain_s", "sequential_warm_per_domain_s"),

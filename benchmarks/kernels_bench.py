@@ -12,7 +12,11 @@ wall-clock is NOT the TPU story.  What we measure + derive instead:
   3. the compiled unlearning ENGINE vs the legacy three-programs-per-layer
      sweep on the smoke LM config: steady-state (2nd..Nth forget request)
      wall-clock per request, recorded to BENCH_engine.json;
-  4. the SERVING hot paths: coalesced multi-domain drain vs sequential
+  4. the streamed global-Fisher REFRESH (one warm EMA fold of a retain
+     microbatch) vs a from-scratch ``diag_fisher_streaming`` recompute —
+     the amortization that keeps I_D fresh between drains — merged into
+     BENCH_engine.json;
+  5. the SERVING hot paths: coalesced multi-domain drain vs sequential
      per-domain sweeps, and chunked prefill vs the token-by-token decode
      walk, recorded to BENCH_serve.json (gated by
      benchmarks/check_regression.py in CI).
@@ -35,6 +39,18 @@ BENCH_ENGINE_PATH = os.path.join(os.path.dirname(__file__), "..",
                                  "BENCH_engine.json")
 BENCH_SERVE_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_serve.json")
+
+
+def _merge_bench_json(path: str, out: dict) -> None:
+    """Merge ``out`` into the JSON record at ``path`` (engine_bench and
+    refresh_bench share BENCH_engine.json; neither may clobber the other)."""
+    rec = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+    rec.update(out)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
 
 
 def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
@@ -141,6 +157,74 @@ def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
     return out
 
 
+def refresh_bench(arch: str = "gemma3-1b", reps: int = 5,
+                  n_retain_batches: int = 4) -> dict:
+    """Streamed I_D refresh vs a from-scratch global-Fisher recompute,
+    steady state, merged into BENCH_engine.json (gated by
+    benchmarks/check_regression.py).
+
+    The serving loop's choice at a drain point is: fold ONE retain
+    microbatch into the EMA (``FisherStream``, one cached program) or
+    recompute I_D over the whole retain stream (``diag_fisher_streaming``,
+    the SSD way).  Both warm — the ratio is the amortization the refresh
+    subsystem buys."""
+    from repro import configs
+    from repro.core import fisher
+    from repro.data import synthetic as syn
+    from repro.engine import FisherStream
+    from repro.models import lm as LM
+
+    cfg = configs.get(arch).smoke
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=24,
+                            n_per_domain=8, seed=0)
+    toks, _ = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
+    per = len(toks) // n_retain_batches
+    retain = [(toks[i * per:(i + 1) * per, :-1],
+               toks[i * per:(i + 1) * per, 1:])
+              for i in range(n_retain_batches)]
+
+    i_d = fisher.diag_fisher_streaming(loss_fn, params, retain, chunk_size=4)
+    stream = FisherStream(loss_fn, i_d, decay=0.9, chunk_size=4)
+    stream.fold(params, retain[0])  # warm the refresh program
+
+    t0 = time.time()
+    for r in range(reps):
+        total = stream.fold(params, retain[r % n_retain_batches])
+    jax.tree_util.tree_leaves(total)[0].block_until_ready()
+    t_fold = (time.time() - t0) / reps
+
+    t0 = time.time()
+    for _ in range(reps):
+        full = fisher.diag_fisher_streaming(loss_fn, params, retain,
+                                            chunk_size=4)
+    jax.tree_util.tree_leaves(full)[0].block_until_ready()
+    t_full = (time.time() - t0) / reps
+
+    out = {
+        "refresh_config": (f"{arch}-smoke: EMA fold of 1 retain microbatch "
+                           f"({per} x 24) vs full recompute over "
+                           f"{n_retain_batches} batches"),
+        "refresh_fold_warm_s": t_fold,
+        "fisher_recompute_full_s": t_full,
+        "refresh_vs_recompute_speedup": t_full / t_fold,
+        "refresh_compiles_warm": 0 if stream.stats["refresh_hits"] >= reps
+        else stream.stats["refresh_compiles"] - 1,
+    }
+    # merge into the engine record: the refresh program is the third
+    # compiled family of the unlearning engine, gated from the same file
+    _merge_bench_json(BENCH_ENGINE_PATH, out)
+    print("# Streamed I_D refresh vs full recompute (steady state)")
+    print(f"refresh  fold {t_fold:8.4f}s/microbatch   "
+          f"recompute {t_full:8.4f}s   "
+          f"speedup {out['refresh_vs_recompute_speedup']:.2f}x")
+    print(f"kernels_bench,fisher_refresh,{t_fold * 1e6:.0f},"
+          f"speedup={out['refresh_vs_recompute_speedup']:.2f}")
+    assert out["refresh_compiles_warm"] == 0, "warm refresh recompiled!"
+    return out
+
+
 def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
     """Fused engine sweep vs legacy 3-program sweep, full-depth (tau=-1) on
     the smoke LM config. The engine's warm requests replay cached
@@ -197,8 +281,8 @@ def engine_bench(arch: str = "gemma3-1b", reps: int = 2) -> dict:
         "engine_compiles_req1": s1["engine"]["compiles"],
         "engine_compiles_reqN": sn["engine"]["compiles"],
     }
-    with open(BENCH_ENGINE_PATH, "w") as f:
-        json.dump(out, f, indent=1)
+    # merge, don't clobber: refresh_bench records into the same file
+    _merge_bench_json(BENCH_ENGINE_PATH, out)
     print("# Engine vs legacy sweep (steady-state per forget request)")
     print(f"legacy   cold {t_legacy_cold:6.2f}s  warm {t_legacy_warm:6.2f}s")
     print(f"engine   cold {t_engine_cold:6.2f}s  warm {t_engine_warm:6.2f}s  "
@@ -272,6 +356,7 @@ def main() -> dict:
     print(f"kernels_bench,fimd,{t_fused:.0f},speedup={out['fimd_cpu_speedup']:.2f}")
     print(f"kernels_bench,dampen,{t_fd:.0f},speedup={out['dampen_cpu_speedup']:.2f}")
     out["engine"] = engine_bench()
+    out["refresh"] = refresh_bench()
     out["serve"] = serve_bench()
     return out
 

@@ -62,3 +62,21 @@ new_params, stats = unl.forget(ForgetRequest(fx[:32], fy[:32], tag="class-3"),
 report("after", new_params)
 print(f"early-stopped at layer l={stats['stopped_at_l']} of "
       f"{adapter.n_layers}; MACs vs SSD: {stats['macs_vs_ssd_pct']:.1f}%")
+
+# 5. Long-lived service: the edit just invalidated the stored I_D a little
+#    (it was computed on the PRE-edit weights). Stream a refresh — fold
+#    retain microbatches at the current weights into an EMA of I_D — so the
+#    next forget request dampens against importance that still describes
+#    the served parameters (DESIGN.md §10; serve.py --fisher-refresh N).
+from repro.api import RefreshSpec  # noqa: E402
+
+rx, ry = splits["retain"]
+unl.enable_fisher_refresh(RefreshSpec(every_drains=1, max_batches=2,
+                                      decay=0.5),
+                          [(rx[:32], ry[:32]), (rx[32:64], ry[32:64])],
+                          loss_fn)
+# (a serving loop would call unl.refresh_if_due(params) after each drain
+# and let the policy decide; here we force one refresh explicitly)
+entry = unl.refresh_now(new_params)
+print(f"refreshed I_D: folded {entry['batches']} retain microbatch(es) at "
+      f"the edited weights (EMA count={entry['ema_count']})")

@@ -8,6 +8,12 @@ one typed ``UnlearnSpec`` (echoed into the result for auditability), and
 second (cold-process) run below replays every compiled program instead of
 recompiling.
 
+``--fisher-refresh 1`` keeps the global importance I_D fresh: after every
+drain edits the weights, retain microbatches are folded — at the now-edited
+parameters — into an EMA of I_D (one compiled refresh program in the same
+warm session), so later forget requests dampen against an importance map
+that still describes the weights being served (DESIGN.md §10).
+
     PYTHONPATH=src python examples/serve_with_unlearning.py
 """
 import tempfile
@@ -23,12 +29,20 @@ with tempfile.TemporaryDirectory() as cache_dir:
         "--unlearn-after", "1",
         "--forget-domain", "1",
         "--cache-dir", cache_dir,
+        "--fisher-refresh", "1",
     ]
     res = serve.main(args)
     assert res["unlearned"]
     print("served batches:", [r["latency_s"] for r in res["served"]])
     print("unlearning stopped at layer:", res["unlearn_stats"]["stopped_at_l"])
     print("unlearn spec:", res["unlearn_spec"])
+    refresh = res["fisher_refresh"]
+    assert refresh["refreshes"] >= 1
+    assert refresh["staleness"]["improved"]
+    print(f"fisher refresh: {refresh['refreshes']} refresh(es), I_D rel err "
+          f"{refresh['staleness']['stale_rel_err']:.4f} -> "
+          f"{refresh['staleness']['refreshed_rel_err']:.4f} vs a "
+          "from-scratch recompute at the edited weights")
     n_cached = res["compilation_cache"]["entries_new"]
     print(f"compilation cache: {n_cached} programs persisted to disk")
 

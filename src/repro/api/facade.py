@@ -24,9 +24,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from repro.core.cau import ModelAdapter, UnlearnConfig
-from repro.engine import UnlearnSession, shape_signature
+from repro.engine import (FisherStream, RefreshPolicy, UnlearnSession,
+                          shape_signature)
 
-from .specs import UnlearnSpec
+from .specs import RefreshSpec, UnlearnSpec
 
 Params = Any
 
@@ -115,6 +116,15 @@ class Unlearner:
         self.mesh = None
         self._fisher: Optional[Params] = None
         self._session: Optional[UnlearnSession] = None
+        # streamed-Fisher refresh state (enable_fisher_refresh)
+        self._stream: Optional[FisherStream] = None
+        self._refresh_policy: Optional[RefreshPolicy] = None
+        self._refresh_batches: List[Any] = []
+        self._refresh_cursor = 0
+        self._drains_since_refresh = 0
+        self._edited_since_refresh = 0
+        self._param_count = 0
+        self.refresh_log: List[Dict] = []
         if session is not None:
             if session.adapter is not adapter:
                 raise ValueError(
@@ -160,6 +170,11 @@ class Unlearner:
         self._fisher = tree
         if self._session is not None:
             self._session.fisher_global = tree
+        if self._stream is not None:
+            # keep the EMA state coherent with MANUAL value refreshes too:
+            # the next streamed fold must start from the installed tree,
+            # not silently revert to a pre-update total
+            self._stream.total = tree
         return self
 
     def ensure_fisher(self, loss_fn, params: Params, batch,
@@ -173,6 +188,162 @@ class Unlearner:
             self.set_fisher(fisher_mod.diag_fisher(loss_fn, params, batch,
                                                    chunk_size=cs))
         return self._fisher
+
+    # -- streamed Fisher refresh (DESIGN.md §10) ----------------------------
+    @property
+    def fisher_stream(self) -> Optional[FisherStream]:
+        """The streamed-refresh maintainer (None until
+        ``enable_fisher_refresh``)."""
+        return self._stream
+
+    def enable_fisher_refresh(self, policy, batches: Sequence,
+                              loss_fn, *, chunk_size: Optional[int] = None
+                              ) -> "Unlearner":
+        """Arm the streamed global-Fisher refresh: between drains, fold
+        retain microbatches (evaluated at the CURRENT, post-edit weights)
+        into an EMA of I_D and install the result through the
+        structure-locked ``set_fisher``.
+
+        ``policy`` is a ``RefreshSpec``/``RefreshPolicy`` (or None to take
+        ``spec.refresh``); ``batches`` the retain microbatches the refresh
+        cycles through; ``loss_fn(params, batch) -> scalar`` the same
+        mean-NLL the one-shot Fisher used.  The compiled refresh step lives
+        in the warm session's program cache next to the fused families, so
+        the zero-retrace lifecycle covers it (``session.stats``
+        refresh_compiles/refresh_hits).  The serving loop then calls
+        ``refresh_if_due(params)`` after every drain."""
+        if policy is None:
+            policy = self.spec.refresh
+        if isinstance(policy, RefreshSpec):
+            policy = policy.to_policy()
+        if not isinstance(policy, RefreshPolicy):
+            raise ValueError(
+                "enable_fisher_refresh needs a RefreshSpec/RefreshPolicy "
+                "(or spec.refresh set when passing None), got "
+                f"{type(policy).__name__}")
+        if self._fisher is None:
+            raise ValueError(
+                "no global Fisher importance installed to refresh — call "
+                "ensure_fisher(loss_fn, params, batch) or set_fisher(tree) "
+                "before enable_fisher_refresh")
+        batches = list(batches)
+        if not batches:
+            raise ValueError(
+                "enable_fisher_refresh needs at least one retain microbatch "
+                "to fold (an empty refresh would silently keep I_D stale)")
+        for i, b in enumerate(batches):
+            leaves = jax.tree_util.tree_leaves(b)
+            if not leaves or int(leaves[0].shape[0]) < 1:
+                raise ValueError(
+                    f"refresh microbatch {i} has no samples (leading "
+                    f"dimension is 0) — an upstream slice exhausted it; a "
+                    f"zero-sample Fisher would be all-NaN and poison I_D")
+        cs = self.spec.exec.chunk_size if chunk_size is None else chunk_size
+        sess = self._ensure_session()
+        if self._stream is not None:
+            # re-arming (new loss_fn/policy/batches): the dead stream's
+            # compiled programs must not linger in the session cache — and
+            # must never be replayed for the new stream (its cache_token
+            # differs, so collisions are impossible by construction)
+            sess.evict_refresh_programs(self._stream.cache_token)
+        # same coercion as _ensure_session: the FACADE's donate=None means
+        # NO donation (in-place consumption is strictly opt-in), even
+        # though the engine-level default would auto-donate on accelerators
+        self._stream = FisherStream(
+            loss_fn, self._fisher, decay=policy.decay, chunk_size=cs,
+            donate=bool(self.spec.exec.donate), programs=sess)
+        self._refresh_policy = policy
+        self._refresh_batches = batches
+        self._refresh_cursor = 0
+        self._drains_since_refresh = 0
+        self._edited_since_refresh = 0
+        self._param_count = sum(
+            int(x.size) for x in jax.tree_util.tree_leaves(self._fisher))
+        return self
+
+    def _note_drain(self, stats_list: Sequence[Dict]) -> None:
+        """Account one drain toward the refresh policy triggers."""
+        if self._stream is None:
+            return
+        self._drains_since_refresh += 1
+        for st in stats_list:
+            self._edited_since_refresh += sum(
+                int(n) for n in st.get("selected_per_layer", {}).values())
+
+    @property
+    def edited_fraction(self) -> float:
+        """Fraction of parameters edited since the last refresh (the
+        staleness-trigger input)."""
+        if not self._param_count:
+            return 0.0
+        return min(1.0, self._edited_since_refresh / self._param_count)
+
+    def refresh_if_due(self, params: Params) -> Optional[Dict]:
+        """Run a refresh when the policy says so; the serving loop calls
+        this between drains.  Returns the refresh accounting entry, or None
+        when nothing was due (or refresh is not enabled)."""
+        if self._stream is None or self._refresh_policy is None:
+            return None
+        if not self._refresh_policy.due(self._drains_since_refresh,
+                                        self.edited_fraction):
+            return None
+        return self.refresh_now(params)
+
+    def refresh_now(self, params: Params,
+                    max_batches: Optional[int] = None) -> Dict:
+        """Fold up to ``max_batches`` retain microbatches (policy budget by
+        default) at the CURRENT weights — equal-weighted within the refresh
+        — into the EMA and install it through the structure-locked
+        ``set_fisher``.  The stream state only moves after ``set_fisher``
+        accepted the tree — a rejected refresh leaves both I_D and the EMA
+        untouched."""
+        if self._stream is None:
+            raise ValueError("streamed refresh is not enabled — call "
+                             "enable_fisher_refresh(policy, batches, "
+                             "loss_fn) first")
+        k = (self._refresh_policy.max_batches if max_batches is None
+             else int(max_batches))
+        if k < 1:
+            raise ValueError(f"refresh_now max_batches must be >= 1, "
+                             f"got {max_batches!r}")
+        sess = self._ensure_session()
+        comp0, hits0 = (sess.stats["refresh_compiles"],
+                        sess.stats["refresh_hits"])
+        if self.mesh is not None:
+            params = self.place_params(params)
+        # the budgeted microbatches enter with EQUAL weight: fold them into
+        # a running mean (per-fold decay i/(i+1); the first fold's decay=0
+        # discards the seed, which is only there to feed the program — a
+        # protected COPY of the installed tree, so a donating step never
+        # consumes the live I_D and a refresh failing mid-way cannot
+        # invalidate it), then apply the policy decay ONCE per refresh
+        # against the INSTALLED tree (manual set_fisher refreshes included)
+        fresh_mean = self._stream.protect_live_input(self._fisher)
+        folded = 0
+        for _ in range(k):
+            batch = self._refresh_batches[
+                self._refresh_cursor % len(self._refresh_batches)]
+            self._refresh_cursor += 1
+            batch = self.place_batch(batch)
+            fresh_mean = self._stream.fold_into(
+                fresh_mean, params, batch, decay=folded / (folded + 1))
+            folded += 1
+        new_total = self._stream.blend(self._fisher, fresh_mean)
+        self.set_fisher(new_total)      # structure-locked; may raise
+        self._stream.commit(self._fisher, folded)
+        self._drains_since_refresh = 0
+        self._edited_since_refresh = 0
+        entry = {
+            "batches": folded,
+            "ema_count": self._stream.count,
+            "decay": self._stream.decay,
+            "engine": {
+                "refresh_compiles": sess.stats["refresh_compiles"] - comp0,
+                "refresh_hits": sess.stats["refresh_hits"] - hits0,
+            },
+        }
+        self.refresh_log.append(entry)
+        return entry
 
     # -- session ------------------------------------------------------------
     @property
@@ -208,7 +379,10 @@ class Unlearner:
         running "ssd" (baseline) and "ficabu" requests against one
         compiled-program cache.  The session is materialized here (if a
         Fisher is installed) so both facades share its warmth; the session's
-        ``donate`` setting stays as first configured."""
+        ``donate`` setting stays as first configured.  The streamed-refresh
+        stream is NOT shared — exactly one facade should own the I_D
+        write path (arm the sibling with enable_fisher_refresh if it is
+        the one driving drains)."""
         sess = self._session
         if sess is None and self._fisher is not None:
             sess = self._ensure_session()
@@ -283,6 +457,7 @@ class Unlearner:
         stats["mode"] = self.spec.mode
         if req.tag is not None:
             stats["tag"] = req.tag
+        self._note_drain([stats])
         return new_params, stats
 
     def forget_group(self, requests: Sequence, *, params: Params,
@@ -311,4 +486,5 @@ class Unlearner:
             if r.tag is not None:
                 st["tag"] = r.tag
         group_stats["mode"] = self.spec.mode
+        self._note_drain(stats_k)
         return new_params, stats_k, group_stats

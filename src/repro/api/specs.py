@@ -13,7 +13,11 @@ each a frozen dataclass:
                   (delegating to ``repro.dist.sharding``), and the
                   persistent XLA compilation-cache directory.
 
-``UnlearnSpec`` composes the three under a paper ``mode`` ("ssd" | "cau" |
+A fourth, optional concern — ``RefreshSpec`` — schedules the streamed
+global-Fisher refresh that keeps I_D in step with the edited weights
+(``repro.engine.fisher_stream``, DESIGN.md §10).
+
+``UnlearnSpec`` composes them under a paper ``mode`` ("ssd" | "cau" |
 "bd" | "ficabu") and is the unit that travels: JSON round-trip via
 ``to_json``/``from_json`` (auditable service requests), validation that
 raises ``ValueError`` with actionable messages (never ``assert``), and
@@ -116,6 +120,48 @@ class HaltSpec:
                  f"got {self.max_layers!r}")
 
 
+@dataclasses.dataclass(frozen=True)
+class RefreshSpec:
+    """When to refresh the global Fisher I_D between drains (and how hard).
+
+    The stored I_D describes the weights it was computed on; every forget
+    drain edits the served parameters, so I_D goes stale and the dampening
+    ratio I_Df/I_D drifts.  A ``RefreshSpec`` schedules the streamed EMA
+    refresh (``repro.engine.fisher_stream``, DESIGN.md §10):
+
+    ``every_drains``        refresh after every N-th drain (0: cadence off,
+                            staleness trigger only).
+    ``staleness_threshold`` refresh once this fraction of parameters was
+                            edited since the last refresh (0: off).
+    ``max_batches``         retain microbatches folded per refresh — the
+                            MAC budget a drain point may spend.
+    ``decay``               EMA retention: 0 replaces I_D with the fresh
+                            microbatch Fisher, 1 disables the update.
+    """
+    every_drains: int = 1
+    staleness_threshold: float = 0.0
+    max_batches: int = 1
+    decay: float = 0.9
+
+    def __post_init__(self):
+        # one source of truth for the bounds: validate by lowering to the
+        # engine-level policy (RefreshPolicy.__post_init__), rephrasing its
+        # errors in this spec's vocabulary
+        try:
+            self.to_policy()
+        except ValueError as e:
+            raise ValueError(
+                str(e).replace("RefreshPolicy", "RefreshSpec")) from None
+
+    def to_policy(self):
+        """Lower to the engine-level ``RefreshPolicy`` (the same mapping
+        discipline as ``UnlearnSpec.to_config``)."""
+        from repro.engine import RefreshPolicy
+        return RefreshPolicy(every_drains=self.every_drains,
+                             staleness_threshold=self.staleness_threshold,
+                             max_batches=self.max_batches, decay=self.decay)
+
+
 _SHARDING_MODES = ("tp", "fsdp")
 
 
@@ -193,6 +239,7 @@ class UnlearnSpec:
     dampen: DampenSpec = DampenSpec()
     halt: HaltSpec = HaltSpec()
     exec: ExecSpec = ExecSpec()
+    refresh: Optional[RefreshSpec] = None  # None: I_D stays frozen (SSD)
 
     def __post_init__(self):
         _require(isinstance(self.mode, str) and self.mode in MODES,
@@ -208,6 +255,16 @@ class UnlearnSpec:
                          f"UnlearnSpec.{name} must be a {cls.__name__} "
                          f"(or a mapping of its fields), "
                          f"got {type(val).__name__}")
+        if isinstance(self.refresh, dict):
+            object.__setattr__(self, "refresh",
+                               _from_dict(RefreshSpec, self.refresh,
+                                          "refresh"))
+        else:
+            _require(self.refresh is None
+                     or isinstance(self.refresh, RefreshSpec),
+                     f"UnlearnSpec.refresh must be None (no streamed "
+                     f"refresh), a RefreshSpec, or a mapping of its fields, "
+                     f"got {type(self.refresh).__name__}")
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -219,7 +276,8 @@ class UnlearnSpec:
                  donate: Optional[bool] = None,
                  mesh_axes: Optional[Tuple[str, ...]] = None,
                  sharding: str = "tp",
-                 cache_dir: Optional[str] = None) -> "UnlearnSpec":
+                 cache_dir: Optional[str] = None,
+                 refresh: Optional["RefreshSpec"] = None) -> "UnlearnSpec":
         """Flat-kwargs constructor mirroring the legacy entry points: the
         drop-in replacement for ``ficabu._mode_config`` (which is now a
         deprecation shim over this)."""
@@ -230,7 +288,8 @@ class UnlearnSpec:
                           max_layers=max_layers),
             exec=ExecSpec(chunk_size=chunk_size, use_kernel=use_kernel,
                           donate=donate, mesh_axes=mesh_axes,
-                          sharding=sharding, cache_dir=cache_dir))
+                          sharding=sharding, cache_dir=cache_dir),
+            refresh=refresh)
 
     # -- mode semantics -----------------------------------------------------
     @property
@@ -269,10 +328,11 @@ class UnlearnSpec:
         _require(isinstance(d, dict),
                  f"UnlearnSpec.from_dict expects a mapping, "
                  f"got {type(d).__name__}")
-        unknown = set(d) - {"mode", "dampen", "halt", "exec"}
+        unknown = set(d) - {"mode", "dampen", "halt", "exec", "refresh"}
         _require(not unknown,
                  f"unknown UnlearnSpec field(s) {sorted(unknown)}; expected "
-                 f"a subset of ['mode', 'dampen', 'halt', 'exec']")
+                 f"a subset of ['mode', 'dampen', 'halt', 'exec', "
+                 f"'refresh']")
         kw: Dict[str, Any] = {}
         if "mode" in d:
             kw["mode"] = d["mode"]
@@ -285,6 +345,10 @@ class UnlearnSpec:
                     sub = dict(sub, mesh_axes=tuple(sub["mesh_axes"]))
                 kw[name] = (sub if isinstance(sub, sub_cls)
                             else _from_dict(sub_cls, sub, name))
+        if "refresh" in d:
+            sub = d["refresh"]
+            kw["refresh"] = (sub if sub is None or isinstance(sub, RefreshSpec)
+                             else _from_dict(RefreshSpec, sub, "refresh"))
         return cls(**kw)
 
     def to_json(self, **json_kw) -> str:

@@ -1,4 +1,6 @@
 """Compiled unlearning engine: fused per-layer step + cross-request program
-cache. See DESIGN.md."""
+cache + the streamed global-Fisher refresh maintainer. See DESIGN.md."""
+from .fisher_stream import (FisherStream, RefreshPolicy,  # noqa: F401
+                            build_refresh_step, tree_rel_err)
 from .fused import TRACE_LOG, build_fused_step, shape_signature  # noqa: F401
 from .session import UnlearnSession  # noqa: F401

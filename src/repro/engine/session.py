@@ -54,10 +54,12 @@ class UnlearnSession:
         self.donate = donate
         self._fused: Dict[Hashable, Callable] = {}
         self._partial: Dict[Hashable, Callable] = {}
+        self._refresh: Dict[Hashable, Callable] = {}
         self.stats: Dict[str, int] = {
             "requests": 0, "group_sweeps": 0,
             "fused_compiles": 0, "fused_hits": 0,
             "partial_compiles": 0, "partial_hits": 0,
+            "refresh_compiles": 0, "refresh_hits": 0,
         }
 
     # -- program cache ------------------------------------------------------
@@ -110,6 +112,32 @@ class UnlearnSession:
         else:
             self.stats["fused_hits"] += 1
         return prog
+
+    def refresh_program(self, key: Hashable, builder: Callable[[], Callable]
+                        ) -> Callable:
+        """The streamed-Fisher refresh family (repro.engine.fisher_stream):
+        the session hosts these compiled steps next to the fused/checkpoint
+        families so ONE warm session owns every program a serving process
+        replays, and the zero-retrace lifecycle tests cover all three."""
+        prog = self._refresh.get(key)
+        if prog is None:
+            prog = builder()
+            self._refresh[key] = prog
+            self.stats["refresh_compiles"] += 1
+        else:
+            self.stats["refresh_hits"] += 1
+        return prog
+
+    def evict_refresh_programs(self, token) -> int:
+        """Drop every refresh program keyed to ``token`` (a FisherStream's
+        ``cache_token``): re-arming a facade's refresh replaces the stream,
+        and the dead stream's executables must not accumulate in a
+        long-lived session."""
+        dead = [k for k in self._refresh
+                if isinstance(k, tuple) and len(k) > 1 and k[1] is token]
+        for k in dead:
+            del self._refresh[k]
+        return len(dead)
 
     # -- checkpoint partial inference ---------------------------------------
     def _uniform_suffix(self, acts: List[jax.Array]) -> bool:

@@ -22,6 +22,14 @@ and fused-step layer buffers donated — then a second drain through the same
 warm session to prove zero retraces survive the sharded layouts.
 ``--sweep-mesh RxC`` sizes the ("data", "model") mesh (a submesh of the
 forced host devices; numerics, not just lowering, so keep it small on CPU).
+
+``--fisher-refresh`` runs the ``fisher_refresh`` session cell: coalesced
+drains interleaved with streamed global-Fisher refreshes
+(``repro.engine.fisher_stream``) on the same mesh, proving the third
+compiled-program family obeys the lifecycle rules — the refresh step
+compiles once, every warm refresh replays it with zero retraces, and the
+refreshed I_D measurably beats the stale snapshot against a from-scratch
+recompute at the edited weights (the ``fisher-smoke`` CI gate).
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -254,6 +262,133 @@ def run_unlearn_session(arch_id: str, mesh_shape=(2, 2),
     return rec
 
 
+def run_fisher_refresh(arch_id: str, mesh_shape=(2, 2),
+                       n_domains: int = 2) -> dict:
+    """The ``fisher_refresh`` session cell: drains interleaved with streamed
+    I_D refreshes on a ("data", "model") mesh, all through one warm facade.
+
+    Proves the refresh-program lifecycle on the pod mesh: the refresh step
+    compiles ONCE (first refresh), every later refresh replays it with zero
+    retraces (TRACE_LOG stays empty) and zero new compiles — alongside the
+    fused/checkpoint families, whose warm drains must also stay
+    retrace-free — and the refreshed I_D lands closer to a from-scratch
+    recompute at the edited weights than the stale snapshot (sharded
+    layouts preserved)."""
+    import warnings
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import (ExecSpec, ForgetRequest, RefreshSpec, UnlearnSpec,
+                           Unlearner)
+    from repro.core import adapters
+    from repro.core import fisher as fisher_mod
+    from repro.data import synthetic as syn
+    from repro.engine import TRACE_LOG, tree_rel_err
+    from repro.models import lm as LM
+
+    warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+
+    cfg = configs.get(arch_id).smoke
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                         devices=jax.devices()[:int(np.prod(mesh_shape))])
+    spec = UnlearnSpec(
+        mode="ficabu",
+        dampen={"alpha": 8.0, "lam": 1.0},
+        halt={"tau": -1.0, "checkpoint_every": 2},
+        exec=ExecSpec(chunk_size=4, donate=True,
+                      mesh_axes=("data", "model"), sharding="tp"),
+        refresh=RefreshSpec(every_drains=1, max_batches=2, decay=0.5))
+
+    seq = 17
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=seq,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    adapter = adapters.lm_adapter(cfg, seq - 1)
+
+    unl = Unlearner(adapter, spec=spec).shard(mesh)
+    params = unl.place_params(params)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
+    # one-shot I_D, refresh folds and the reference recompute all share the
+    # SAME retain stream so the staleness metric isolates weight drift
+    retain = [(toks[16:24, :-1], toks[16:24, 1:]),
+              (toks[24:32, :-1], toks[24:32, 1:])]
+    unl.set_fisher(fisher_mod.diag_fisher_streaming(loss_fn, params, retain,
+                                                    chunk_size=4))
+    unl.enable_fisher_refresh(None, retain, loss_fn)
+    stale = jax.tree_util.tree_map(np.asarray, unl.fisher_global)
+
+    reqs = [ForgetRequest(toks[doms == d][:8, :-1], toks[doms == d][:8, 1:],
+                          tag=int(d)) for d in range(n_domains)]
+
+    # drain 1 -> refresh 1 (compiles the refresh program) -> drain 2 ->
+    # refresh 2 (must replay it: zero retraces, zero compiles)
+    params, _, g1 = unl.forget_group(reqs, params=params)
+    t0 = time.time()
+    r1 = unl.refresh_if_due(params)
+    t_cold = time.time() - t0
+    params, _, g2 = unl.forget_group(reqs, params=params)
+    TRACE_LOG.clear()
+    t0 = time.time()
+    r2 = unl.refresh_if_due(params)
+    t_warm = time.time() - t0
+    warm_retraces = list(TRACE_LOG)
+
+    recompute = fisher_mod.diag_fisher_streaming(loss_fn, params, retain,
+                                                 chunk_size=4)
+    stale_err = tree_rel_err(stale, recompute)
+    refreshed_err = tree_rel_err(unl.fisher_global, recompute)
+
+    fi_sharded = sum(1 for x in jax.tree_util.tree_leaves(unl.fisher_global)
+                     if not x.sharding.is_fully_replicated)
+    fi_leaves = len(jax.tree_util.tree_leaves(unl.fisher_global))
+    finite = all(bool(jnp.isfinite(x).all())
+                 for x in jax.tree_util.tree_leaves(unl.fisher_global))
+
+    rec = {
+        "arch": arch_id, "cell": "fisher_refresh",
+        "mesh": "x".join(str(s) for s in mesh_shape),
+        "spec": spec.to_dict(),
+        "refresh_cold": r1, "refresh_warm": r2,
+        "t_refresh_cold_s": round(t_cold, 3),
+        "t_refresh_warm_s": round(t_warm, 3),
+        "warm_retraces": warm_retraces,
+        "drain_warm_compiles": g2["engine"]["compiles"],
+        "fisher_leaves_sharded": [fi_sharded, fi_leaves],
+        "stale_rel_err": stale_err, "refreshed_rel_err": refreshed_err,
+        "status": "ok",
+    }
+    errors = []
+    if r1 is None or r1["engine"]["refresh_compiles"] == 0:
+        errors.append("first refresh did not compile the refresh program")
+    if r2 is None or r2["engine"]["refresh_compiles"] != 0:
+        errors.append("warm refresh recompiled the refresh program")
+    if warm_retraces:
+        errors.append(f"warm refresh retraced: {warm_retraces}")
+    if g2["engine"]["compiles"] != 0:
+        errors.append(f"warm drain recompiled {g2['engine']['compiles']} "
+                      "programs after a refresh replaced I_D")
+    if fi_sharded == 0:
+        errors.append("no refreshed Fisher leaf ended up sharded")
+    if not finite:
+        errors.append("non-finite refreshed Fisher")
+    if refreshed_err >= stale_err:
+        errors.append(f"refresh did not reduce I_D staleness "
+                      f"({stale_err:.4f} -> {refreshed_err:.4f})")
+    if errors:
+        rec["status"] = "error"
+        rec["error"] = "; ".join(errors)
+    print(f"[dryrun] fisher_refresh {arch_id} @ {rec['mesh']}: "
+          f"refresh cold {t_cold:.2f}s warm {t_warm:.3f}s "
+          f"(warm compiles="
+          f"{r2['engine']['refresh_compiles'] if r2 else '-'}, "
+          f"retraces={len(warm_retraces)}), "
+          f"fisher sharded {fi_sharded}/{fi_leaves}, "
+          f"rel err {stale_err:.4f} -> {refreshed_err:.4f}", flush=True)
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -265,25 +400,35 @@ def main() -> None:
                     help="run the full facade-driven forget-sweep session "
                          "on the mesh (sharded params + donation) instead "
                          "of lowering cells")
+    ap.add_argument("--fisher-refresh", action="store_true",
+                    help="run the fisher_refresh session cell: drains "
+                         "interleaved with streamed I_D refreshes on the "
+                         "mesh, proving zero warm retraces of the refresh "
+                         "program")
     ap.add_argument("--sweep-mesh", default="2x2",
-                    help="data x model mesh shape for --unlearn-session")
+                    help="data x model mesh shape for --unlearn-session / "
+                         "--fisher-refresh")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
-    if args.unlearn_session:
+    if args.unlearn_session or args.fisher_refresh:
         arch = args.arch or "gemma3-1b"
+        cell_name = ("fisher_refresh" if args.fisher_refresh
+                     else "unlearn_session")
+        runner = (run_fisher_refresh if args.fisher_refresh
+                  else run_unlearn_session)
         shape = tuple(int(s) for s in args.sweep_mesh.split("x"))
         os.makedirs(args.out, exist_ok=True)
         try:
-            rec = run_unlearn_session(arch, shape)
+            rec = runner(arch, shape)
         except Exception as e:
             traceback.print_exc()
-            rec = {"arch": arch, "cell": "unlearn_session",
+            rec = {"arch": arch, "cell": cell_name,
                    "status": "error", "error": repr(e)}
-        tag = f"unlearn_session__{arch.replace('.', '_')}__{args.sweep_mesh}"
+        tag = f"{cell_name}__{arch.replace('.', '_')}__{args.sweep_mesh}"
         with open(os.path.join(args.out, tag + ".json"), "w") as f:
             json.dump(rec, f, indent=1)
-        print(f"[dryrun] unlearn-session done: {rec['status']}", flush=True)
+        print(f"[dryrun] {cell_name} done: {rec['status']}", flush=True)
         raise SystemExit(0 if rec["status"] == "ok" else 1)
 
     os.makedirs(args.out, exist_ok=True)

@@ -35,6 +35,21 @@ after the first recompiled.
 replays every compiled program — prefill, decode, and the engine's fused
 steps — from disk.  With ``--check``, a warm-disk cold start that writes
 any new cache entry (i.e. recompiled anything) fails the gate.
+
+``--fisher-refresh N`` arms the streamed global-Fisher refresh
+(``RefreshSpec(every_drains=N)``, DESIGN.md §10): every N-th drain edits the
+served weights AND then folds retain microbatches — evaluated at the
+now-edited parameters — into an EMA of I_D through the structure-locked
+``set_fisher`` path, so the dampening ratio I_Df/I_D keeps describing the
+weights actually being served.  One compiled refresh program, hosted in the
+same warm session as the fused steps; with ``--check`` the gate fails if any
+refresh after the first compiled anything (a refresh-family cache
+regression), if no refresh ran, or if the refreshed I_D is NOT closer than
+the stale snapshot to a from-scratch recompute at the final weights (the
+staleness oracle).
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --requests 8 \
+        --forget-domains 1,2 --fisher-refresh 1 --check
 """
 from __future__ import annotations
 
@@ -49,7 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.api import (ForgetRequest, UnlearnSpec, Unlearner,
+from repro.api import (ForgetRequest, RefreshSpec, UnlearnSpec, Unlearner,
                        compilation_cache_entries, enable_compilation_cache)
 from repro.core import adapters
 from repro.data import LMDataConfig, lm_split_forget_retain, make_lm_domains
@@ -77,12 +92,18 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
 
 
 def default_serve_spec(chunk_size: int = 4,
-                       cache_dir: Optional[str] = None) -> UnlearnSpec:
+                       cache_dir: Optional[str] = None,
+                       refresh_every: int = 0) -> UnlearnSpec:
     """The serving deployment's unlearning configuration as ONE auditable
-    spec (logged verbatim into the result JSON)."""
+    spec (logged verbatim into the result JSON).  ``refresh_every > 0``
+    arms the streamed Fisher refresh every N drains (2 microbatches per
+    refresh, EMA decay 0.5 — cheap enough for the smoke lane, fresh enough
+    for the staleness gate)."""
+    refresh = (RefreshSpec(every_drains=refresh_every, max_batches=2,
+                           decay=0.5) if refresh_every > 0 else None)
     return UnlearnSpec.for_mode(
         "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
-        chunk_size=chunk_size, cache_dir=cache_dir)
+        chunk_size=chunk_size, cache_dir=cache_dir, refresh=refresh)
 
 
 class ForgetService:
@@ -107,22 +128,83 @@ class ForgetService:
         self.unlearner: Optional[Unlearner] = None
         self.log: List[Dict] = []        # one entry per domain request
         self.group_log: List[Dict] = []  # one entry per coalesced sweep
+        self.refresh_log: List[Dict] = []  # one entry per Fisher refresh
         self.sweeps = 0
         self.groups = 0
+        self.stale_fisher = None   # host snapshot of the one-shot I_D
+        self.retain_batches: List = []
 
     def submit(self, domain: int, due_batch: int) -> None:
         self.queue.append({"domain": domain, "due_batch": due_batch})
 
+    def _loss_fn(self, p, b):
+        return LM.lm_loss(p, self.cfg, b[0], b[1], aux_weight=0.0)
+
     def _warm(self, params) -> Unlearner:
         if self.unlearner is None:
             self.unlearner = Unlearner(self.adapter, spec=self.spec)
-
-            def loss_fn(p, b):
-                return LM.lm_loss(p, self.cfg, b[0], b[1], aux_weight=0.0)
-            sample = self.tokens[:32]
-            self.unlearner.ensure_fisher(
-                loss_fn, params, (sample[:, :-1], sample[:, 1:]))
+            if self.spec.refresh is not None:
+                # with refresh armed, the one-shot I_D, the refresh folds
+                # AND the --check reference recompute all use the SAME
+                # retain stream: the staleness oracle then isolates what
+                # the refresh claims to fix — I_D drifting off the EDITED
+                # weights — instead of being satisfied by mere data shift
+                # (an EMA pulled onto different data looks "closer" even
+                # if a regression folded at the stale weights)
+                from repro.core import fisher as fisher_mod
+                rest = self.tokens[32:]
+                step = max(len(rest) // 2, 1)
+                self.retain_batches = [
+                    (rb[:, :-1], rb[:, 1:])
+                    for rb in (rest[:step], rest[step:step * 2]) if len(rb)]
+                self.unlearner.set_fisher(fisher_mod.diag_fisher_streaming(
+                    self._loss_fn, params, self.retain_batches,
+                    chunk_size=self.spec.exec.chunk_size))
+                self.unlearner.enable_fisher_refresh(
+                    None, self.retain_batches, self._loss_fn)
+                # host snapshot of the pre-refresh I_D for the staleness
+                # oracle (the live tree is replaced by refreshes)
+                self.stale_fisher = jax.tree_util.tree_map(
+                    np.asarray, self.unlearner.fisher_global)
+            else:
+                sample = self.tokens[:32]
+                self.unlearner.ensure_fisher(
+                    self._loss_fn, params, (sample[:, :-1], sample[:, 1:]))
         return self.unlearner
+
+    def maybe_refresh(self, params, batch_idx: int) -> bool:
+        """Streamed I_D refresh between drains (policy-scheduled)."""
+        if self.unlearner is None or self.unlearner.fisher_stream is None:
+            return False
+        t0 = time.time()
+        entry = self.unlearner.refresh_if_due(params)
+        if entry is None:
+            return False
+        entry = dict(entry, batch=batch_idx,
+                     latency_s=round(time.time() - t0, 3))
+        self.refresh_log.append(entry)
+        print(f"[serve] fisher refresh {len(self.refresh_log) - 1}: folded "
+              f"{entry['batches']} retain microbatch(es) at the edited "
+              f"weights (ema_count={entry['ema_count']}, "
+              f"compiles={entry['engine']['refresh_compiles']}, "
+              f"hits={entry['engine']['refresh_hits']})", flush=True)
+        return True
+
+    def staleness_report(self, params) -> Optional[Dict]:
+        """The --check oracle: is the refreshed I_D closer than the stale
+        one-shot snapshot to a from-scratch recompute at the CURRENT
+        (edited) weights?"""
+        from repro.core import fisher as fisher_mod
+        from repro.engine import tree_rel_err
+        if self.stale_fisher is None or not self.refresh_log:
+            return None
+        recompute = fisher_mod.diag_fisher_streaming(
+            self._loss_fn, params, self.retain_batches,
+            chunk_size=self.spec.exec.chunk_size)
+        stale = tree_rel_err(self.stale_fisher, recompute)
+        refreshed = tree_rel_err(self.unlearner.fisher_global, recompute)
+        return {"stale_rel_err": stale, "refreshed_rel_err": refreshed,
+                "improved": refreshed < stale}
 
     def _forget_batch(self, domain: int):
         """Forget samples for one domain, PADDED (never trimmed) to a CHUNK
@@ -206,6 +288,9 @@ class ForgetService:
               f"stop_l={[st['stopped_at_l'] for st in stats_k]}, "
               f"compiles={gstats['engine']['compiles']}, "
               f"hits={gstats['engine']['cache_hits']})", flush=True)
+        # streamed I_D refresh between drains: fold retain microbatches at
+        # the freshly edited weights when the RefreshSpec policy says so
+        self.maybe_refresh(params, batch_idx)
         return params, True
 
 
@@ -250,6 +335,10 @@ def main(argv=None) -> dict:
                     help="persistent XLA compilation cache directory "
                          "(ExecSpec.cache_dir): cold restarts replay "
                          "compiled programs from disk")
+    ap.add_argument("--fisher-refresh", type=int, default=0,
+                    help="refresh the global Fisher I_D every N drains "
+                         "(streamed EMA over retain microbatches at the "
+                         "edited weights; 0 = keep the one-shot I_D)")
     ap.add_argument("--out", default=None,
                     help="write the result JSON to this path")
     args = ap.parse_args(argv)
@@ -276,7 +365,8 @@ def main(argv=None) -> dict:
     svc = ForgetService(cfg, tokens, domains, dcfg.seq_len,
                         spec=default_serve_spec(
                             chunk_size=ForgetService.CHUNK,
-                            cache_dir=args.cache_dir))
+                            cache_dir=args.cache_dir,
+                            refresh_every=args.fisher_refresh))
     if args.unlearn_after >= 0:
         for i, burst in enumerate(_parse_bursts(args)):
             for d in burst:
@@ -305,6 +395,12 @@ def main(argv=None) -> dict:
                       "entries_before": cache_entries0,
                       "entries_new": (compilation_cache_entries(args.cache_dir)
                                       - cache_entries0)}
+    refresh_info = None
+    if args.fisher_refresh > 0:
+        refresh_info = {"every_drains": args.fisher_refresh,
+                        "refreshes": len(svc.refresh_log),
+                        "log": svc.refresh_log,
+                        "staleness": svc.staleness_report(params)}
     result = {"served": served, "unlearned": bool(done),
               "unlearn_requests": svc.log,
               "coalesced_groups": svc.groups, "sweeps": svc.sweeps,
@@ -313,7 +409,8 @@ def main(argv=None) -> dict:
                                 ("stopped_at_l", "macs_vs_ssd_pct")},
               "engine_stats": svc.unlearner.stats if svc.unlearner else {},
               "unlearn_spec": svc.spec.to_dict(),
-              "compilation_cache": cache_info}
+              "compilation_cache": cache_info,
+              "fisher_refresh": refresh_info}
     print(f"[serve] done: {json.dumps(result)}", flush=True)
     if args.out:
         with open(args.out, "w") as f:
@@ -346,13 +443,43 @@ def main(argv=None) -> dict:
                 f"cold start with a warm compilation cache "
                 f"({cache_info['entries_before']} entries) still compiled "
                 f"{cache_info['entries_new']} new program(s)")
+        # streamed-refresh gates: the refresh ran between drains, every
+        # refresh after the first replayed the cached program (zero
+        # compiles), and the refreshed I_D beats the stale snapshot against
+        # a from-scratch recompute at the final weights
+        if refresh_info is not None:
+            if refresh_info["refreshes"] == 0:
+                problems.append(
+                    f"--fisher-refresh {args.fisher_refresh} was set but no "
+                    "refresh ran between drains")
+            for i, r in enumerate(svc.refresh_log[1:], start=1):
+                if r["engine"]["refresh_compiles"] > 0:
+                    problems.append(
+                        f"fisher refresh {i} recompiled "
+                        f"{r['engine']['refresh_compiles']} refresh "
+                        "program(s) (warm refresh family regressed)")
+            stale = refresh_info["staleness"]
+            if stale is not None and not stale["improved"]:
+                problems.append(
+                    f"refreshed I_D is NOT closer to the from-scratch "
+                    f"recompute at the edited weights (stale rel err "
+                    f"{stale['stale_rel_err']:.4f}, refreshed "
+                    f"{stale['refreshed_rel_err']:.4f}) — the streamed "
+                    "refresh failed its staleness oracle")
         if problems:
             print("[serve] CHECK FAILED: " + "; ".join(problems), flush=True)
             raise SystemExit(1)
         n_req = sum(g["requests"] for g in svc.group_log)
+        extra = ""
+        if refresh_info is not None:
+            stale = refresh_info["staleness"] or {}
+            extra = (f"; {refresh_info['refreshes']} fisher refresh(es), "
+                     f"I_D rel err "
+                     f"{stale.get('stale_rel_err', float('nan')):.4f}"
+                     f" -> {stale.get('refreshed_rel_err', float('nan')):.4f}")
         print(f"[serve] check ok: {n_req} request(s) in {svc.groups} "
               f"group(s), one sweep per drain, zero recompiles after the "
-              "first drain", flush=True)
+              f"first drain{extra}", flush=True)
     return result
 
 

@@ -1,0 +1,249 @@
+"""Hypothesis property harness for the Fisher/dampening stack.
+
+Locks down the invariants the streamed global-Fisher refresh (DESIGN.md
+§10) must never corrupt:
+
+  Fisher estimation   leaves are non-negative and finite; streaming over k
+                      batches == one pass over their concatenation; a
+                      partial last chunk is evaluated exactly (sample-
+                      weighted), never an error.
+  EMA refresh         decay=0 reproduces the one-shot Fisher, decay=1 is
+                      the identity, 0<d<1 is an elementwise convex
+                      combination (so non-negativity/finiteness are
+                      preserved), and repeated folds contract toward the
+                      microbatch Fisher.
+  Dampening           I_Df == I_D is a no-op (nothing crosses the alpha
+                      threshold), and dampening NEVER increases |w|
+                      (beta <= 1 by construction).
+
+Runs under the tier-1 suite: seeded (derandomize) and deadline-disabled for
+CI stability, per the fisher-smoke job.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dep (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import fisher  # noqa: E402
+from repro.core.ssd import dampen_array  # noqa: E402
+from repro.engine import FisherStream  # noqa: E402
+
+SET = dict(deadline=None, max_examples=20, derandomize=True)
+
+D = 4  # feature dim of the analytic linear model
+
+
+def _loss(p, batch):
+    bx, by = batch
+    return jnp.mean(0.5 * (bx @ p["w"] - by) ** 2)
+
+
+def _model_and_batch(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    w = {"w": jnp.asarray(rng.normal(size=(D,)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(n, D)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    return w, (x, y)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# Fisher estimation
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10 ** 6), st.integers(1, 24), st.integers(1, 8))
+@settings(**SET)
+def test_fisher_nonneg_finite(seed, n, cs):
+    """Every Fisher leaf is non-negative and finite — for ANY batch length,
+    including lengths that do not divide the chunk size."""
+    w, batch = _model_and_batch(seed, n)
+    f = fisher.diag_fisher(_loss, w, batch, chunk_size=cs)
+    for leaf in _leaves(f):
+        assert np.all(np.isfinite(leaf))
+        assert np.all(leaf >= 0.0)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 4), st.integers(2, 4),
+       st.integers(1, 4))
+@settings(**SET)
+def test_streaming_equals_concat(seed, chunks_per_batch, k, cs):
+    """diag_fisher_streaming over k equal-length batches == diag_fisher
+    over their concatenation (up to f32 accumulation order)."""
+    n = chunks_per_batch * cs
+    w, (x, y) = _model_and_batch(seed, n * k)
+    batches = [(x[i * n:(i + 1) * n], y[i * n:(i + 1) * n]) for i in range(k)]
+    got = fisher.diag_fisher_streaming(_loss, w, batches, chunk_size=cs)
+    want = fisher.diag_fisher(_loss, w, (x, y), chunk_size=cs)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               rtol=2e-5, atol=1e-8)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(2, 8), st.integers(1, 20))
+@settings(**SET)
+def test_partial_tail_sample_weighted(seed, cs, n):
+    """A batch with a partial last chunk equals the sample-weighted blend of
+    the divisible head (at chunk_size) and the exact tail (at its own size)
+    — the pad-free ragged contract that replaced the divisibility assert."""
+    w, (x, y) = _model_and_batch(seed, n)
+    got = fisher.diag_fisher(_loss, w, (x, y), chunk_size=cs)
+    head = (n // cs) * cs
+    if head in (0, n):  # fully partial / fully divisible: exact reference
+        ref = fisher.diag_fisher(_loss, w, (x, y), chunk_size=min(cs, n))
+    else:
+        f_h = fisher.diag_fisher(_loss, w, (x[:head], y[:head]),
+                                 chunk_size=cs)
+        f_t = fisher.diag_fisher(_loss, w, (x[head:], y[head:]),
+                                 chunk_size=n - head)
+        ref = {"w": (head / n) * f_h["w"] + ((n - head) / n) * f_t["w"]}
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(ref["w"]),
+                               rtol=2e-5, atol=1e-8)
+
+
+def test_chunked_indivisible_is_value_error():
+    """chunked (the low-level reshape) refuses raggedness with an actionable
+    ValueError — never an assert."""
+    w, batch = _model_and_batch(0, 10)
+    with pytest.raises(ValueError, match="not a multiple"):
+        fisher.chunked(batch, 4)
+    with pytest.raises(ValueError, match="chunk_size"):
+        fisher.chunked(batch, 0)
+
+
+def test_streaming_empty_is_value_error():
+    w, _ = _model_and_batch(0, 4)
+    with pytest.raises(ValueError, match="at least one retain microbatch"):
+        fisher.diag_fisher_streaming(_loss, w, [])
+
+
+# ---------------------------------------------------------------------------
+# EMA refresh
+# ---------------------------------------------------------------------------
+def _stream(seed, n=8, cs=4, decay=0.5):
+    w, batch = _model_and_batch(seed, 2 * n)
+    x, y = batch
+    seed_batch, fold_batch = (x[:n], y[:n]), (x[n:], y[n:])
+    i_d = fisher.diag_fisher(_loss, w, seed_batch, chunk_size=cs)
+    return w, i_d, fold_batch, FisherStream(_loss, i_d, decay=decay,
+                                            chunk_size=cs)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(**SET)
+def test_ema_decay_zero_is_oneshot(seed):
+    """decay=0: the fold REPLACES I_D with the one-shot Fisher of the
+    microbatch at the current weights."""
+    w, _, batch, stream = _stream(seed, decay=0.0)
+    new = stream.fold(w, batch)
+    want = fisher.diag_fisher(_loss, w, batch, chunk_size=4)
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want["w"]),
+                               rtol=2e-5, atol=1e-8)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(**SET)
+def test_ema_decay_one_is_identity(seed):
+    """decay=1: the fold leaves I_D bit-identical (refresh disabled)."""
+    w, i_d, batch, stream = _stream(seed, decay=1.0)
+    new = stream.fold(w, batch)
+    np.testing.assert_array_equal(np.asarray(new["w"]), np.asarray(i_d["w"]))
+
+
+@given(st.integers(0, 10 ** 6), st.floats(0.0, 1.0))
+@settings(**SET)
+def test_ema_is_convex_combination(seed, decay):
+    """0 <= decay <= 1: every refreshed leaf lies elementwise between the
+    old I_D and the fresh microbatch Fisher."""
+    w, i_d, batch, stream = _stream(seed, decay=decay)
+    new = np.asarray(stream.fold(w, batch)["w"])
+    old = np.asarray(i_d["w"])
+    fresh = np.asarray(fisher.diag_fisher(_loss, w, batch,
+                                          chunk_size=4)["w"])
+    lo, hi = np.minimum(old, fresh), np.maximum(old, fresh)
+    tol = 1e-6 * (1.0 + hi)
+    assert np.all(new >= lo - tol)
+    assert np.all(new <= hi + tol)
+
+
+@given(st.integers(0, 10 ** 6), st.floats(0.05, 0.95))
+@settings(**SET)
+def test_ema_preserves_nonneg_finite(seed, decay):
+    w, _, batch, stream = _stream(seed, decay=decay)
+    new = np.asarray(stream.fold(w, batch)["w"])
+    assert np.all(np.isfinite(new))
+    assert np.all(new >= 0.0)
+
+
+@given(st.integers(0, 10 ** 6), st.floats(0.1, 0.9))
+@settings(**SET)
+def test_ema_contracts_toward_fresh_fisher(seed, decay):
+    """Repeated folds of the SAME microbatch at the SAME weights converge
+    monotonically to that microbatch's Fisher (geometric contraction)."""
+    w, _, batch, stream = _stream(seed, decay=decay)
+    fresh = np.asarray(fisher.diag_fisher(_loss, w, batch,
+                                          chunk_size=4)["w"])
+    gap = np.abs(np.asarray(stream.total["w"]) - fresh)
+    for _ in range(3):
+        new = np.asarray(stream.fold(w, batch)["w"])
+        new_gap = np.abs(new - fresh)
+        assert np.all(new_gap <= gap + 1e-6 * (1.0 + np.abs(fresh)))
+        gap = new_gap
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(**SET)
+def test_ema_count_and_program_reuse(seed):
+    """The running (total, count, decay) state advances per fold while the
+    compiled refresh step is reused (one compile, then cache hits)."""
+    w, _, batch, stream = _stream(seed, decay=0.5)
+    assert stream.count == 0
+    stream.fold(w, batch)
+    stream.fold(w, batch)
+    total, count, decay = stream.state
+    assert count == 2 and decay == 0.5
+    assert stream.stats["refresh_compiles"] == 1
+    assert stream.stats["refresh_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# dampening
+# ---------------------------------------------------------------------------
+fisher_like = st.integers(min_value=1, max_value=100).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.floats(1e-6, 1e3), min_size=n, max_size=n),
+        st.lists(st.floats(-10, 10), min_size=n, max_size=n)))
+
+
+@given(fisher_like, st.floats(1.0, 50.0), st.floats(0.01, 2.0))
+@settings(**SET)
+def test_dampen_equal_fishers_is_noop(arrs, alpha, lam):
+    """I_Df == I_D selects nothing (the ratio is 1, never > alpha >= 1):
+    dampening right after a refresh that matched the forget statistics must
+    leave every parameter bit-identical."""
+    i_l, th_l = arrs
+    i = jnp.asarray(i_l, jnp.float32)
+    th = jnp.asarray(th_l, jnp.float32)
+    new, sel = dampen_array(th, i, i, alpha, lam)
+    assert not bool(np.asarray(sel).any())
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(th))
+
+
+@given(fisher_like, st.floats(0.01, 50.0), st.floats(0.0, 5.0),
+       st.integers(0, 10 ** 6))
+@settings(**SET)
+def test_dampen_never_increases_magnitude(arrs, alpha, lam, seed):
+    """beta = min(lam * I_D / I_Df, 1) <= 1: dampening can only shrink
+    |w|, for EVERY (alpha, lam) — including lam > 1."""
+    i_g_l, th_l = arrs
+    rng = np.random.default_rng(seed)
+    i_g = jnp.asarray(i_g_l, jnp.float32)
+    i_f = jnp.asarray(np.abs(rng.normal(size=len(i_g_l))) + 1e-6,
+                      jnp.float32)
+    th = jnp.asarray(th_l, jnp.float32)
+    new = np.asarray(dampen_array(th, i_f, i_g, alpha, lam)[0])
+    assert np.all(np.abs(new) <= np.abs(np.asarray(th)) + 1e-6)

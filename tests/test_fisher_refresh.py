@@ -1,0 +1,331 @@
+"""Streamed global-Fisher refresh (repro.engine.fisher_stream + the facade
+wiring):
+
+  * the ORACLE: after M facade-driven forget edits, a streamed refresh
+    moves I_D strictly closer (tree-wise relative error) to a from-scratch
+    recompute at the edited weights than the stale one-shot I_D was — the
+    quantitative staleness claim the subsystem exists for;
+  * the structure lock under refresh: a refresh whose grads would produce a
+    structurally different Fisher raises the actionable ValueError and
+    leaves BOTH the installed I_D and the EMA state untouched;
+  * the lifecycle: the refresh program joins the session cache as the third
+    compiled family — one compile on the first refresh, zero
+    compiles/retraces on every later one, and a refresh never retraces the
+    warm fused unlearn step (TRACE_LOG pinned, test_engine style);
+  * RefreshPolicy triggers: cadence, staleness threshold, and budget.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ForgetRequest, RefreshSpec, UnlearnSpec, Unlearner
+from repro.core import adapters, fisher
+from repro.data import synthetic as syn
+from repro.engine import (TRACE_LOG, FisherStream, RefreshPolicy,
+                          tree_rel_err)
+from repro.models import lm as LM
+
+
+@pytest.fixture()
+def trace_log():
+    TRACE_LOG.clear()
+    yield TRACE_LOG
+    TRACE_LOG.clear()
+
+
+# ---------------------------------------------------------------------------
+# the staleness oracle
+# ---------------------------------------------------------------------------
+def test_refresh_beats_stale_fisher_oracle(trained_resnet):
+    """After M forget edits the stored I_D describes weights that no longer
+    exist; folding retain microbatches at the EDITED weights must land
+    strictly closer to a from-scratch recompute than the stale tree."""
+    m = trained_resnet
+    params = m["params"]
+    retain_x, retain_y = syn.split_forget_retain(m["x"], m["y"],
+                                                 forget_class=2)["retain"]
+    retain = [(retain_x[:32], retain_y[:32]), (retain_x[32:64], retain_y[32:64])]
+    i_d = fisher.diag_fisher_streaming(m["loss_fn"], params, retain,
+                                       chunk_size=8)
+    adapter = adapters.resnet_adapter(m["cfg"])
+    spec = UnlearnSpec.for_mode(
+        "ficabu", alpha=8.0, lam=1.0, tau=-1.0, checkpoint_every=2,
+        chunk_size=8,
+        refresh=RefreshSpec(every_drains=1, max_batches=2, decay=0.3))
+    unl = Unlearner(adapter, i_d, spec)
+    unl.enable_fisher_refresh(None, retain, m["loss_fn"])
+    stale = jax.tree_util.tree_map(np.asarray, unl.fisher_global)
+
+    # M = 2 facade-driven edits (two different forget classes)
+    for fc in (2, 4):
+        fx, fy = syn.split_forget_retain(m["x"], m["y"],
+                                         forget_class=fc)["forget"]
+        params, _ = unl.forget(ForgetRequest(fx[:24], fy[:24]), params=params)
+
+    entry = unl.refresh_if_due(params)
+    assert entry is not None and entry["batches"] == 2
+
+    recompute = fisher.diag_fisher_streaming(m["loss_fn"], params, retain,
+                                             chunk_size=8)
+    stale_err = tree_rel_err(stale, recompute)
+    refreshed_err = tree_rel_err(unl.fisher_global, recompute)
+    assert stale_err > 0  # the edits really moved the Fisher
+    assert refreshed_err < stale_err, (refreshed_err, stale_err)
+
+
+# ---------------------------------------------------------------------------
+# structure lock + program lifecycle on an LM facade
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lm_refresh_setting():
+    cfg_m = LM.LMConfig(name="t", n_layers=4, d_model=32, n_heads=4,
+                        n_kv_heads=2, d_ff=64, vocab=64)
+    dcfg = syn.LMDataConfig(vocab=64, n_domains=4, seq_len=16,
+                            n_per_domain=8, seed=1)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg_m)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg_m, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:16, :-1], toks[:16, 1:]),
+                             chunk_size=4)
+    retain = [(toks[16:24, :-1], toks[16:24, 1:]),
+              (toks[24:32, :-1], toks[24:32, 1:])]
+    return {"cfg": cfg_m, "toks": toks, "doms": doms, "params": params,
+            "i_d": i_d, "loss_fn": loss_fn, "retain": retain,
+            "adapter": adapters.lm_adapter(cfg_m, 16)}
+
+
+def _armed_unlearner(m, alpha=6.0, **refresh_kw):
+    kw = dict(every_drains=1, max_batches=1, decay=0.5)
+    kw.update(refresh_kw)
+    spec = UnlearnSpec.for_mode("ficabu", alpha=alpha, lam=0.5, tau=-1.0,
+                                checkpoint_every=2, chunk_size=4,
+                                refresh=RefreshSpec(**kw))
+    unl = Unlearner(m["adapter"], m["i_d"], spec)
+    unl.enable_fisher_refresh(None, m["retain"], m["loss_fn"])
+    return unl
+
+
+def test_structural_refresh_rejected_state_intact(lm_refresh_setting):
+    """A refresh over a params tree with a dropped layer must raise the
+    actionable ValueError — and neither the installed I_D nor the EMA
+    state may move (no clobber, the PR-3 set_fisher contract extended to
+    the refresh path)."""
+    m = lm_refresh_setting
+    unl = _armed_unlearner(m)
+    params, _ = unl.forget(ForgetRequest(m["toks"][:8, :-1],
+                                         m["toks"][:8, 1:]),
+                           params=m["params"])
+    assert unl.refresh_if_due(params) is not None  # anchors the stream
+
+    before = unl.fisher_global
+    count_before = unl.fisher_stream.count
+    broken = dict(params)
+    dropped = sorted(broken)[0]
+    del broken[dropped]  # "frozen layer dropped"
+    unl._drains_since_refresh = 1  # make the policy due again
+    with pytest.raises(ValueError, match="structurally different"):
+        unl.refresh_now(broken)
+    assert unl.fisher_global is before
+    assert unl.fisher_stream.count == count_before
+
+
+def test_refresh_never_retraces_warm_fused_step(lm_refresh_setting,
+                                                trace_log):
+    """Program-cache pin, test_engine style: after the first drain+refresh
+    warmed all families, a drain -> refresh -> drain cycle runs with ZERO
+    compiles and ZERO retraces anywhere — replacing I_D values through
+    set_fisher must not invalidate the fused/checkpoint programs, and the
+    refresh program must be replayed, not rebuilt."""
+    m = lm_refresh_setting
+    unl = _armed_unlearner(m)
+    req = ForgetRequest(m["toks"][:8, :-1], m["toks"][:8, 1:])
+    params, s1 = unl.forget(req, params=m["params"])
+    assert s1["engine"]["compiles"] > 0
+    r1 = unl.refresh_if_due(params)
+    assert r1 is not None and r1["engine"]["refresh_compiles"] == 1
+
+    sess = unl.session
+    trace_log.clear()
+    comp0 = sess.stats["fused_compiles"] + sess.stats["partial_compiles"]
+    params, s2 = unl.forget(req, params=params)
+    r2 = unl.refresh_if_due(params)
+    params, s3 = unl.forget(req, params=params)
+    assert s2["engine"]["compiles"] == 0
+    assert s3["engine"]["compiles"] == 0
+    assert r2 is not None and r2["engine"]["refresh_compiles"] == 0
+    assert r2["engine"]["refresh_hits"] == 1
+    assert sess.stats["fused_compiles"] + sess.stats["partial_compiles"] \
+        == comp0
+    assert len(trace_log) == 0, f"unexpected retraces: {trace_log}"
+    assert sess.stats["refresh_compiles"] == 1  # one program, forever warm
+
+
+def test_refresh_feeds_structure_locked_set_fisher(lm_refresh_setting):
+    """The refresh path installs through set_fisher: the installed tree is
+    the stream's EMA (same structure as before, new values), and the
+    session sees the refreshed tree immediately."""
+    m = lm_refresh_setting
+    unl = _armed_unlearner(m, decay=0.0)  # decay=0: full replace
+    req = ForgetRequest(m["toks"][:8, :-1], m["toks"][:8, 1:])
+    params, _ = unl.forget(req, params=m["params"])
+    before = np.asarray(
+        jax.tree_util.tree_leaves(unl.fisher_global)[0])
+    unl.refresh_if_due(params)
+    after_tree = unl.fisher_global
+    after = np.asarray(jax.tree_util.tree_leaves(after_tree)[0])
+    assert unl.session.fisher_global is after_tree
+    assert not np.array_equal(before, after)  # values really refreshed
+    # decay=0 == the one-shot Fisher of the folded microbatch at the
+    # edited weights (the property harness pins this on the analytic model;
+    # here we pin it end-to-end through the facade)
+    want = fisher.diag_fisher(m["loss_fn"], params, m["retain"][0],
+                              chunk_size=4)
+    np.testing.assert_allclose(
+        after, np.asarray(jax.tree_util.tree_leaves(want)[0]),
+        rtol=2e-5, atol=1e-8)
+
+
+def test_empty_refresh_microbatch_rejected(lm_refresh_setting):
+    """A zero-sample microbatch would mean() over nothing and install an
+    all-NaN I_D: enable_fisher_refresh rejects it up front, and the Fisher
+    body itself raises (at trace time) rather than emitting NaN."""
+    m = lm_refresh_setting
+    spec = UnlearnSpec.for_mode("ficabu", chunk_size=4,
+                                refresh=RefreshSpec(every_drains=1))
+    unl = Unlearner(m["adapter"], m["i_d"], spec)
+    empty = (m["toks"][:0, :-1], m["toks"][:0, 1:])
+    with pytest.raises(ValueError, match="no samples"):
+        unl.enable_fisher_refresh(None, [m["retain"][0], empty],
+                                  m["loss_fn"])
+    with pytest.raises(ValueError, match="at least one sample"):
+        fisher.diag_fisher(m["loss_fn"], m["params"], empty, chunk_size=4)
+
+
+def test_manual_set_fisher_respected_by_refresh(lm_refresh_setting):
+    """A MANUAL set_fisher value refresh between streamed refreshes is the
+    new EMA base, never silently reverted: with decay=1 (identity fold)
+    the installed tree must come through a refresh bit-identical."""
+    m = lm_refresh_setting
+    unl = _armed_unlearner(m, decay=1.0)
+    req = ForgetRequest(m["toks"][:8, :-1], m["toks"][:8, 1:])
+    params, _ = unl.forget(req, params=m["params"])
+    better = jax.tree_util.tree_map(lambda x: 2.0 * x, unl.fisher_global)
+    unl.set_fisher(better)
+    assert unl.refresh_if_due(params) is not None
+    for got, want in zip(jax.tree_util.tree_leaves(unl.fisher_global),
+                         jax.tree_util.tree_leaves(better)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rearm_evicts_old_refresh_programs(lm_refresh_setting):
+    """Re-arming enable_fisher_refresh replaces the stream: the dead
+    stream's compiled programs leave the session cache (no unbounded
+    growth in a long-lived server) and the new stream compiles its own —
+    keyed by its cache token, so cross-stream replay is impossible."""
+    m = lm_refresh_setting
+    unl = _armed_unlearner(m)
+    req = ForgetRequest(m["toks"][:8, :-1], m["toks"][:8, 1:])
+    params, _ = unl.forget(req, params=m["params"])
+    unl.refresh_if_due(params)
+    sess = unl.session
+    n_armed = len(sess._refresh)
+    assert n_armed == 1
+    unl.enable_fisher_refresh(None, m["retain"], m["loss_fn"])
+    assert len(sess._refresh) == 0  # the dead stream's family is gone
+    unl._drains_since_refresh = 1
+    entry = unl.refresh_now(params)
+    assert entry["engine"]["refresh_compiles"] == 1  # fresh family, not reuse
+    assert len(sess._refresh) == n_armed
+
+
+# ---------------------------------------------------------------------------
+# policy triggers
+# ---------------------------------------------------------------------------
+def test_refresh_policy_triggers():
+    p = RefreshPolicy(every_drains=2, staleness_threshold=0.25,
+                      max_batches=3, decay=0.9)
+    assert not p.due(0, 1.0)          # no drain yet: nothing to refresh
+    assert not p.due(1, 0.1)          # below cadence and threshold
+    assert p.due(2, 0.0)              # cadence
+    assert p.due(1, 0.25)             # staleness
+    cadence_only = RefreshPolicy(every_drains=1, staleness_threshold=0.0)
+    assert cadence_only.due(1, 0.0)
+    stale_only = RefreshPolicy(every_drains=0, staleness_threshold=0.5)
+    assert not stale_only.due(5, 0.4)
+    assert stale_only.due(1, 0.5)
+
+
+def test_refresh_policy_validation():
+    with pytest.raises(ValueError, match="every_drains"):
+        RefreshPolicy(every_drains=-1)
+    with pytest.raises(ValueError, match="decay"):
+        RefreshPolicy(decay=1.5)
+    with pytest.raises(ValueError, match="max_batches"):
+        RefreshPolicy(max_batches=0)
+    with pytest.raises(ValueError, match="never trigger"):
+        RefreshPolicy(every_drains=0, staleness_threshold=0.0)
+    with pytest.raises(ValueError, match="staleness_threshold"):
+        RefreshSpec(staleness_threshold=2.0)
+    with pytest.raises(ValueError, match="never trigger"):
+        RefreshSpec(every_drains=0)
+
+
+def test_refresh_spec_json_round_trip():
+    spec = UnlearnSpec.for_mode(
+        "ficabu", refresh=RefreshSpec(every_drains=3,
+                                      staleness_threshold=0.1,
+                                      max_batches=2, decay=0.8))
+    assert UnlearnSpec.from_json(spec.to_json()) == spec
+    assert UnlearnSpec.from_json(spec.to_json()).refresh.decay == 0.8
+    # refresh=None (the frozen-I_D default) round-trips too
+    bare = UnlearnSpec.for_mode("ssd")
+    assert bare.refresh is None
+    assert UnlearnSpec.from_json(bare.to_json()) == bare
+    # a mapping is accepted and validated
+    spec2 = UnlearnSpec(refresh={"every_drains": 2})
+    assert spec2.refresh == RefreshSpec(every_drains=2)
+    with pytest.raises(ValueError, match="unknown refresh field"):
+        UnlearnSpec(refresh={"cadence": 2})
+
+
+def test_edited_fraction_staleness_trigger(lm_refresh_setting):
+    """The staleness trigger actually fires from drain accounting: with
+    every_drains=0 the facade refreshes only once enough parameter mass
+    was edited."""
+    m = lm_refresh_setting
+    # alpha=0.5: I_Df ~ I_D on this batch, so the threshold selects real
+    # parameter mass and the staleness accounting has something to count
+    unl = _armed_unlearner(m, alpha=0.5, every_drains=0,
+                           staleness_threshold=1e-9)
+    req = ForgetRequest(m["toks"][:8, :-1], m["toks"][:8, 1:])
+    params, st = unl.forget(req, params=m["params"])
+    assert sum(st["selected_per_layer"].values()) > 0
+    assert unl.edited_fraction > 0
+    assert unl.refresh_if_due(params) is not None
+    assert unl.edited_fraction == 0.0  # accounting reset after the refresh
+
+
+# ---------------------------------------------------------------------------
+# serving loop end-to-end
+# ---------------------------------------------------------------------------
+def test_serve_fisher_refresh_between_drains():
+    """serve.py --fisher-refresh 1 --check: refreshes run between drains,
+    the second refresh replays the cached program, and the refreshed I_D
+    beats the stale snapshot against the from-scratch recompute (the
+    fisher-smoke CI gate, exercised in-process)."""
+    from repro.launch import serve as serve_mod
+    res = serve_mod.main(["--arch", "gemma3-1b", "--requests", "4",
+                          "--prompt-len", "8", "--gen-len", "4",
+                          "--unlearn-after", "1",
+                          "--forget-domains", "1,2;3,2",
+                          "--fisher-refresh", "1", "--check"])
+    info = res["fisher_refresh"]
+    assert info["refreshes"] == 2
+    assert info["log"][0]["engine"]["refresh_compiles"] == 1
+    assert info["log"][1]["engine"]["refresh_compiles"] == 0
+    assert info["staleness"]["improved"]
+    assert info["staleness"]["refreshed_rel_err"] \
+        < info["staleness"]["stale_rel_err"]
+    # the sweeps themselves stayed coalesced and warm (PR-2 gates intact)
+    assert res["sweeps"] == res["coalesced_groups"] == 2
