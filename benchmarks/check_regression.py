@@ -38,6 +38,10 @@ GATED = {
         # diag_fisher_streaming recompute measured in the same run — a lost
         # refresh-program cache shows up as this ratio collapsing toward 1
         ("refresh_fold_warm_s", "fisher_recompute_full_s"),
+        # scanned whole-sweep megaprogram vs the layerwise drive loop in
+        # the same run — a fallback to layerwise (or a lost sweep-program
+        # cache) pushes this ratio toward/above 1
+        ("sweep_scanned_warm_s", "sweep_layerwise_warm_s"),
     ),
     "BENCH_serve.json": (
         ("coalesced_warm_per_domain_s", "sequential_warm_per_domain_s"),

@@ -16,10 +16,13 @@ wall-clock is NOT the TPU story.  What we measure + derive instead:
      microbatch) vs a from-scratch ``diag_fisher_streaming`` recompute —
      the amortization that keeps I_D fresh between drains — merged into
      BENCH_engine.json;
-  5. the SERVING hot paths: coalesced multi-domain drain vs sequential
-     per-domain sweeps, and chunked prefill vs the token-by-token decode
-     walk, recorded to BENCH_serve.json (gated by
-     benchmarks/check_regression.py in CI).
+  5. the scanned whole-sweep MEGAPROGRAM (one compiled program per drain,
+     on-device halting — repro.engine.sweep) vs the layerwise drive loop,
+     single and coalesced, merged into BENCH_engine.json;
+  6. the SERVING hot paths: coalesced multi-domain drain vs sequential
+     per-domain sweeps (both through the scanned serving default), and
+     chunked prefill vs the token-by-token decode walk, recorded to
+     BENCH_serve.json (gated by benchmarks/check_regression.py in CI).
 """
 from __future__ import annotations
 
@@ -53,11 +56,98 @@ def _merge_bench_json(path: str, out: dict) -> None:
         json.dump(rec, f, indent=1)
 
 
+def sweep_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
+                ) -> dict:
+    """The scanned whole-sweep megaprogram vs the layerwise drive loop,
+    steady state, single request AND coalesced drain, merged into
+    BENCH_engine.json (gated by benchmarks/check_regression.py).
+
+    Layerwise pays O(L) dispatches plus a host sync per halt checkpoint per
+    sweep; scanned is ONE program launch per drain with on-device halting
+    (repro.engine.sweep).  Both run through warm facades sharing hyper-
+    parameters, so the ratio isolates the drive-loop cost."""
+    from repro import configs
+    from repro.api import ForgetRequest, UnlearnSpec, Unlearner
+    from repro.core import adapters, fisher
+    from repro.data import synthetic as syn
+    from repro.models import lm as LM
+
+    cfg = configs.get(arch).smoke
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=24,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:16, :-1], toks[:16, 1:]),
+                             chunk_size=4)
+    adapter = adapters.lm_adapter(cfg, 24)
+    kw = dict(alpha=8.0, lam=1.0, tau=-1.0, checkpoint_every=2, chunk_size=4)
+    unl = Unlearner(adapter, i_d, UnlearnSpec.for_mode("ficabu", **kw))
+    scanned = unl.with_spec(UnlearnSpec.for_mode("ficabu", **kw,
+                                                 sweep_mode="scanned"))
+    fb = toks[:8]
+    req = ForgetRequest(fb[:, :-1], fb[:, 1:])
+    group = []
+    for d in range(n_domains):
+        f = toks[doms == d][:8]
+        group.append(ForgetRequest(f[:, :-1], f[:, 1:], tag=d))
+
+    # warm every family: layerwise fused/partial, scanned K=1 and K=n
+    unl.forget(req, params=params)
+    unl.forget_group(group, params=params)
+    _, s_sc = scanned.forget(req, params=params)
+    assert s_sc["engine"]["sweep_mode"] == "scanned", s_sc["engine"]
+
+    t0 = time.time()
+    for _ in range(reps):
+        unl.forget(req, params=params)
+    t_lw = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        _, s_sc = scanned.forget(req, params=params)
+    t_sc = (time.time() - t0) / reps
+    assert s_sc["engine"]["compiles"] == 0, "warm scanned sweep recompiled!"
+
+    _, _, g_sc = scanned.forget_group(group, params=params)
+    t0 = time.time()
+    for _ in range(reps):
+        unl.forget_group(group, params=params)
+    t_lwg = (time.time() - t0) / (reps * n_domains)
+    t0 = time.time()
+    for _ in range(reps):
+        _, _, g_sc = scanned.forget_group(group, params=params)
+    t_scg = (time.time() - t0) / (reps * n_domains)
+    assert g_sc["engine"]["sweep_mode"] == "scanned"
+    assert g_sc["engine"]["compiles"] == 0, "warm scanned drain recompiled!"
+
+    out = {
+        "sweep_config": (f"{arch}-smoke full sweep, forget batch 8 x 24; "
+                         f"coalesced drain over {n_domains} domains"),
+        "sweep_layerwise_warm_s": t_lw,
+        "sweep_scanned_warm_s": t_sc,
+        "sweep_scanned_speedup": t_lw / t_sc,
+        "sweep_coalesced_layerwise_per_domain_s": t_lwg,
+        "sweep_coalesced_scanned_per_domain_s": t_scg,
+        "sweep_coalesced_scanned_speedup": t_lwg / t_scg,
+        "sweep_scanned_compiles_warm": int(s_sc["engine"]["compiles"]),
+    }
+    _merge_bench_json(BENCH_ENGINE_PATH, out)
+    print("# Scanned whole-sweep megaprogram vs layerwise drive loop")
+    print(f"single    layerwise {t_lw:8.4f}s  scanned {t_sc:8.4f}s  "
+          f"speedup {out['sweep_scanned_speedup']:.2f}x")
+    print(f"coalesced layerwise {t_lwg:8.4f}s/dom  scanned {t_scg:8.4f}s/dom  "
+          f"speedup {out['sweep_coalesced_scanned_speedup']:.2f}x")
+    print(f"kernels_bench,scanned_sweep,{t_sc * 1e6:.0f},"
+          f"speedup={out['sweep_scanned_speedup']:.2f}")
+    return out
+
+
 def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
                 ) -> dict:
-    """The two serving hot paths, steady state, recorded to BENCH_serve.json:
+    """The serving hot paths, steady state, recorded to BENCH_serve.json:
 
-      1. coalesced K-domain drain (ONE ``forget_many`` sweep) vs K sequential
+      1. coalesced K-domain drain (ONE ``forget_many`` launch through the
+         scanned megaprogram — the serving default) vs K sequential
          single-domain sweeps through the same warm session;
       2. chunked prefill (``LM.prefill``, blocks of tokens per dispatch) vs
          the legacy token-by-token walk of the decode path.
@@ -78,7 +168,8 @@ def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
                              chunk_size=4)
     adapter = adapters.lm_adapter(cfg, 24)
     spec = UnlearnSpec.for_mode("ficabu", alpha=8.0, lam=1.0, tau=-1.0,
-                                checkpoint_every=2, chunk_size=4)
+                                checkpoint_every=2, chunk_size=4,
+                                sweep_mode="scanned")
     sets = []
     for d in range(n_domains):
         fb = toks[doms == d][:8]
@@ -357,6 +448,7 @@ def main() -> dict:
     print(f"kernels_bench,dampen,{t_fd:.0f},speedup={out['dampen_cpu_speedup']:.2f}")
     out["engine"] = engine_bench()
     out["refresh"] = refresh_bench()
+    out["sweep"] = sweep_bench()
     out["serve"] = serve_bench()
     return out
 

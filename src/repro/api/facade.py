@@ -371,6 +371,11 @@ class Unlearner:
             donate = bool(self.spec.exec.donate)
             self._session = UnlearnSession(self.adapter, self._fisher,
                                            donate=donate)
+        # the scanned-sweep program lays its stacked [L, ...] trees out by
+        # dist.sharding rules; hand the session the mesh + layout mode
+        if self.mesh is not None:
+            self._session.mesh = self.mesh
+            self._session.mesh_sharding = self.spec.exec.sharding
         return self._session
 
     def with_spec(self, spec: UnlearnSpec) -> "Unlearner":
@@ -409,6 +414,9 @@ class Unlearner:
                     f"ExecSpec.mesh_axes {axes} not all present on the mesh "
                     f"(axes {tuple(mesh.shape)}): missing {missing}")
         self.mesh = mesh
+        if self._session is not None:
+            self._session.mesh = mesh
+            self._session.mesh_sharding = self.spec.exec.sharding
         if self._fisher is not None:
             self.set_fisher(self._fisher)  # re-place on the new mesh
         return self

@@ -163,11 +163,19 @@ class RefreshSpec:
 
 
 _SHARDING_MODES = ("tp", "fsdp")
+_SWEEP_MODES = ("layerwise", "scanned")
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecSpec:
     """How to run: chunking, kernels, donation, mesh layout, program cache.
+
+    ``sweep_mode`` picks the engine's drive loop: ``"layerwise"`` (the
+    host-driven per-layer oracle) or ``"scanned"`` — the whole back-end-first
+    sweep as ONE compiled ``lax.scan`` program with on-device halting
+    (``repro.engine.sweep``); shape-heterogeneous stacks (ResNet) fall back
+    to the layerwise driver automatically, so ``"scanned"`` is always safe
+    to request.
 
     ``mesh_axes``/``sharding`` name the layout policy only; concrete
     PartitionSpecs come from ``repro.dist.sharding`` via ``param_pspecs`` /
@@ -186,6 +194,7 @@ class ExecSpec:
     mesh_axes: Optional[Tuple[str, ...]] = None  # e.g. ("data", "model")
     sharding: str = "tp"              # dist.sharding layout rule
     cache_dir: Optional[str] = None   # persistent XLA compilation cache
+    sweep_mode: str = "layerwise"     # "layerwise" | "scanned" megaprogram
 
     def __post_init__(self):
         _require(isinstance(self.chunk_size, int)
@@ -212,6 +221,11 @@ class ExecSpec:
                  (isinstance(self.cache_dir, str) and self.cache_dir),
                  f"ExecSpec.cache_dir must be None or a non-empty path, "
                  f"got {self.cache_dir!r}")
+        _require(self.sweep_mode in _SWEEP_MODES,
+                 f"ExecSpec.sweep_mode must be one of {_SWEEP_MODES} "
+                 f'("scanned" lowers the whole sweep as one compiled '
+                 f'program where the stack allows it), '
+                 f"got {self.sweep_mode!r}")
 
     # -- layout policy -> concrete specs (delegates to repro.dist.sharding) --
     def param_pspecs(self, tree, mesh):
@@ -277,6 +291,7 @@ class UnlearnSpec:
                  mesh_axes: Optional[Tuple[str, ...]] = None,
                  sharding: str = "tp",
                  cache_dir: Optional[str] = None,
+                 sweep_mode: str = "layerwise",
                  refresh: Optional["RefreshSpec"] = None) -> "UnlearnSpec":
         """Flat-kwargs constructor mirroring the legacy entry points: the
         drop-in replacement for ``ficabu._mode_config`` (which is now a
@@ -288,7 +303,8 @@ class UnlearnSpec:
                           max_layers=max_layers),
             exec=ExecSpec(chunk_size=chunk_size, use_kernel=use_kernel,
                           donate=donate, mesh_axes=mesh_axes,
-                          sharding=sharding, cache_dir=cache_dir),
+                          sharding=sharding, cache_dir=cache_dir,
+                          sweep_mode=sweep_mode),
             refresh=refresh)
 
     # -- mode semantics -----------------------------------------------------
@@ -313,7 +329,8 @@ class UnlearnSpec:
             checkpoint_every=self.halt.checkpoint_every if cau_on else 0,
             balanced=self.bd_enabled, b_r=self.dampen.b_r, c_m=self.dampen.c_m,
             chunk_size=self.exec.chunk_size, use_kernel=self.exec.use_kernel,
-            max_layers=self.halt.max_layers)
+            max_layers=self.halt.max_layers,
+            sweep_mode=self.exec.sweep_mode)
 
     # -- JSON round trip ----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:

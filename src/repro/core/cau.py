@@ -84,6 +84,18 @@ class UnlearnConfig:
     chunk_size: int = 8               # Fisher gradient chunking
     use_kernel: bool = False          # Pallas dampening path
     max_layers: Optional[int] = None  # optionally bound the sweep
+    # "layerwise": the host drives the per-layer loop (the oracle path);
+    # "scanned": lower the whole back-end-first sweep as ONE lax.scan
+    # program with on-device halting (repro.engine.sweep) when the layer
+    # stack is shape-uniform — heterogeneous stacks fall back automatically.
+    sweep_mode: str = "layerwise"
+
+    def __post_init__(self):
+        if self.sweep_mode not in ("layerwise", "scanned"):
+            raise ValueError(
+                f"UnlearnConfig.sweep_mode must be 'layerwise' or "
+                f"'scanned', got {self.sweep_mode!r} — a mistyped mode "
+                f"would silently run the layerwise loop")
 
 
 def _layer_param_counts(adapter: ModelAdapter, params: Params) -> List[int]:

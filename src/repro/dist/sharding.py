@@ -139,6 +139,34 @@ def param_pspecs(tree: Params, mesh=None, mode: str = "tp") -> Params:
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
+def stacked_param_pspecs(tree: Params, mesh=None, mode: str = "tp") -> Params:
+    """Specs for a leading-``[L, ...]`` per-layer STACK (the scanned-sweep
+    megaprogram's layout, ``repro.engine.sweep``): the stack dimension is
+    replicated — the ``lax.scan`` walks it layer by layer, so sharding it
+    would put collectives inside every scan step — and the per-layer
+    dimensions follow the same structural rule as the unstacked parameter.
+
+    Like ``param_pspecs``, passing a mesh divisibility-fits every spec so
+    non-dividing axes degrade to replication.
+    """
+    assert mode in ("tp", "fsdp"), mode
+    if mode == "fsdp":
+        axes = ([a for a in _mesh_axes(mesh) if a != "pod"]
+                if mesh is not None else ["data", "model"])
+
+    def one(path, leaf):
+        inner_shape = tuple(leaf.shape)[1:]
+        if mode == "fsdp":
+            inner = _leaf_spec_fsdp(_path_str(path), inner_shape, axes)
+        else:
+            inner = _leaf_spec_tp(_path_str(path), inner_shape)
+        spec = P(None, *inner)
+        return _fit_spec(spec, tuple(leaf.shape), mesh) if mesh is not None \
+            else spec
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
 # ---------------------------------------------------------------------------
 # batches / activations
 # ---------------------------------------------------------------------------

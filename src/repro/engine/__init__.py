@@ -1,6 +1,10 @@
 """Compiled unlearning engine: fused per-layer step + cross-request program
-cache + the streamed global-Fisher refresh maintainer. See DESIGN.md."""
+cache + the streamed global-Fisher refresh maintainer + the scanned
+whole-sweep megaprogram. See DESIGN.md."""
 from .fisher_stream import (FisherStream, RefreshPolicy,  # noqa: F401
                             build_refresh_step, tree_rel_err)
-from .fused import TRACE_LOG, build_fused_step, shape_signature  # noqa: F401
+from .fused import (TRACE_LOG, build_fused_step,  # noqa: F401
+                    grad_fisher_chunks, shape_signature)
 from .session import UnlearnSession  # noqa: F401
+from .sweep import (SweepPlan, build_sweep_program,  # noqa: F401
+                    effective_tau32, plan_scanned_sweep)

@@ -53,6 +53,53 @@ def shape_signature(tree: Params) -> Hashable:
             tuple((tuple(x.shape), jnp.dtype(x.dtype).name) for x in leaves))
 
 
+def grad_fisher_chunks(apply_fn: Callable[[Params, jax.Array], jax.Array],
+                       layer_p: Params, acts_c, cot_c, *,
+                       with_act_grad: bool = True):
+    """The per-layer vjp + Fisher square-accumulate over chunked
+    activations/cotangents — the shared traced body of the fused per-layer
+    step AND the scanned whole-sweep program (repro.engine.sweep), so the
+    two lower the identical op sequence and stay bit-exact by construction.
+
+    ``apply_fn(layer_p, act) -> out`` is the layer forward with any context
+    already bound.  ``acts_c``/``cot_c`` are [nc, cs, ...].  Returns
+    ``(fisher_layer, act_cotangents)`` where the Fisher is the chunk-mean of
+    squared gradients and ``act_cotangents`` is [nc, cs, ...] (a dummy f32
+    scalar when ``with_act_grad`` is False).
+    """
+    def _grad_chunk(a, c):
+        if with_act_grad:
+            _, vjp_fn = jax.vjp(apply_fn, layer_p, a)
+            return vjp_fn(c)
+        _, vjp_fn = jax.vjp(lambda lp: apply_fn(lp, a), layer_p)
+        (g_lp,) = vjp_fn(c)
+        return g_lp, jnp.zeros((), F32)
+
+    nc = jax.tree_util.tree_leaves(acts_c)[0].shape[0]
+    if nc == 1:
+        # single chunk: straight-line — a lax.scan of length 1 would force
+        # the f32 Fisher carry through HBM between "iterations".
+        a = jax.tree_util.tree_map(lambda x: x[0], acts_c)
+        c = jax.tree_util.tree_map(lambda x: x[0], cot_c)
+        g_lp, g_a = _grad_chunk(a, c)
+        g_acts = jax.tree_util.tree_map(lambda x: x[None], g_a)
+        fish = jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_lp)
+        return fish, g_acts
+
+    fish0 = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, F32), layer_p)
+
+    def body(fish, inp):
+        a, c = inp
+        g_lp, g_a = _grad_chunk(a, c)
+        fish = jax.tree_util.tree_map(
+            lambda f, g: f + g.astype(F32) ** 2, fish, g_lp)
+        return fish, g_a
+
+    fish, g_acts = jax.lax.scan(body, fish0, (acts_c, cot_c))
+    fish = jax.tree_util.tree_map(lambda f: f / nc, fish)
+    return fish, g_acts
+
+
 def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
                      *,
                      with_act_grad: bool = True,
@@ -96,42 +143,11 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
     if donate is None:
         donate = jax.default_backend() != "cpu"
 
-    def _grad_chunk(ctx, layer_p, a, c):
-        """One chunk's layer-parameter gradient (+ activation cotangent)."""
-        if with_act_grad:
-            _, vjp_fn = jax.vjp(
-                lambda lp, aa: apply_fn(ctx, lp, aa), layer_p, a)
-            return vjp_fn(c)
-        _, vjp_fn = jax.vjp(lambda lp: apply_fn(ctx, lp, a), layer_p)
-        (g_lp,) = vjp_fn(c)
-        return g_lp, jnp.zeros((), F32)
-
     def _body(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c, scalars):
         alpha, lam = scalars[0], scalars[1]
-        nc = jax.tree_util.tree_leaves(acts_c)[0].shape[0]
-
-        if nc == 1:
-            # single chunk: straight-line — a lax.scan of length 1 would
-            # force the f32 Fisher carry through HBM between "iterations".
-            a = jax.tree_util.tree_map(lambda x: x[0], acts_c)
-            c = jax.tree_util.tree_map(lambda x: x[0], cot_c)
-            g_lp, g_a = _grad_chunk(ctx, ref_layer, a, c)
-            g_acts = jax.tree_util.tree_map(lambda x: x[None], g_a)
-            fish = jax.tree_util.tree_map(lambda g: g.astype(F32) ** 2, g_lp)
-        else:
-            fish0 = jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape, F32), ref_layer)
-
-            def body(fish, inp):
-                a, c = inp
-                g_lp, g_a = _grad_chunk(ctx, ref_layer, a, c)
-                fish = jax.tree_util.tree_map(
-                    lambda f, g: f + g.astype(F32) ** 2, fish, g_lp)
-                return fish, g_a
-
-            fish, g_acts = jax.lax.scan(body, fish0, (acts_c, cot_c))
-            fish = jax.tree_util.tree_map(lambda f: f / nc, fish)
-
+        fish, g_acts = grad_fisher_chunks(
+            lambda lp, aa: apply_fn(ctx, lp, aa), ref_layer, acts_c, cot_c,
+            with_act_grad=with_act_grad)
         new_layer, masks = dampen_tree(edit_layer, fish, fisher_g, alpha, lam,
                                        use_kernel=use_kernel)
         if exclude is not None:

@@ -29,6 +29,8 @@ from repro.core.metrics import MacCounter
 from repro.core.schedule import checkpoint_set, sigmoid_profile
 
 from .fused import _note_trace, build_fused_step, shape_signature
+from .sweep import (build_sweep_program, effective_tau32, plan_scanned_sweep,
+                    sweep_cache_key)
 
 F32 = jnp.float32
 Params = Any
@@ -52,14 +54,21 @@ class UnlearnSession:
         self.adapter = adapter
         self.fisher_global = fisher_global
         self.donate = donate
+        # mesh placement hints for the scanned-sweep program's stacked
+        # [L, ...] trees (set by the facade's shard(); None = single device)
+        self.mesh = None
+        self.mesh_sharding: str = "tp"
         self._fused: Dict[Hashable, Callable] = {}
         self._partial: Dict[Hashable, Callable] = {}
         self._refresh: Dict[Hashable, Callable] = {}
+        self._sweeps: Dict[Hashable, Callable] = {}
+        self._sweep_plans: Dict[Hashable, Any] = {}
         self.stats: Dict[str, int] = {
             "requests": 0, "group_sweeps": 0,
             "fused_compiles": 0, "fused_hits": 0,
             "partial_compiles": 0, "partial_hits": 0,
             "refresh_compiles": 0, "refresh_hits": 0,
+            "sweep_compiles": 0, "sweep_hits": 0, "sweep_launches": 0,
         }
 
     # -- program cache ------------------------------------------------------
@@ -111,6 +120,23 @@ class UnlearnSession:
             self.stats["fused_compiles"] += 1
         else:
             self.stats["fused_hits"] += 1
+        return prog
+
+    def sweep_program(self, key: Hashable, builder: Callable[[], Callable]
+                      ) -> Callable:
+        """The scanned whole-sweep family (repro.engine.sweep): one program
+        per (set count, stack structure, shape signature, halting schedule).
+        ``(alpha, lam, tau)`` and Fisher values are traced operands, so a
+        warm serving process replays one executable per drain shape —
+        Balanced-Dampening profile changes and streamed I_D refreshes
+        included."""
+        prog = self._sweeps.get(key)
+        if prog is None:
+            prog = builder()
+            self._sweeps[key] = prog
+            self.stats["sweep_compiles"] += 1
+        else:
+            self.stats["sweep_hits"] += 1
         return prog
 
     def refresh_program(self, key: Hashable, builder: Callable[[], Callable]
@@ -200,24 +226,151 @@ class UnlearnSession:
             self.stats["partial_hits"] += 1
         return prog
 
-    def partial_acc(self, j: int, params, act, labels, uniform: bool) -> float:
+    def partial_acc(self, j: int, params, act, labels,
+                    uniform: bool) -> jax.Array:
         """Forget accuracy by partial inference: the cached activation at
-        depth j pushed through the already-edited suffix j..L-1."""
+        depth j pushed through the already-edited suffix j..L-1.
+
+        Returns the DEVICE scalar — coercing to a host float here would
+        force a blocking sync per checkpoint on every caller; the layerwise
+        drive loop coerces exactly once, at the point it actually branches
+        on the value, and other readers may keep the result on device."""
         if uniform and j >= 1:
             prog = self._suffix_program(params, act, labels)
-            return float(prog(params, act, labels, jnp.int32(j)))
-        return float(self._perj_program(j, params, act, labels)(
-            params, act, labels))
+            return prog(params, act, labels, jnp.int32(j))
+        return self._perj_program(j, params, act, labels)(params, act, labels)
+
+    # -- scanned whole-sweep megaprogram (repro.engine.sweep) ---------------
+    def _family_counters(self) -> Tuple[int, int]:
+        """(compiles, cache hits) summed over the request-serving program
+        families — fused per-layer steps, checkpoint programs, and the
+        scanned whole-sweep family."""
+        s = self.stats
+        return (s["fused_compiles"] + s["partial_compiles"]
+                + s["sweep_compiles"],
+                s["fused_hits"] + s["partial_hits"] + s["sweep_hits"])
+
+    def _try_scanned(self, params: Params,
+                     forget_sets: List[Tuple[Any, jax.Array]],
+                     cfg: UnlearnConfig,
+                     reference: Optional[Params] = None
+                     ) -> Optional[Tuple[Params, List[Dict]]]:
+        """Run the whole back-end-first sweep as ONE compiled program when
+        the layer stack is scannable; None means "fall back to the layerwise
+        driver" (heterogeneous stacks like ResNet, adapters without a
+        compact layer_ctx, or a ragged drain group).  Per-set halting, MAC
+        accounting and the checkpoint trace are reconstructed on the host
+        from the program's scan outputs — read once, after the single
+        launch."""
+        adapter = self.adapter
+        K = len(forget_sets)
+        sig0 = shape_signature(forget_sets[0])
+        if any(shape_signature(s) != sig0 for s in forget_sets[1:]):
+            return None  # ragged group: per-set shapes must stack
+        pk = (shape_signature(params), sig0)
+        if pk not in self._sweep_plans:
+            self._sweep_plans[pk] = plan_scanned_sweep(
+                adapter, params, forget_sets[0][0])
+        plan = self._sweep_plans[pk]
+        if plan is None:
+            return None
+
+        L = adapter.n_layers
+        cps = (tuple(checkpoint_set(L, cfg.checkpoint_every))
+               if 0 < cfg.checkpoint_every <= L else ())
+        limit = min(L, cfg.max_layers or L)
+        S = (sigmoid_profile(L, cfg.b_r, cfg.c_m) if cfg.balanced
+             else np.ones(L))
+        # the same host arithmetic as the layerwise loop: python-float
+        # product cast to f32, one (alpha, lam) row per paper layer
+        scal = np.empty((limit, 2), np.float32)
+        for l in range(1, limit + 1):
+            s = float(S[l - 1])
+            scal[l - 1, 0] = cfg.alpha * s
+            scal[l - 1, 1] = cfg.lam * s
+
+        key = sweep_cache_key(
+            plan, adapter, n_sets=K, params=params,
+            fisher=self.fisher_global, sets=forget_sets, cps=cps,
+            limit=limit, chunk_size=cfg.chunk_size,
+            use_kernel=cfg.use_kernel) + (self.mesh, self.mesh_sharding)
+        prog = self.sweep_program(key, lambda: build_sweep_program(
+            adapter, plan, n_sets=K, cps=cps, limit=limit,
+            chunk_size=cfg.chunk_size, use_kernel=cfg.use_kernel,
+            mesh=self.mesh, mesh_sharding=self.mesh_sharding,
+            tag=f"sweep:K{K}"))
+
+        ref_tree = params if reference is None else reference
+        inputs_k = tuple(s[0] for s in forget_sets)
+        labels_k = tuple(s[1] for s in forget_sets)
+        new_params, stop, n_sel, acc = prog(
+            ref_tree, params, self.fisher_global, inputs_k, labels_k,
+            scal, effective_tau32(cfg.tau))
+        self.stats["sweep_launches"] += 1
+        # ONE host read for the whole drain — the scan outputs carry every
+        # per-set halting/selection/trace quantity
+        stop = np.asarray(stop)
+        n_sel = np.asarray(n_sel)
+        acc = np.asarray(acc)
+
+        prm_counts = _layer_param_counts(adapter, ref_tree)
+        stats_k: List[Dict] = []
+        for k in range(K):
+            sl = int(stop[k])
+            hit = [c for c in cps if c <= sl]
+            macs = MacCounter(
+                adapter.layer_fwd_macs, prm_counts,
+                batch=int(jax.tree_util.tree_leaves(labels_k[k])[0].shape[0]))
+            macs.add_forward_all()
+            for l in range(1, sl + 1):
+                j = L - l
+                macs.add_backward_layer(j)
+                macs.add_fisher_layer(j)
+                macs.add_dampen_layer(j)
+            for c in hit:
+                macs.add_partial_inference(L - c, L)
+            st: Dict[str, Any] = {
+                "stopped_at_l": sl,
+                "checkpoints_hit": hit,
+                "selected_per_layer": {l: int(n_sel[k, l - 1])
+                                       for l in range(1, sl + 1)},
+                "forget_acc_trace": [(c, float(acc[k, c - 1])) for c in hit],
+                "profile_S": S.tolist(),
+                "macs": macs.total,
+                "macs_ssd": MacCounter.ssd_total(adapter.layer_fwd_macs,
+                                                 prm_counts, macs.batch),
+            }
+            st["macs_vs_ssd_pct"] = 100.0 * st["macs"] / max(st["macs_ssd"], 1)
+            stats_k.append(st)
+        return new_params, stats_k
 
     # -- the drive loop -----------------------------------------------------
     def forget(self, params: Params, inputs: Any, labels: jax.Array,
                cfg: UnlearnConfig) -> Tuple[Params, Dict]:
         """One forget request: Algorithm 1 (+ optional Balanced Dampening)
-        through the compiled engine. Returns (params', stats)."""
+        through the compiled engine. Returns (params', stats).
+
+        ``cfg.sweep_mode == "scanned"`` routes through the whole-sweep
+        megaprogram (repro.engine.sweep) when the layer stack is scannable;
+        otherwise (and for ``"layerwise"``) the host drives the per-layer
+        loop below, which stays the bit-exactness oracle."""
         adapter = self.adapter
         self.stats["requests"] += 1
-        hits0 = self.stats["fused_hits"] + self.stats["partial_hits"]
-        comp0 = self.stats["fused_compiles"] + self.stats["partial_compiles"]
+        comp0, hits0 = self._family_counters()
+        launch0 = self.stats["sweep_launches"]
+
+        if cfg.sweep_mode == "scanned":
+            res = self._try_scanned(params, [(inputs, labels)], cfg)
+            if res is not None:
+                new_params, stats_k = res
+                comp1, hits1 = self._family_counters()
+                st = stats_k[0]
+                st["engine"] = {
+                    "compiles": comp1 - comp0, "cache_hits": hits1 - hits0,
+                    "uniform_suffix": True, "sweep_mode": "scanned",
+                    "sweep_launches": self.stats["sweep_launches"] - launch0,
+                }
+                return new_params, st
 
         L = adapter.n_layers
         cps = (set(checkpoint_set(L, cfg.checkpoint_every))
@@ -264,7 +417,10 @@ class UnlearnSession:
             cot = g_acts if j > 0 else None
 
             if l in cps:
-                a_forget = self.partial_acc(j, params, acts[j], labels, uniform)
+                # the checkpoint's single host sync: partial_acc hands back
+                # the device scalar; coerce once, where we branch on it
+                a_forget = float(self.partial_acc(j, params, acts[j], labels,
+                                                  uniform))
                 macs.add_partial_inference(j, L)
                 stats["checkpoints_hit"].append(l)
                 stats["forget_acc_trace"].append((l, a_forget))
@@ -278,12 +434,12 @@ class UnlearnSession:
         stats["macs_ssd"] = MacCounter.ssd_total(adapter.layer_fwd_macs,
                                                  prm_counts, macs.batch)
         stats["macs_vs_ssd_pct"] = 100.0 * macs.total / max(stats["macs_ssd"], 1)
+        comp1, hits1 = self._family_counters()
         stats["engine"] = {
-            "compiles": (self.stats["fused_compiles"]
-                         + self.stats["partial_compiles"]) - comp0,
-            "cache_hits": (self.stats["fused_hits"]
-                           + self.stats["partial_hits"]) - hits0,
+            "compiles": comp1 - comp0,
+            "cache_hits": hits1 - hits0,
             "uniform_suffix": uniform,
+            "sweep_mode": "layerwise",
         }
         return params, stats
 
@@ -323,8 +479,31 @@ class UnlearnSession:
         ref_tree = params if reference is None else reference
         self.stats["requests"] += K
         self.stats["group_sweeps"] += 1
-        hits0 = self.stats["fused_hits"] + self.stats["partial_hits"]
-        comp0 = self.stats["fused_compiles"] + self.stats["partial_compiles"]
+        comp0, hits0 = self._family_counters()
+        launch0 = self.stats["sweep_launches"]
+
+        if cfg.sweep_mode == "scanned":
+            res = self._try_scanned(params, forget_sets, cfg,
+                                    reference=reference)
+            if res is not None:
+                new_params, stats_k = res
+                comp1, hits1 = self._family_counters()
+                group_stats = {
+                    "sets": K, "sweeps": 1,
+                    "stopped_at_l": [st["stopped_at_l"] for st in stats_k],
+                    "macs": sum(st["macs"] for st in stats_k),
+                    "engine": {
+                        "compiles": comp1 - comp0,
+                        "cache_hits": hits1 - hits0,
+                        "uniform_suffix": True,
+                        "sweep_mode": "scanned",
+                        # measured, not asserted: the serve --check gate
+                        # compares this against exactly 1 per drain
+                        "sweep_launches":
+                            self.stats["sweep_launches"] - launch0,
+                    },
+                }
+                return new_params, stats_k, group_stats
 
         L = adapter.n_layers
         cps = (set(checkpoint_set(L, cfg.checkpoint_every))
@@ -389,8 +568,8 @@ class UnlearnSession:
                 for k in range(K):
                     if not active[k]:
                         continue
-                    a_forget = self.partial_acc(j, params, acts_k[k][j],
-                                                labels_k[k], uniform)
+                    a_forget = float(self.partial_acc(j, params, acts_k[k][j],
+                                                      labels_k[k], uniform))
                     macs_k[k].add_partial_inference(j, L)
                     stats_k[k]["checkpoints_hit"].append(l)
                     stats_k[k]["forget_acc_trace"].append((l, a_forget))
@@ -410,16 +589,16 @@ class UnlearnSession:
             st["macs_ssd"] = MacCounter.ssd_total(adapter.layer_fwd_macs,
                                                   prm_counts, macs_k[k].batch)
             st["macs_vs_ssd_pct"] = 100.0 * st["macs"] / max(st["macs_ssd"], 1)
+        comp1, hits1 = self._family_counters()
         group_stats = {
             "sets": K, "sweeps": 1,
             "stopped_at_l": [st["stopped_at_l"] for st in stats_k],
             "macs": sum(st["macs"] for st in stats_k),
             "engine": {
-                "compiles": (self.stats["fused_compiles"]
-                             + self.stats["partial_compiles"]) - comp0,
-                "cache_hits": (self.stats["fused_hits"]
-                               + self.stats["partial_hits"]) - hits0,
+                "compiles": comp1 - comp0,
+                "cache_hits": hits1 - hits0,
                 "uniform_suffix": uniform,
+                "sweep_mode": "layerwise",
             },
         }
         return params, stats_k, group_stats

@@ -50,7 +50,12 @@ def _dampen_int8_kernel(sc_ref, th_ref, if_ref, ig_ref, out_ref):
 
 def _call(kernel, out_dtype, theta, i_f, i_g, alpha, lam, interpret):
     R, C = theta.shape
-    assert R % BLOCK_R == 0 and C % BLOCK_C == 0, (R, C)
+    if R % BLOCK_R != 0 or C % BLOCK_C != 0:
+        raise ValueError(
+            f"dampen kernel needs a [R, C] operand with R % {BLOCK_R} == 0 "
+            f"and C % {BLOCK_C} == 0 (the VPU tile), got {R}x{C} — route "
+            f"arbitrary shapes through repro.kernels.ops.dampen, which "
+            f"pads and reshapes")
     scalars = jnp.array([[alpha, lam]], F32)
     grid = (R // BLOCK_R, C // BLOCK_C)
     spec = pl.BlockSpec((BLOCK_R, BLOCK_C), lambda r, c: (r, c))

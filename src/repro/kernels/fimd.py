@@ -43,7 +43,12 @@ def fimd(g: jax.Array, *, interpret: bool = False) -> jax.Array:
     """[B, P] -> [P] f32; B % BLOCK_B == 0 and P % BLOCK_P == 0
     (ops.fimd pads arbitrary shapes)."""
     B, P = g.shape
-    assert B % BLOCK_B == 0 and P % BLOCK_P == 0, (B, P)
+    if B % BLOCK_B != 0 or P % BLOCK_P != 0:
+        raise ValueError(
+            f"fimd kernel needs a [B, P] gradient block with "
+            f"B % {BLOCK_B} == 0 and P % {BLOCK_P} == 0 (the accumulator "
+            f"tiling), got {B}x{P} — route arbitrary shapes through "
+            f"repro.kernels.ops.fimd, which pads")
     grid = (P // BLOCK_P, B // BLOCK_B)
     return pl.pallas_call(
         _fimd_kernel,

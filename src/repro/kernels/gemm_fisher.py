@@ -60,7 +60,16 @@ def gemm_fisher(a: jax.Array, g: jax.Array, *,
                 interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
     N, M = a.shape
     N2, K = g.shape
-    assert N == N2 and N % BLOCK_N == 0 and M % BLOCK_M == 0 and K % BLOCK_K == 0
+    if N != N2:
+        raise ValueError(
+            f"gemm_fisher contracts activations [N, M] against gradients "
+            f"[N, K] over a shared reduction dim, got N={N} vs N={N2}")
+    if N % BLOCK_N != 0 or M % BLOCK_M != 0 or K % BLOCK_K != 0:
+        raise ValueError(
+            f"gemm_fisher needs N % {BLOCK_N} == 0, M % {BLOCK_M} == 0 and "
+            f"K % {BLOCK_K} == 0 (the MXU tiling), got N={N}, M={M}, K={K} "
+            f"— pad the chunk-flattened operands to the tile multiples "
+            f"before calling")
     grid = (M // BLOCK_M, K // BLOCK_K, N // BLOCK_N)
     return pl.pallas_call(
         _gemm_fisher_kernel,

@@ -213,6 +213,28 @@ def run_unlearn_session(arch_id: str, mesh_shape=(2, 2),
     finite = all(bool(jnp.isfinite(x).all())
                  for x in jax.tree_util.tree_leaves(p1))
 
+    # the SCANNED whole-sweep megaprogram on the mesh: the same facade, a
+    # sibling spec with sweep_mode="scanned" — stacked [L, ...] param /
+    # Fisher trees laid out by dist.sharding.stacked_param_pspecs, the full
+    # drain ONE program launch, on-device halting. Run it on the SAME entry
+    # params as the layerwise drain and require identical halting + edits,
+    # then a warm repeat with zero retraces.
+    import dataclasses as _dc
+
+    from repro.engine import TRACE_LOG as _TRACE
+    spec_scanned = _dc.replace(
+        spec, exec=_dc.replace(spec.exec, sweep_mode="scanned"))
+    scanned = unl.with_spec(spec_scanned)
+    ps1, stats_sc, sg1 = scanned.forget_group(reqs, params=params)
+    _TRACE.clear()
+    t0 = time.time()
+    _, _, sg2 = scanned.forget_group(reqs, params=params)
+    t_scan_warm = time.time() - t0
+    scan_retraces = list(_TRACE)
+    scanned_equal = all(
+        bool(jnp.array_equal(a, b)) for a, b in
+        zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(ps1)))
+
     # the DONATING program family: group sweeps pin the snapshot and never
     # donate (repro.engine.fused), so exercise donation through a
     # single-request sweep — its fused steps get donate_argnums on the
@@ -236,12 +258,33 @@ def run_unlearn_session(arch_id: str, mesh_shape=(2, 2),
         },
         "engine_cold": g1["engine"], "engine_warm": g2["engine"],
         "t_cold_s": round(t_cold, 3), "t_warm_s": round(t_warm, 3),
+        "scanned_sweep": {
+            "mode": sg1["engine"].get("sweep_mode"),
+            "stopped_at_l": sg1["stopped_at_l"],
+            "matches_layerwise": scanned_equal,
+            "warm_compiles": sg2["engine"]["compiles"],
+            "warm_retraces": len(scan_retraces),
+            "t_warm_s": round(t_scan_warm, 3),
+        },
         "status": "ok",
     }
     errors = []
     if g2["engine"]["compiles"] != 0:
         errors.append(f"warm drain recompiled {g2['engine']['compiles']} "
                       "programs on the mesh")
+    if sg1["engine"].get("sweep_mode") != "scanned":
+        errors.append("the scanned megaprogram fell back to the layerwise "
+                      "loop on the mesh")
+    if not scanned_equal:
+        errors.append("scanned mesh drain diverged from the layerwise "
+                      "drain on identical inputs")
+    if sg1["stopped_at_l"] != g1["stopped_at_l"]:
+        errors.append(f"scanned mesh drain halted at {sg1['stopped_at_l']}, "
+                      f"layerwise at {g1['stopped_at_l']}")
+    if sg2["engine"]["compiles"] != 0 or scan_retraces:
+        errors.append(f"warm scanned drain recompiled "
+                      f"{sg2['engine']['compiles']} / retraced "
+                      f"{len(scan_retraces)} on the mesh")
     if donated_compiles == 0:
         errors.append("the donating single-request family compiled "
                       "nothing — donation path not exercised")
@@ -258,7 +301,10 @@ def run_unlearn_session(arch_id: str, mesh_shape=(2, 2),
           f"{fi_sharded}/{fi_leaves} fisher, "
           f"donating family compiles={donated_compiles}, "
           f"cold {t_cold:.1f}s warm {t_warm:.2f}s "
-          f"(warm compiles={g2['engine']['compiles']})", flush=True)
+          f"(warm compiles={g2['engine']['compiles']}); "
+          f"scanned megaprogram: match={scanned_equal} "
+          f"warm {t_scan_warm:.2f}s "
+          f"retraces={len(scan_retraces)}", flush=True)
     return rec
 
 

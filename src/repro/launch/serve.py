@@ -36,6 +36,13 @@ replays every compiled program — prefill, decode, and the engine's fused
 steps — from disk.  With ``--check``, a warm-disk cold start that writes
 any new cache entry (i.e. recompiled anything) fails the gate.
 
+``--sweep-mode scanned`` (the default) serves every drain through the
+whole-sweep megaprogram (``repro.engine.sweep``): the full back-end-first
+sweep — vjp, Fisher, dampening, cotangent threading AND halt checkpoints —
+is ONE compiled program per drain, halting decided on device with no host
+sync mid-sweep.  With ``--check``, a drain that fell back to the layerwise
+loop or launched more than one sweep program fails the gate.
+
 ``--fisher-refresh N`` arms the streamed global-Fisher refresh
 (``RefreshSpec(every_drains=N)``, DESIGN.md §10): every N-th drain edits the
 served weights AND then folds retain microbatches — evaluated at the
@@ -93,17 +100,22 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
 
 def default_serve_spec(chunk_size: int = 4,
                        cache_dir: Optional[str] = None,
-                       refresh_every: int = 0) -> UnlearnSpec:
+                       refresh_every: int = 0,
+                       sweep_mode: str = "scanned") -> UnlearnSpec:
     """The serving deployment's unlearning configuration as ONE auditable
     spec (logged verbatim into the result JSON).  ``refresh_every > 0``
     arms the streamed Fisher refresh every N drains (2 microbatches per
     refresh, EMA decay 0.5 — cheap enough for the smoke lane, fresh enough
-    for the staleness gate)."""
+    for the staleness gate).  ``sweep_mode`` defaults to the scanned
+    whole-sweep megaprogram: a warm drain is ONE program launch with
+    on-device halting; heterogeneous stacks fall back to the layerwise
+    driver automatically."""
     refresh = (RefreshSpec(every_drains=refresh_every, max_batches=2,
                            decay=0.5) if refresh_every > 0 else None)
     return UnlearnSpec.for_mode(
         "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
-        chunk_size=chunk_size, cache_dir=cache_dir, refresh=refresh)
+        chunk_size=chunk_size, cache_dir=cache_dir, sweep_mode=sweep_mode,
+        refresh=refresh)
 
 
 class ForgetService:
@@ -206,6 +218,16 @@ class ForgetService:
         return {"stale_rel_err": stale, "refreshed_rel_err": refreshed,
                 "improved": refreshed < stale}
 
+    @staticmethod
+    def _wrap_pad(fb, extra: int):
+        """The pad-never-trim policy: grow ``fb`` by ``extra`` wrap-repeated
+        samples (used for CHUNK alignment and drain-width equalization —
+        one idiom, one place)."""
+        if not extra:
+            return fb
+        reps = np.concatenate([fb] * (extra // len(fb) + 1))[:extra]
+        return np.concatenate([fb, reps])
+
     def _forget_batch(self, domain: int):
         """Forget samples for one domain, PADDED (never trimmed) to a CHUNK
         multiple — trimming could silently drop a whole domain's samples
@@ -215,10 +237,7 @@ class ForgetService:
         if len(fb) == 0:
             return None, 0
         pad = (-len(fb)) % self.CHUNK
-        if pad:
-            reps = np.concatenate([fb] * (pad // len(fb) + 1))[:pad]
-            fb = np.concatenate([fb, reps])
-        return fb, pad
+        return self._wrap_pad(fb, pad), pad
 
     def drain(self, params, batch_idx: int):
         """Coalesce all requests due at ``batch_idx`` into one sweep;
@@ -256,6 +275,21 @@ class ForgetService:
             group.append({"domain": dom, "fb": fb, "padded": pad})
         if not group:
             return params, False
+        # equalize set sizes within the drain (same wrap-repeat policy as
+        # the CHUNK padding): the scanned megaprogram stacks the group's
+        # forget sets, so a small domain must not force the whole drain
+        # onto the layerwise fallback path.  The layerwise driver handles
+        # ragged groups natively — don't perturb its statistics.
+        widest = max(len(g["fb"]) for g in group)
+        if self.spec.exec.sweep_mode == "scanned":
+            for g in group:
+                extra = widest - len(g["fb"])
+                if extra:
+                    g["fb"] = self._wrap_pad(g["fb"], extra)
+                    g["padded"] += extra
+                    print(f"[serve] forget batch for domain {g['domain']} "
+                          f"padded by {extra} repeated samples to the "
+                          f"drain's widest set ({widest})", flush=True)
 
         unl = self._warm(params)
         t0 = time.time()
@@ -271,6 +305,11 @@ class ForgetService:
             "group": gi, "batch": batch_idx,
             "domains": [g["domain"] for g in group],
             "requests": len(group) + n_merged,
+            # the drain's program signature: set count + per-set batch.
+            # Compiled programs are keyed by it, so the --check recompile
+            # gate flags warm drains of a SEEN signature only — the first
+            # drain of a new group size/width legitimately compiles.
+            "sweep_sig": [len(group), widest],
             "sweeps": gstats["sweeps"], "latency_s": latency,
             "engine": gstats["engine"],
         })
@@ -339,6 +378,12 @@ def main(argv=None) -> dict:
                     help="refresh the global Fisher I_D every N drains "
                          "(streamed EMA over retain microbatches at the "
                          "edited weights; 0 = keep the one-shot I_D)")
+    ap.add_argument("--sweep-mode", choices=("layerwise", "scanned"),
+                    default="scanned",
+                    help="engine drive loop: 'scanned' lowers each drain "
+                         "as ONE whole-sweep program with on-device "
+                         "halting (repro.engine.sweep); 'layerwise' is "
+                         "the host-driven oracle loop")
     ap.add_argument("--out", default=None,
                     help="write the result JSON to this path")
     args = ap.parse_args(argv)
@@ -366,7 +411,8 @@ def main(argv=None) -> dict:
                         spec=default_serve_spec(
                             chunk_size=ForgetService.CHUNK,
                             cache_dir=args.cache_dir,
-                            refresh_every=args.fisher_refresh))
+                            refresh_every=args.fisher_refresh,
+                            sweep_mode=args.sweep_mode))
     if args.unlearn_after >= 0:
         for i, burst in enumerate(_parse_bursts(args)):
             for d in burst:
@@ -429,11 +475,32 @@ def main(argv=None) -> dict:
                 problems.append(f"drain at batch {b} ran {n} engine sweeps "
                                 "— due requests were not coalesced into "
                                 "one group")
-        for g in svc.group_log[1:]:
-            if g["engine"]["compiles"] > 0:
+        seen_sigs = set()
+        for g in svc.group_log:
+            sig = tuple(g.get("sweep_sig", ()))
+            if sig in seen_sigs and g["engine"]["compiles"] > 0:
                 problems.append(f"drain {g['group']} recompiled "
-                                f"{g['engine']['compiles']} programs "
+                                f"{g['engine']['compiles']} programs for an "
+                                "already-seen drain signature "
                                 "(warm-session cache regressed)")
+            seen_sigs.add(sig)
+        # scanned-mode dispatch-count gate: every coalesced drain must be
+        # exactly ONE whole-sweep program launch — a fallback to the
+        # layerwise loop (or a K x L dispatch regression) shows up as the
+        # engine reporting a different sweep_mode / launch count
+        if svc.spec.exec.sweep_mode == "scanned":
+            for g in svc.group_log:
+                eng = g["engine"]
+                if eng.get("sweep_mode") != "scanned":
+                    problems.append(
+                        f"drain {g['group']} fell back to the "
+                        f"{eng.get('sweep_mode')!r} drive loop although the "
+                        "deployment requested the scanned megaprogram")
+                elif eng.get("sweep_launches") != 1:
+                    problems.append(
+                        f"drain {g['group']} ran "
+                        f"{eng.get('sweep_launches')} sweep-program "
+                        "launches — a coalesced drain must be exactly one")
         # cold-start gate: a process start against a WARM disk cache must
         # replay every program (prefill, decode, fused steps) from disk —
         # any new cache entry is a recompile the persistence layer missed
@@ -477,9 +544,10 @@ def main(argv=None) -> dict:
                      f"I_D rel err "
                      f"{stale.get('stale_rel_err', float('nan')):.4f}"
                      f" -> {stale.get('refreshed_rel_err', float('nan')):.4f}")
+        mode = svc.spec.exec.sweep_mode
         print(f"[serve] check ok: {n_req} request(s) in {svc.groups} "
-              f"group(s), one sweep per drain, zero recompiles after the "
-              f"first drain{extra}", flush=True)
+              f"group(s), one {mode} sweep per drain, zero recompiles "
+              f"after the first drain{extra}", flush=True)
     return result
 
 
