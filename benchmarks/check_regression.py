@@ -49,6 +49,26 @@ GATED = {
     ),
 }
 
+# The int8 path's declared tolerance contract, hardcoded HERE on purpose so a
+# drive-by loosening of repro.optim.compression.INT8_SWEEP_RTOL cannot move
+# this gate silently — tests/test_quant.py cross-asserts the two are equal.
+INT8_SWEEP_RTOL_GATE = 0.10
+
+# Machine-independent absolute gates on the FRESH record (no baseline
+# needed): (key, lo, hi) with lo <= value <= hi required.  The int8 keys
+# catch the failure modes wall-clock can't: a silent fp32 fallback
+# reproduces the oracle exactly (param error 0 < the 1e-7 floor), a lost
+# program cache recompiles warm, and a quantisation-unaware tau compare
+# halts at a different layer than the fp32 oracle.
+ABS_GATES = {
+    "BENCH_engine.json": (
+        ("int8_bytemac_reduction", 4.0, float("inf")),
+        ("int8_sweep_compiles_warm", 0, 0),
+        ("int8_halt_parity", 1, 1),
+        ("int8_param_rel_err", 1e-7, INT8_SWEEP_RTOL_GATE),
+    ),
+}
+
 
 def _norm(rec: dict, warm_key: str, ref_key: str):
     if warm_key not in rec or ref_key not in rec:
@@ -93,6 +113,24 @@ def check(baseline_dir: str, fresh_dir: str, max_ratio: float) -> int:
                   f"normalised by {ref_key}: baseline={b:.4f} fresh={fr:.4f} "
                   f"ratio={ratio:.2f} (max {max_ratio:.1f})")
             if ratio > max_ratio:
+                failures += 1
+    for fname, gates in ABS_GATES.items():
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            continue  # absence already failed above for gated files
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        for key, lo, hi in gates:
+            if key not in fresh:
+                print(f"[check_regression] FAIL {fname}: fresh run lacks "
+                      f"{key} (int8 bench did not run?)")
+                failures += 1
+                continue
+            v = float(fresh[key])
+            ok = lo <= v <= hi
+            print(f"[check_regression] {'ok' if ok else 'FAIL'} "
+                  f"{fname}:{key} = {v:.6g} (required [{lo:.6g}, {hi:.6g}])")
+            if not ok:
                 failures += 1
     return failures
 

@@ -1,6 +1,14 @@
-"""Gradient-compression benchmark: wire-byte reduction for the DP all-reduce
-path and the numerical error after error feedback — the collective-term
-lever for the roofline (§Perf)."""
+"""Gradient-compression + weight-calibration benchmark.
+
+Two sections sharing the int8 calibration rule (repro.optim.compression):
+
+  1. gradient compression for the DP all-reduce path (Int8Codec / TopKCodec
+     with error feedback) — the collective-term lever for the roofline;
+  2. per-channel weight calibration for the INT8 unlearning path
+     (``q8_quantize``): round-trip quality and scale-table overhead on
+     realistic weight shapes — the static cost the engine's
+     ``precision="int8"`` family pays before any dampening.
+"""
 from __future__ import annotations
 
 import time
@@ -9,8 +17,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim import Int8Codec, TopKCodec
+from repro.optim.compression import q8_dequantize, q8_quantize
 
 N = 1 << 20
+
+
+def calib_bench() -> dict:
+    """Per-channel int8 calibration quality on weight-like tensors: relative
+    round-trip L2 error (per-channel vs per-TENSOR scales — the reason the
+    engine carries a scale table, not one scalar) and the storage overhead
+    of the table itself."""
+    rng = np.random.default_rng(0)
+    out = {}
+    # [rows, cols] dense weight with per-row dynamic-range spread (x100
+    # across rows) — the regime where one per-tensor scale starves most rows
+    shapes = {"dense_1k": (1024, 1024), "ffn_4k": (1024, 4096)}
+    print("# Per-channel int8 weight calibration (q8_quantize)")
+    for name, (r, c) in shapes.items():
+        row_scale = np.exp(rng.uniform(np.log(0.01), np.log(1.0), size=(r, 1)))
+        w = jnp.asarray(rng.normal(size=(r, c)) * row_scale, jnp.float32)
+        t0 = time.time()
+        q, s = q8_quantize(w)
+        rt = q8_dequantize(q, s)
+        dt = (time.time() - t0) * 1e6
+        rel_pc = float(jnp.linalg.norm(rt - w) / jnp.linalg.norm(w))
+        q1, s1 = q8_quantize(w, lead_axes=0)      # one per-tensor scale
+        rel_pt = float(jnp.linalg.norm(q8_dequantize(q1, s1) - w)
+                       / jnp.linalg.norm(w))
+        overhead = s.size * 4 / (q.size * 1)      # f32 table vs int8 codes
+        out[name] = {"roundtrip_rel_err": rel_pc,
+                     "per_tensor_rel_err": rel_pt,
+                     "scale_overhead_frac": overhead}
+        print(f"{name:9s} per-channel rel-err {rel_pc:.4f}  "
+              f"per-tensor {rel_pt:.4f}  "
+              f"table overhead {overhead * 100:.2f}%")
+        print(f"compression_bench,calib_{name},{dt:.0f},"
+              f"rel_err={rel_pc:.4f}")
+    return out
 
 
 def main() -> dict:
@@ -31,6 +74,7 @@ def main() -> dict:
         print(f"{name:9s} wire {wire / 1e6:7.2f}MB vs f32 {N * 4 / 1e6:7.2f}MB "
               f"({ratio:5.1f}x less)  first-step rel-err {rel:.3f}")
         print(f"compression_bench,{name},{dt:.0f},wire_ratio={ratio:.1f}")
+    out["calibration"] = calib_bench()
     return out
 
 

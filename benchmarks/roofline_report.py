@@ -9,6 +9,8 @@ from typing import Dict, List
 
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..",
                            "experiments", "dryrun")
+BENCH_ENGINE = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_engine.json")
 
 
 def load(dirpath: str = DEFAULT_DIR) -> List[Dict]:
@@ -90,12 +92,37 @@ def summary(recs: List[Dict]) -> Dict:
                                  for r in coll_bound[:8]]}
 
 
+def int8_mac_table(path: str = BENCH_ENGINE) -> str:
+    """The int8-vs-fp32 MAC/energy-proxy table for one unlearning sweep,
+    from the keys kernels_bench.quant_bench records into BENCH_engine.json
+    (per-MAC constants: core.metrics.MAC_OPERAND_BYTES / MAC_ENERGY_PJ)."""
+    if not os.path.exists(path):
+        return "(no BENCH_engine.json — run benchmarks/kernels_bench.py)"
+    with open(path) as f:
+        r = json.load(f)
+    if "int8_macs" not in r:
+        return "(BENCH_engine.json lacks int8 keys — run quant_bench)"
+    lines = [
+        "| precision | MACs | byte-MACs | MAC energy (J) | vs fp32 |",
+        "|---|---|---|---|---|",
+        f"| fp32 | {r['int8_macs']:.3g} | {r['fp32_byte_macs']:.3g} "
+        f"| {r['fp32_mac_energy_j']:.3g} | 1.0x |",
+        f"| int8 | {r['int8_macs']:.3g} | {r['int8_byte_macs']:.3g} "
+        f"| {r['int8_mac_energy_j']:.3g} "
+        f"| {r['int8_bytemac_reduction']:.1f}x bytes, "
+        f"{r['int8_energy_reduction']:.1f}x energy |",
+    ]
+    return "\n".join(lines)
+
+
 def main():
     recs = load()
     print(f"records: {len(recs)}")
     print(json.dumps(summary(recs), indent=1))
     print("\n## Roofline (single pod 16x16)\n")
     print(roofline_table(recs))
+    print("\n## INT8 unlearning sweep: MAC / energy proxy\n")
+    print(int8_mac_table())
     rows = [r for r in recs if r.get("status") == "ok"]
     print(f"roofline_report,cells,{len(rows)},errors="
           f"{summary(recs)['errors']}")

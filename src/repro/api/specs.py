@@ -164,6 +164,39 @@ class RefreshSpec:
 
 _SHARDING_MODES = ("tp", "fsdp")
 _SWEEP_MODES = ("layerwise", "scanned")
+_PRECISIONS = ("fp32", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Calibration of the int8 unlearning path (DESIGN.md §12).
+
+    The engine's quantised path is per-channel symmetric int8
+    (``repro.optim.compression.q8_*``): one f32 scale per leading-axis
+    channel, codes in ±127, dequant-free dampening on the codes.  The
+    fields pin that contract so a serialized request is explicit about the
+    grid it ran on:
+
+    ``bits``          code width — only 8 is implemented (the paper's
+                      GEMM-centric datapath is int8).
+    ``channel_axis``  the scale-table axis — only 0 (leading-axis rows,
+                      the ``lead_axes=1`` rule) is implemented.
+    ``min_scale``     calibration clamp for all-zero channels
+                      (``Q8_MIN_SCALE`` by default).
+    """
+    bits: int = 8
+    channel_axis: int = 0
+    min_scale: float = 1e-12
+
+    def __post_init__(self):
+        _require(self.bits == 8,
+                 f"QuantSpec.bits must be 8 (the only implemented code "
+                 f"width — the paper's datapath is int8), got {self.bits!r}")
+        _require(self.channel_axis == 0,
+                 f"QuantSpec.channel_axis must be 0 (per-channel scales "
+                 f"over the leading axis is the only implemented layout), "
+                 f"got {self.channel_axis!r}")
+        _finite(self.min_scale, "QuantSpec.min_scale", positive=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +209,14 @@ class ExecSpec:
     (``repro.engine.sweep``); shape-heterogeneous stacks (ResNet) fall back
     to the layerwise driver automatically, so ``"scanned"`` is always safe
     to request.
+
+    ``precision`` picks the numeric path: ``"fp32"`` (default, the oracle)
+    or ``"int8"`` — the quantised program family (int8 weight codes +
+    per-channel f32 scale tables, dequant-free dampening,
+    quantization-aware halting; DESIGN.md §12).  ``quant`` optionally pins
+    the int8 calibration (a ``QuantSpec``); it may only be set when
+    ``precision="int8"`` — a quant table on an fp32 request is a config
+    contradiction and raises.
 
     ``mesh_axes``/``sharding`` name the layout policy only; concrete
     PartitionSpecs come from ``repro.dist.sharding`` via ``param_pspecs`` /
@@ -195,6 +236,8 @@ class ExecSpec:
     sharding: str = "tp"              # dist.sharding layout rule
     cache_dir: Optional[str] = None   # persistent XLA compilation cache
     sweep_mode: str = "layerwise"     # "layerwise" | "scanned" megaprogram
+    precision: str = "fp32"           # "fp32" | "int8" quantised path
+    quant: Optional[QuantSpec] = None  # int8 calibration (int8 only)
 
     def __post_init__(self):
         _require(isinstance(self.chunk_size, int)
@@ -226,6 +269,21 @@ class ExecSpec:
                  f'("scanned" lowers the whole sweep as one compiled '
                  f'program where the stack allows it), '
                  f"got {self.sweep_mode!r}")
+        _require(self.precision in _PRECISIONS,
+                 f"ExecSpec.precision must be one of {_PRECISIONS} "
+                 f'("int8" routes through the quantised program family), '
+                 f"got {self.precision!r}")
+        if isinstance(self.quant, dict):  # convenience: accept mappings
+            object.__setattr__(self, "quant",
+                               _from_dict(QuantSpec, self.quant, "quant"))
+        _require(self.quant is None or isinstance(self.quant, QuantSpec),
+                 f"ExecSpec.quant must be None or a QuantSpec (or a mapping "
+                 f"of its fields), got {type(self.quant).__name__}")
+        _require(self.quant is None or self.precision == "int8",
+                 f"ExecSpec.quant is set but precision={self.precision!r}: "
+                 f"a quantisation calibration on an fp32 request is a "
+                 f'config contradiction — set precision="int8" or drop '
+                 f"quant")
 
     # -- layout policy -> concrete specs (delegates to repro.dist.sharding) --
     def param_pspecs(self, tree, mesh):
@@ -292,6 +350,8 @@ class UnlearnSpec:
                  sharding: str = "tp",
                  cache_dir: Optional[str] = None,
                  sweep_mode: str = "layerwise",
+                 precision: str = "fp32",
+                 quant: Optional[QuantSpec] = None,
                  refresh: Optional["RefreshSpec"] = None) -> "UnlearnSpec":
         """Flat-kwargs constructor mirroring the legacy entry points: the
         drop-in replacement for ``ficabu._mode_config`` (which is now a
@@ -304,7 +364,8 @@ class UnlearnSpec:
             exec=ExecSpec(chunk_size=chunk_size, use_kernel=use_kernel,
                           donate=donate, mesh_axes=mesh_axes,
                           sharding=sharding, cache_dir=cache_dir,
-                          sweep_mode=sweep_mode),
+                          sweep_mode=sweep_mode, precision=precision,
+                          quant=quant),
             refresh=refresh)
 
     # -- mode semantics -----------------------------------------------------
@@ -330,7 +391,10 @@ class UnlearnSpec:
             balanced=self.bd_enabled, b_r=self.dampen.b_r, c_m=self.dampen.c_m,
             chunk_size=self.exec.chunk_size, use_kernel=self.exec.use_kernel,
             max_layers=self.halt.max_layers,
-            sweep_mode=self.exec.sweep_mode)
+            sweep_mode=self.exec.sweep_mode,
+            precision=self.exec.precision,
+            quant_min_scale=(self.exec.quant.min_scale
+                             if self.exec.quant is not None else 1e-12))
 
     # -- JSON round trip ----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:

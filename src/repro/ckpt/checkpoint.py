@@ -99,8 +99,11 @@ def restore(ckpt_dir: str, step: int, like: Params, *,
     out = []
     for path, leaf in zip(paths, leaves_like):
         arr = data[_leaf_key(path)]
-        assert tuple(arr.shape) == tuple(leaf.shape), \
-            f"{path}: ckpt {arr.shape} vs model {leaf.shape}"
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {path!r} has shape {tuple(arr.shape)} but "
+                f"the model expects {tuple(leaf.shape)} — the checkpoint was "
+                "written for a different architecture/shape")
         arr = jnp.asarray(arr).astype(leaf.dtype)  # jax casts bf16 & friends
         if sharding_fn is not None:
             arr = jax.device_put(arr, sharding_fn(path))

@@ -53,7 +53,10 @@ _REGISTRY: Dict[str, ArchSpec] = {}
 
 
 def register(spec: ArchSpec) -> ArchSpec:
-    assert spec.arch_id not in _REGISTRY, f"duplicate arch {spec.arch_id}"
+    if spec.arch_id in _REGISTRY:
+        raise ValueError(
+            f"duplicate arch registration: {spec.arch_id!r} is already in "
+            "the registry")
     _REGISTRY[spec.arch_id] = spec
     return spec
 

@@ -89,6 +89,13 @@ class UnlearnConfig:
     # program with on-device halting (repro.engine.sweep) when the layer
     # stack is shape-uniform — heterogeneous stacks fall back automatically.
     sweep_mode: str = "layerwise"
+    # "fp32" (default, the oracle) or "int8": the paper's INT8 GEMM-centric
+    # pipeline — per-channel symmetric weight quantisation, dampening in the
+    # quantised domain, halting on dequantised partial accumulators
+    # (DESIGN.md §12). Contract: within optim.compression.INT8_SWEEP_RTOL of
+    # the fp32 path per layer, same halt depth on the smoke models.
+    precision: str = "fp32"
+    quant_min_scale: float = 1e-12    # q8 scale-table clamp (QuantSpec.min_scale)
 
     def __post_init__(self):
         if self.sweep_mode not in ("layerwise", "scanned"):
@@ -96,6 +103,17 @@ class UnlearnConfig:
                 f"UnlearnConfig.sweep_mode must be 'layerwise' or "
                 f"'scanned', got {self.sweep_mode!r} — a mistyped mode "
                 f"would silently run the layerwise loop")
+        if self.precision not in ("fp32", "int8"):
+            raise ValueError(
+                f"UnlearnConfig.precision must be 'fp32' or 'int8', got "
+                f"{self.precision!r} — a mistyped precision would silently "
+                f"run the fp32 path")
+        if not (isinstance(self.quant_min_scale, float)
+                and np.isfinite(self.quant_min_scale)
+                and self.quant_min_scale > 0.0):
+            raise ValueError(
+                f"UnlearnConfig.quant_min_scale must be a finite float > 0 "
+                f"(the int8 scale-table clamp), got {self.quant_min_scale!r}")
 
 
 def _layer_param_counts(adapter: ModelAdapter, params: Params) -> List[int]:

@@ -48,6 +48,41 @@ def dampen_tree(params: Params, fisher_f: Params, fisher_g: Params,
     return new, masks
 
 
+def dampen_q8_array(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
+                    alpha: float, lam: float) -> Tuple[jax.Array, jax.Array]:
+    """Eqs. (3)+(4) applied directly to int8 weight CODES (dequant-free:
+    beta <= 1, so theta_q' = round(beta * theta_q) stays on the same
+    per-channel grid and the scale table remains valid).  Matches
+    kernels.ref.dampen_int8_ref bit-exactly.  Returns (new_q, selected)."""
+    i_f = i_f.astype(F32)
+    i_g = i_g.astype(F32)
+    sel = i_f > alpha * i_g
+    beta = jnp.minimum(lam * i_g / jnp.maximum(i_f, 1e-30), 1.0)
+    val = jnp.where(sel, jnp.round(theta_q.astype(F32) * beta),
+                    theta_q.astype(F32))
+    return jnp.clip(val, -127, 127).astype(jnp.int8), sel
+
+
+def dampen_q8_tree(q_params: Params, fisher_f: Params, fisher_g: Params,
+                   alpha: float, lam: float,
+                   use_kernel: bool = False) -> Tuple[Params, Params]:
+    """SSD dampening over a tree of int8 weight codes (the engine's
+    precision="int8" edit representation).  Returns (codes', masks)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        fn = lambda t, f, g: (kops.dampen_int8(t, f, g, alpha, lam),
+                              f.astype(F32) > alpha * g.astype(F32))
+    else:
+        fn = lambda t, f, g: dampen_q8_array(t, f, g, alpha, lam)
+    flat_p, treedef = jax.tree_util.tree_flatten(q_params)
+    flat_f = jax.tree_util.tree_leaves(fisher_f)
+    flat_g = jax.tree_util.tree_leaves(fisher_g)
+    outs = [fn(t, f, g) for t, f, g in zip(flat_p, flat_f, flat_g)]
+    new = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    masks = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new, masks
+
+
 def selection_fraction(masks: Params) -> float:
     flat = jax.tree_util.tree_leaves(masks)
     tot = sum(m.size for m in flat)

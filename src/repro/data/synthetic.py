@@ -147,8 +147,14 @@ class Batches:
                  seed: int = 0, host_id: int = 0, n_hosts: int = 1,
                  step: int = 0):
         n = arrays[0].shape[0]
-        assert all(a.shape[0] == n for a in arrays)
-        assert batch % n_hosts == 0, "global batch must divide across hosts"
+        if not all(a.shape[0] == n for a in arrays):
+            raise ValueError(
+                f"Batches arrays disagree on leading (sample) dimension: "
+                f"{[a.shape[0] for a in arrays]}")
+        if batch % n_hosts != 0:
+            raise ValueError(
+                f"global batch ({batch}) must divide evenly across "
+                f"{n_hosts} host(s)")
         self.arrays = arrays
         self.batch = batch
         self.local = batch // n_hosts

@@ -120,7 +120,9 @@ def param_pspecs(tree: Params, mesh=None, mode: str = "tp") -> Params:
     Without a mesh, returns the raw structural rules; with one, every spec
     is divisibility-fitted for that mesh.
     """
-    assert mode in ("tp", "fsdp"), mode
+    if mode not in ("tp", "fsdp"):
+        raise ValueError(
+            f"param_pspecs mode must be 'tp' or 'fsdp', got {mode!r}")
     if mode == "fsdp":
         axes = ([a for a in _mesh_axes(mesh) if a != "pod"]
                 if mesh is not None else ["data", "model"])
@@ -149,7 +151,9 @@ def stacked_param_pspecs(tree: Params, mesh=None, mode: str = "tp") -> Params:
     Like ``param_pspecs``, passing a mesh divisibility-fits every spec so
     non-dividing axes degrade to replication.
     """
-    assert mode in ("tp", "fsdp"), mode
+    if mode not in ("tp", "fsdp"):
+        raise ValueError(
+            f"stacked_param_pspecs mode must be 'tp' or 'fsdp', got {mode!r}")
     if mode == "fsdp":
         axes = ([a for a in _mesh_axes(mesh) if a != "pod"]
                 if mesh is not None else ["data", "model"])

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cau import _restore_excluded
-from repro.core.ssd import dampen_tree
+from repro.core.ssd import dampen_q8_tree, dampen_tree
 
 F32 = jnp.float32
 Params = Any
@@ -107,6 +107,7 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
                      exclude: Optional[Callable[[str], bool]] = None,
                      donate: Optional[bool] = None,
                      split_edit: bool = False,
+                     precision: str = "fp32",
                      tag: str = "fused",
                      jit_kwargs: Optional[dict] = None):
     """Build the fused per-layer program.
@@ -137,25 +138,63 @@ def build_fused_step(apply_fn: Callable[[Params, Params, jax.Array], jax.Array],
     onto ``edit_layer`` while every set's importance estimate stays pinned
     to the snapshot (DESIGN.md §8).
 
+    ``precision="int8"`` builds the quantised variant (DESIGN.md §12), which
+    is ALWAYS the split signature: the vjp/Fisher runs on ``ref_layer`` — the
+    FAKE-QUANTISED reference weights (the weights the int8 deployment
+    executes), MATERIALISED by the caller — and the edit happens dequant-free
+    on the int8 codes ``edit_layer`` via ``dampen_q8_tree`` (scales don't
+    change under beta <= 1, so they never enter the step).  The step never
+    quantises in-trace: doing so invites XLA to fuse the dequant multiply
+    into the vjp GEMMs, which perturbs the Fisher at ULP level and — through
+    dampening's round() and select threshold — flips whole code steps
+    relative to the scanned program.
+
     ``donate=None`` donates the edit-target buffer on accelerator backends
     only (CPU XLA has no donation and would warn on every call).
     """
     if donate is None:
         donate = jax.default_backend() != "cpu"
+    if precision not in ("fp32", "int8"):
+        raise ValueError(
+            f"build_fused_step precision must be 'fp32' or 'int8', got "
+            f"{precision!r}")
+    int8 = precision == "int8"
+
+    def _fisher(ctx, ref_layer, acts_c, cot_c):
+        return grad_fisher_chunks(
+            lambda lp, aa: apply_fn(ctx, lp, aa), ref_layer, acts_c, cot_c,
+            with_act_grad=with_act_grad)
+
+    def _n_sel(masks):
+        return sum(jnp.sum(m) for m in jax.tree_util.tree_leaves(masks))
 
     def _body(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c, scalars):
         alpha, lam = scalars[0], scalars[1]
-        fish, g_acts = grad_fisher_chunks(
-            lambda lp, aa: apply_fn(ctx, lp, aa), ref_layer, acts_c, cot_c,
-            with_act_grad=with_act_grad)
+        fish, g_acts = _fisher(ctx, ref_layer, acts_c, cot_c)
         new_layer, masks = dampen_tree(edit_layer, fish, fisher_g, alpha, lam,
                                        use_kernel=use_kernel)
         if exclude is not None:
             new_layer = _restore_excluded(exclude, new_layer, edit_layer)
-        n_sel = sum(jnp.sum(m) for m in jax.tree_util.tree_leaves(masks))
-        return new_layer, g_acts, n_sel
+        return new_layer, g_acts, _n_sel(masks)
 
-    if split_edit:
+    def _body_q(ctx, ref_layer, edit_q, fisher_g, acts_c, cot_c, scalars):
+        alpha, lam = scalars[0], scalars[1]
+        fish, g_acts = _fisher(ctx, ref_layer, acts_c, cot_c)
+        new_q, masks = dampen_q8_tree(edit_q, fish, fisher_g, alpha, lam,
+                                      use_kernel=use_kernel)
+        if exclude is not None:
+            # Exclusion blocks EDITS; quantisation is a deployment property
+            # and applies to every leaf — so restore the pre-edit codes.
+            new_q = _restore_excluded(exclude, new_q, edit_q)
+        return new_q, g_acts, _n_sel(masks)
+
+    if int8:
+        def step(ctx, ref_layer, edit_q, fisher_g, acts_c, cot_c, scalars):
+            _note_trace(tag)
+            return _body_q(ctx, ref_layer, edit_q, fisher_g, acts_c, cot_c,
+                           scalars)
+        donate_argnums = (2,)
+    elif split_edit:
         def step(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c, scalars):
             _note_trace(tag)
             return _body(ctx, ref_layer, edit_layer, fisher_g, acts_c, cot_c,

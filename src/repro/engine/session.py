@@ -27,6 +27,8 @@ from repro.core.cau import (ModelAdapter, UnlearnConfig, _chunk,
                             _layer_param_counts, _logit_cotangents)
 from repro.core.metrics import MacCounter
 from repro.core.schedule import checkpoint_set, sigmoid_profile
+from repro.optim.compression import (q8_dequantize_tree, q8_fakequant_tree,
+                                     q8_quantize_tree)
 
 from .fused import _note_trace, build_fused_step, shape_signature
 from .sweep import (build_sweep_program, effective_tau32, plan_scanned_sweep,
@@ -63,12 +65,19 @@ class UnlearnSession:
         self._refresh: Dict[Hashable, Callable] = {}
         self._sweeps: Dict[Hashable, Callable] = {}
         self._sweep_plans: Dict[Hashable, Any] = {}
+        self._quant: Dict[Hashable, Callable] = {}
         self.stats: Dict[str, int] = {
             "requests": 0, "group_sweeps": 0,
             "fused_compiles": 0, "fused_hits": 0,
             "partial_compiles": 0, "partial_hits": 0,
             "refresh_compiles": 0, "refresh_hits": 0,
             "sweep_compiles": 0, "sweep_hits": 0, "sweep_launches": 0,
+            # the int8 program family keeps its own counters so a silent
+            # fp32 fallback is visible: an int8-configured request that
+            # bumps sweep_* instead of int8_sweep_* fails the bench gate
+            "int8_sweep_compiles": 0, "int8_sweep_hits": 0,
+            "int8_sweep_launches": 0,
+            "quant_compiles": 0, "quant_hits": 0,
         }
 
     # -- program cache ------------------------------------------------------
@@ -94,7 +103,8 @@ class UnlearnSession:
         target shares the reference's shape signature, so the cache key only
         differs in the kind prefix)."""
         with_act = j > 0
-        kind = "gfused" if split_edit else "fused"
+        kind = ("gfused" if split_edit else "fused") + (
+            "8" if cfg.precision == "int8" else "")
         key = (kind, self._layer_key(j), shape_signature(ctx),
                shape_signature(layer_p), shape_signature(acts_c),
                shape_signature(cot_c), with_act, cfg.use_kernel,
@@ -115,6 +125,7 @@ class UnlearnSession:
                 exclude=adapter.exclude,
                 donate=False if split_edit else self.donate,
                 split_edit=split_edit,
+                precision=cfg.precision,
                 tag=f"{kind}:{self._layer_key(j)}")
             self._fused[key] = prog
             self.stats["fused_compiles"] += 1
@@ -122,21 +133,40 @@ class UnlearnSession:
             self.stats["fused_hits"] += 1
         return prog
 
-    def sweep_program(self, key: Hashable, builder: Callable[[], Callable]
-                      ) -> Callable:
+    def sweep_program(self, key: Hashable, builder: Callable[[], Callable],
+                      *, family: str = "sweep") -> Callable:
         """The scanned whole-sweep family (repro.engine.sweep): one program
         per (set count, stack structure, shape signature, halting schedule).
         ``(alpha, lam, tau)`` and Fisher values are traced operands, so a
         warm serving process replays one executable per drain shape —
         Balanced-Dampening profile changes and streamed I_D refreshes
-        included."""
+        included.  ``family`` selects the compile/hit counter pair —
+        "sweep" (fp32) or "int8_sweep" (the quantised program family)."""
         prog = self._sweeps.get(key)
         if prog is None:
             prog = builder()
             self._sweeps[key] = prog
-            self.stats["sweep_compiles"] += 1
+            self.stats[f"{family}_compiles"] += 1
         else:
-            self.stats["sweep_hits"] += 1
+            self.stats[f"{family}_hits"] += 1
+        return prog
+
+    def _fakequant_program(self, tree: Params, min_scale: float) -> Callable:
+        """Whole-tree per-channel fakequant as ONE cached jitted program —
+        the layerwise int8 driver's entry step (the scanned program fuses
+        the same op into its own trace)."""
+        key = ("quant", shape_signature(tree), float(min_scale))
+        prog = self._quant.get(key)
+        if prog is None:
+            def run(t, _ms=float(min_scale)):
+                _note_trace("quant")
+                return q8_fakequant_tree(t, min_scale=_ms)
+
+            prog = jax.jit(run)
+            self._quant[key] = prog
+            self.stats["quant_compiles"] += 1
+        else:
+            self.stats["quant_hits"] += 1
         return prog
 
     def refresh_program(self, key: Hashable, builder: Callable[[], Callable]
@@ -243,12 +273,14 @@ class UnlearnSession:
     # -- scanned whole-sweep megaprogram (repro.engine.sweep) ---------------
     def _family_counters(self) -> Tuple[int, int]:
         """(compiles, cache hits) summed over the request-serving program
-        families — fused per-layer steps, checkpoint programs, and the
-        scanned whole-sweep family."""
+        families — fused per-layer steps, checkpoint programs, the fp32 and
+        int8 scanned whole-sweep families, and the fakequant entry step."""
         s = self.stats
         return (s["fused_compiles"] + s["partial_compiles"]
-                + s["sweep_compiles"],
-                s["fused_hits"] + s["partial_hits"] + s["sweep_hits"])
+                + s["sweep_compiles"] + s["int8_sweep_compiles"]
+                + s["quant_compiles"],
+                s["fused_hits"] + s["partial_hits"] + s["sweep_hits"]
+                + s["int8_sweep_hits"] + s["quant_hits"])
 
     def _try_scanned(self, params: Params,
                      forget_sets: List[Tuple[Any, jax.Array]],
@@ -289,24 +321,36 @@ class UnlearnSession:
             scal[l - 1, 0] = cfg.alpha * s
             scal[l - 1, 1] = cfg.lam * s
 
+        int8 = cfg.precision == "int8"
+        family = "int8_sweep" if int8 else "sweep"
         key = sweep_cache_key(
             plan, adapter, n_sets=K, params=params,
             fisher=self.fisher_global, sets=forget_sets, cps=cps,
             limit=limit, chunk_size=cfg.chunk_size,
-            use_kernel=cfg.use_kernel) + (self.mesh, self.mesh_sharding)
+            use_kernel=cfg.use_kernel, precision=cfg.precision,
+            quant_min_scale=cfg.quant_min_scale
+        ) + (self.mesh, self.mesh_sharding)
         prog = self.sweep_program(key, lambda: build_sweep_program(
             adapter, plan, n_sets=K, cps=cps, limit=limit,
             chunk_size=cfg.chunk_size, use_kernel=cfg.use_kernel,
             mesh=self.mesh, mesh_sharding=self.mesh_sharding,
-            tag=f"sweep:K{K}"))
+            precision=cfg.precision, quant_min_scale=cfg.quant_min_scale,
+            tag=f"sweep{'8' if int8 else ''}:K{K}"), family=family)
 
         ref_tree = params if reference is None else reference
+        if int8:
+            # the program's int8 contract: the reference arrives already
+            # fake-quantised, materialised by the cached fakequant program
+            ref_tree = self._fakequant_program(
+                ref_tree, cfg.quant_min_scale)(ref_tree)
         inputs_k = tuple(s[0] for s in forget_sets)
         labels_k = tuple(s[1] for s in forget_sets)
         new_params, stop, n_sel, acc = prog(
             ref_tree, params, self.fisher_global, inputs_k, labels_k,
             scal, effective_tau32(cfg.tau))
         self.stats["sweep_launches"] += 1
+        if int8:
+            self.stats["int8_sweep_launches"] += 1
         # ONE host read for the whole drain — the scan outputs carry every
         # per-set halting/selection/trace quantity
         stop = np.asarray(stop)
@@ -368,11 +412,22 @@ class UnlearnSession:
                 st["engine"] = {
                     "compiles": comp1 - comp0, "cache_hits": hits1 - hits0,
                     "uniform_suffix": True, "sweep_mode": "scanned",
+                    "precision": cfg.precision,
                     "sweep_launches": self.stats["sweep_launches"] - launch0,
                 }
                 return new_params, st
 
         L = adapter.n_layers
+        int8 = cfg.precision == "int8"
+        pristine = params
+        if int8:
+            # Weight-only fake-quant deployment state (DESIGN.md §12): every
+            # forward/checkpoint runs on fq(params); each layer's edit starts
+            # from the PRISTINE f32 layer and is quantised exactly ONCE
+            # inside the fused int8 step (q8 is not ULP-idempotent, so the
+            # fq working tree must never be re-quantised).
+            params = self._fakequant_program(
+                params, cfg.quant_min_scale)(params)
         cps = (set(checkpoint_set(L, cfg.checkpoint_every))
                if 0 < cfg.checkpoint_every <= L else set())
         S = (sigmoid_profile(L, cfg.b_r, cfg.c_m) if cfg.balanced
@@ -405,9 +460,22 @@ class UnlearnSession:
             scalars = jnp.asarray([cfg.alpha * s, cfg.lam * s], F32)
             fg_layer = adapter.get_layer(self.fisher_global, j)
 
-            step = self.fused_program(j, ctx, layer_p, acts_c, cot, cfg)
-            new_layer, g_acts, n_sel = step(ctx, layer_p, fg_layer,
+            if int8:
+                # vjp/Fisher reference = the materialised fq layer (layer_p
+                # from the fq working tree); edit codes quantised from the
+                # PRISTINE layer, exactly once, outside the step's trace
+                edit_q, edit_s = q8_quantize_tree(
+                    adapter.get_layer(pristine, j),
+                    min_scale=cfg.quant_min_scale)
+                step = self.fused_program(j, ctx, layer_p, acts_c, cot, cfg,
+                                          split_edit=True)
+                new_q, g_acts, n_sel = step(ctx, layer_p, edit_q, fg_layer,
                                             acts_c, cot, scalars)
+                new_layer = q8_dequantize_tree(new_q, edit_s, like=layer_p)
+            else:
+                step = self.fused_program(j, ctx, layer_p, acts_c, cot, cfg)
+                new_layer, g_acts, n_sel = step(ctx, layer_p, fg_layer,
+                                                acts_c, cot, scalars)
             macs.add_backward_layer(j)
             macs.add_fisher_layer(j)
             macs.add_dampen_layer(j)
@@ -440,6 +508,7 @@ class UnlearnSession:
             "cache_hits": hits1 - hits0,
             "uniform_suffix": uniform,
             "sweep_mode": "layerwise",
+            "precision": cfg.precision,
         }
         return params, stats
 
@@ -497,6 +566,7 @@ class UnlearnSession:
                         "cache_hits": hits1 - hits0,
                         "uniform_suffix": True,
                         "sweep_mode": "scanned",
+                        "precision": cfg.precision,
                         # measured, not asserted: the serve --check gate
                         # compares this against exactly 1 per drain
                         "sweep_launches":
@@ -510,6 +580,18 @@ class UnlearnSession:
                if 0 < cfg.checkpoint_every <= L else set())
         S = (sigmoid_profile(L, cfg.b_r, cfg.c_m) if cfg.balanced
              else np.ones(L))
+        int8 = cfg.precision == "int8"
+        if int8:
+            # fq snapshot = the deployed reference every set backprops
+            # through; edit codes come from the PRISTINE edit tree, quantised
+            # once per layer, composed across the K sets in the q domain, and
+            # dequantised once into the fq working tree.
+            fqp = self._fakequant_program(ref_tree, cfg.quant_min_scale)
+            ref_run = fqp(ref_tree)
+            pristine_edit = params
+            params = ref_run if reference is None else fqp(params)
+        else:
+            ref_run = ref_tree
         prm_counts = _layer_param_counts(adapter, ref_tree)
         cs = cfg.chunk_size
 
@@ -519,7 +601,7 @@ class UnlearnSession:
         macs_k: List[MacCounter] = []
         stats_k: List[Dict] = []
         for inputs, labels in forget_sets:
-            logits, acts = adapter.forward_collect(ref_tree, inputs)
+            logits, acts = adapter.forward_collect(ref_run, inputs)
             macs = MacCounter(adapter.layer_fwd_macs, prm_counts,
                               batch=int(jax.tree_util.tree_leaves(labels)[0].shape[0]))
             macs.add_forward_all()
@@ -541,9 +623,15 @@ class UnlearnSession:
 
         for l in range(1, min(L, sweep_limit) + 1):  # paper index, back->front
             j = L - l
-            ref_layer = adapter.get_layer(ref_tree, j)   # snapshot == original
-            ctx = self._layer_ctx(ref_tree, j)
-            cur = adapter.get_layer(params, j)
+            ref_layer = adapter.get_layer(ref_run, j)   # snapshot == original
+            ctx = self._layer_ctx(ref_run, j)
+            if int8:
+                cur_q, cur_s = q8_quantize_tree(
+                    adapter.get_layer(pristine_edit, j),
+                    min_scale=cfg.quant_min_scale)
+                cur = cur_q
+            else:
+                cur = adapter.get_layer(params, j)
             s = float(S[l - 1])
             scalars = jnp.asarray([cfg.alpha * s, cfg.lam * s], F32)
             fg_layer = adapter.get_layer(self.fisher_global, j)
@@ -562,6 +650,10 @@ class UnlearnSession:
                 stats_k[k]["selected_per_layer"][l] = int(n_sel)
                 cot_k[k] = g_acts if j > 0 else None
 
+            if int8:
+                # beta <= 1 keeps the scale table valid across all K edits
+                cur = q8_dequantize_tree(
+                    cur, cur_s, like=adapter.get_layer(pristine_edit, j))
             params = adapter.set_layer(params, j, cur)
 
             if l in cps:
@@ -599,6 +691,7 @@ class UnlearnSession:
                 "cache_hits": hits1 - hits0,
                 "uniform_suffix": uniform,
                 "sweep_mode": "layerwise",
+                "precision": cfg.precision,
             },
         }
         return params, stats_k, group_stats

@@ -49,7 +49,9 @@ import numpy as np
 
 from repro.core.cau import (ModelAdapter, _chunk, _logit_cotangents,
                             _restore_excluded)
-from repro.core.ssd import dampen_tree
+from repro.core.ssd import dampen_q8_tree, dampen_tree
+from repro.optim.compression import (q8_dequantize_tree, q8_fakequant_tree,
+                                     q8_quantize_tree)
 
 from .fused import _note_trace, grad_fisher_chunks, shape_signature
 
@@ -140,6 +142,8 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
                         use_kernel: bool,
                         mesh=None,
                         mesh_sharding: str = "tp",
+                        precision: str = "fp32",
+                        quant_min_scale: float = 1e-12,
                         tag: str = "sweep") -> Callable:
     """Build the whole-sweep program.  Returns a jitted
 
@@ -156,7 +160,29 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
     (bounded sweep depth) and ``chunk_size`` are static and part of the
     session's cache key.  ``acc_trace`` rows hold NaN at non-checkpoint
     layers; entries past a set's ``stop_l`` are scratch the host discards.
+
+    ``precision="int8"`` builds the quantised program family (DESIGN.md
+    §12): ``ref_tree`` must arrive ALREADY fake-quantised — materialised by
+    the driver's cached fakequant program, never re-quantised here (q8 is
+    not ULP-idempotent, and an in-trace fakequant would let XLA fuse the
+    dequant multiply into the vjp GEMMs, perturbing the Fisher against the
+    layerwise oracle).  vjp/Fisher and the forward collect run on those
+    deployed weights, the carried edit state is stacked ``[Lb, ...]`` int8
+    code arrays
+    plus stacked f32 scale tables walked by the SAME ``lax.scan``, and
+    dampening edits the codes dequant-free.  Halt checkpoints DEQUANTISE the
+    carried suffix on the fly before the masked partial forward, so the tau
+    compare sees the accuracy of the deployable dequantised weights — paired
+    with ``effective_tau32`` this keeps the int8 halt depth aligned with
+    fp32 on the smoke models (regression-pinned).  The returned tree is the
+    dequantised deployment state (every layer fake-quantised, edited or
+    not); fp32 stays the default and the oracle.
     """
+    if precision not in ("fp32", "int8"):
+        raise ValueError(
+            f"build_sweep_program precision must be 'fp32' or 'int8', got "
+            f"{precision!r}")
+    int8 = precision == "int8"
     L = plan.n_layers
     Lb = L - 2
     K = n_sets
@@ -217,6 +243,10 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
             return jax.tree_util.tree_map(lambda x: x[None], out)
         return jax.vmap(fn)(*args_k)
 
+    # int8 edits happen on the CODES (dequant-free, shared math with the
+    # fused step's _body_q); exclusion restores pre-edit codes either way.
+    _damp = dampen_q8_tree if int8 else dampen_tree
+
     def _dampen_compose(cur, fish_k, fish_g, sc, active):
         """Split-edit composition: each set's dampening (selection from ITS
         snapshot Fisher) multiplies onto the shared carried layer, in set
@@ -224,8 +254,8 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
         n_sel_k = []
         for k in range(K):
             fish = jax.tree_util.tree_map(lambda x: x[k], fish_k)
-            new_layer, masks = dampen_tree(cur, fish, fish_g, sc[0], sc[1],
-                                           use_kernel=use_kernel)
+            new_layer, masks = _damp(cur, fish, fish_g, sc[0], sc[1],
+                                     use_kernel=use_kernel)
             if exclude is not None:
                 new_layer = _restore_excluded(exclude, new_layer, cur)
             n_sel_k.append(sum(jnp.sum(m).astype(I32)
@@ -235,14 +265,25 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
                 lambda n, o: jnp.where(ak, n, o), new_layer, cur)
         return cur, jnp.stack(n_sel_k)
 
-    def _suffix_acc(stack_cur, head_cur, ctx_head, bidx, x0, labels):
+    def _suffix_acc(stack_cur, stack_s, stack_like, head_cur, ctx_head, bidx,
+                    x0, labels):
         """Partial inference for one set: the cached activation at block
         ``bidx`` pushed through the already-edited suffix (masked forward
         over the carried stack, one scan per same-kind run) and the edited
-        head."""
+        head.  Quantization-aware halting: when the carry holds int8 codes
+        (``stack_s`` is the stacked scale-table tree, else None) each
+        segment is dequantised on the fly, so the tau compare runs on the
+        DEQUANTISED partial accumulator — the accuracy of the weights that
+        would actually be deployed."""
         x = x0
         for (t, s0, s1) in runs:
-            seg = jax.tree_util.tree_map(lambda a: a[s0:s1], stack_cur)
+            if int8:
+                seg = jax.tree_util.tree_map(
+                    lambda q, s, e: (q[s0:s1].astype(F32)
+                                     * s[s0:s1]).astype(e.dtype),
+                    stack_cur, stack_s, stack_like)
+            else:
+                seg = jax.tree_util.tree_map(lambda a: a[s0:s1], stack_cur)
 
             def blk(xx, inp, _t=t):
                 lp, sidx = inp
@@ -261,11 +302,16 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
 
     def sweep(ref_tree, edit_tree, fisher, inputs_k, labels_k, scalars, tau):
         _note_trace(tag)
+        # int8 contract: ref_tree is the fake-quantised snapshot, already
+        # materialised by the driver (the weights the int8 deployment
+        # executes) — quantising it in-trace would perturb the vjp GEMMs at
+        # the ULP level vs the layerwise oracle (see docstring)
+        ref_run = ref_tree
         # ---- forward collect + cotangents (on-device, per set) ------------
         acts_rows = []          # per set: [L-1 entries][nc, cs, ...], j >= 1
         cot0 = []
         for inp, lbl in zip(inputs_k, labels_k):
-            logits, acts = adapter.forward_collect(ref_tree, inp)
+            logits, acts = adapter.forward_collect(ref_run, inp)
             cot0.append(_logit_cotangents(adapter.loss, _chunk(logits, cs),
                                           _chunk(lbl, cs)))
             acts_rows.append([_chunk(a, cs) for a in acts[1:]])
@@ -277,18 +323,37 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
         acts_mid = jnp.stack([jnp.stack(r[:Lb]) for r in acts_rows])
         acts_head = jnp.stack([r[Lb] for r in acts_rows])
 
-        ref_stack = _constrain_stack(_stack(ref_tree))
+        ref_stack = _constrain_stack(_stack(ref_run))
         edit_stack = _constrain_stack(_stack(edit_tree))
         fish_stack = _constrain_stack(_stack(fisher))
+        if int8:
+            # the carried edit state: stacked int8 codes + stacked f32
+            # per-(layer, channel) scale tables — lead_axes=2 over the
+            # [Lb, ...] layout yields bit-identical scales to quantising
+            # each layer alone, so the layerwise int8 driver stays the
+            # bit-exactness oracle for this program too
+            stack_q, stack_s = q8_quantize_tree(edit_stack, lead_axes=2,
+                                                min_scale=quant_min_scale)
+        else:
+            stack_q = stack_s = None
         # two head contexts, mirroring the layerwise oracle: the vjp/Fisher
         # side reads the SNAPSHOT tree (forget_many pins statistics to the
         # drain point), while checkpoints evaluate against the EDIT tree —
         # the weights that would actually be deployed (under tied
-        # embeddings the two differ whenever reference != params)
-        ctx_head = adapter.layer_ctx(ref_tree, L - 1)
-        ctx_head_cp = adapter.layer_ctx(edit_tree, L - 1)
-        head_ref = adapter.get_layer(ref_tree, L - 1)
+        # embeddings the two differ whenever reference != params); in int8
+        # "deployed" means fake-quantised, for the checkpoint context too
+        ctx_head = adapter.layer_ctx(ref_run, L - 1)
+        ctx_head_cp = adapter.layer_ctx(
+            q8_fakequant_tree(edit_tree, min_scale=quant_min_scale)
+            if int8 else edit_tree, L - 1)
+        head_ref = adapter.get_layer(ref_run, L - 1)
         head_cur = adapter.get_layer(edit_tree, L - 1)
+        if int8:
+            head_q, head_s = q8_quantize_tree(head_cur,
+                                              min_scale=quant_min_scale)
+            head_edit = head_q
+        else:
+            head_edit = head_cur
         fish_head = adapter.get_layer(fisher, L - 1)
 
         active = jnp.ones((K,), bool)
@@ -304,13 +369,17 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
                 head_ref, a_c, c_c, with_act_grad=True)
 
         fish_k, g_k = _per_set(head_grads, acts_head, cot)
-        head_cur, n_sel = _dampen_compose(head_cur, fish_k, fish_head,
-                                          scalars[0], active)
+        head_edit, n_sel = _dampen_compose(head_edit, fish_k, fish_head,
+                                           scalars[0], active)
+        # the deployable head: dequantised codes in int8, the edit itself in
+        # fp32 — checkpoints, the suffix walk and the output tree all read it
+        head_cp = (q8_dequantize_tree(head_edit, head_s, like=head_cur)
+                   if int8 else head_edit)
         cot = g_k
         n_sel_rows.append(n_sel)
         if 1 in cps_set:
             def head_acc(x0, lbl):
-                logits = adapter.apply_layer(ctx_head_cp, L - 1, head_cur,
+                logits = adapter.apply_layer(ctx_head_cp, L - 1, head_cp,
                                              x0)
                 return adapter.acc(logits, lbl)
 
@@ -349,8 +418,9 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
 
                 def do_cp(_):
                     def one(x0, lbl):
-                        return _suffix_acc(stack_cur, head_cur, ctx_head_cp,
-                                           bidx, x0, lbl)
+                        return _suffix_acc(stack_cur, stack_s, edit_stack,
+                                           head_cp, ctx_head_cp, bidx, x0,
+                                           lbl)
                     return _per_set(one, _unchunk(a_c), labels_s)
 
                 a_f = jax.lax.cond(is_cp, do_cp,
@@ -361,7 +431,7 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
                 return (stack_cur, cot_c, act, st), (n_sel, a_f)
             return body
 
-        carry = (edit_stack, cot, active, stop_l)
+        carry = (stack_q if int8 else edit_stack, cot, active, stop_l)
         for t, seg_ls in segs:
             bidx_arr = jnp.asarray([L - l - 1 for l in seg_ls], I32)
             iscp_arr = jnp.asarray([l in cps_set for l in seg_ls], bool)
@@ -371,13 +441,25 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
                 (bidx_arr, sc_arr, iscp_arr, jnp.asarray(seg_ls, I32)))
             n_sel_rows.extend(ns[i] for i in range(len(seg_ls)))
             acc_rows.extend(af[i] for i in range(len(seg_ls)))
-        edit_stack, cot, active, stop_l = carry
+        stack_out, cot, active, stop_l = carry
+        if int8:
+            # the output tree is the dequantised deployment state — also for
+            # layers the sweep never edited (their codes are untouched, so
+            # this is exactly fakequant of the pristine layer)
+            stack_out = q8_dequantize_tree(stack_out, stack_s,
+                                           like=edit_stack)
 
         # ---- l = L: the front layer (embedding / patch / stem) ----------
         new_tree = edit_tree
         if limit >= L:
-            front_ref = adapter.get_layer(ref_tree, 0)
+            front_ref = adapter.get_layer(ref_run, 0)
             front_cur = adapter.get_layer(edit_tree, 0)
+            if int8:
+                front_q, front_s = q8_quantize_tree(
+                    front_cur, min_scale=quant_min_scale)
+                front_edit = front_q
+            else:
+                front_edit = front_cur
             fish_front = adapter.get_layer(fisher, 0)
 
             def front_grads(a_c, c_c):
@@ -386,15 +468,26 @@ def build_sweep_program(adapter: ModelAdapter, plan: SweepPlan, *,
                     front_ref, a_c, c_c, with_act_grad=False)
 
             fish_k, _ = _per_set(front_grads, inputs0_c, cot)
-            front_cur, n_sel = _dampen_compose(front_cur, fish_k, fish_front,
-                                               scalars[L - 1], active)
+            front_edit, n_sel = _dampen_compose(front_edit, fish_k,
+                                                fish_front,
+                                                scalars[L - 1], active)
             n_sel_rows.append(n_sel)
-            new_tree = adapter.set_layer(new_tree, 0, front_cur)
-        new_tree = adapter.set_layer(new_tree, L - 1, head_cur)
+            front_out = (q8_dequantize_tree(front_edit, front_s,
+                                            like=front_cur)
+                         if int8 else front_edit)
+            new_tree = adapter.set_layer(new_tree, 0, front_out)
+        elif int8:
+            # bounded sweep: the front layer is never edited but still ships
+            # quantised in the int8 deployment state
+            new_tree = adapter.set_layer(
+                new_tree, 0,
+                q8_fakequant_tree(adapter.get_layer(edit_tree, 0),
+                                  min_scale=quant_min_scale))
+        new_tree = adapter.set_layer(new_tree, L - 1, head_cp)
         for sidx in range(Lb):
             new_tree = adapter.set_layer(
                 new_tree, sidx + 1,
-                jax.tree_util.tree_map(lambda x: x[sidx], edit_stack))
+                jax.tree_util.tree_map(lambda x: x[sidx], stack_out))
         if limit >= L and L in cps_set:
             # final checkpoint: the generic full-tree walk (the front edit
             # may feed later layers — tied embeddings — so contexts are
@@ -427,12 +520,17 @@ def sweep_cache_key(plan: SweepPlan, adapter: ModelAdapter, *,
                     n_sets: int, params: Params, fisher: Params,
                     sets: Sequence[Tuple[Any, Any]],
                     cps: Tuple[int, ...], limit: int,
-                    chunk_size: int, use_kernel: bool) -> Hashable:
+                    chunk_size: int, use_kernel: bool,
+                    precision: str = "fp32",
+                    quant_min_scale: float = 1e-12) -> Hashable:
     """The session-cache key for a sweep program: every static quantity the
     builder bakes in.  ``(alpha, lam, tau)`` and the Fisher VALUES are
     traced, so hyperparameter changes and streamed I_D refreshes replay the
-    cached executable."""
-    return ("sweep", n_sets, plan.cache_fields,
+    cached executable.  ``precision`` separates the int8 program family from
+    fp32 (the session ALSO counts them under distinct compile/hit stats);
+    ``quant_min_scale`` is baked into the quantisation closures."""
+    return ("sweep", precision, float(quant_min_scale), n_sets,
+            plan.cache_fields,
             shape_signature(params), shape_signature(fisher),
             shape_signature(tuple(sets)), cps, limit, chunk_size,
             use_kernel, adapter.exclude is not None)

@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-fimd         — Fisher diagonal square-accumulate (the FIMD IP)
-dampen       — fused select/beta/multiply (the Dampening IP), f32/bf16 + int8
-gemm_fisher  — backward GEMM with Fisher epilogue fusion (GEMM->FIMD stream)
+fimd             — Fisher diagonal square-accumulate (the FIMD IP)
+dampen           — fused select/beta/multiply (the Dampening IP), f32/bf16 +
+                   int8 (per-tensor and dequant-free per-row-scale variants)
+gemm_fisher      — backward GEMM with Fisher epilogue fusion (GEMM->FIMD)
+gemm_fisher_int8 — the same stream at 2 operand bytes/MAC: int8 operands,
+                   exact int32 accumulate, per-channel f32 scale epilogue
 
 ``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
 """
-from . import dampen, fimd, gemm_fisher, ops, ref  # noqa: F401
+from . import (dampen, fimd, gemm_fisher, gemm_fisher_int8,  # noqa: F401
+               ops, ref)

@@ -48,6 +48,29 @@ def _dampen_int8_kernel(sc_ref, th_ref, if_ref, ig_ref, out_ref):
     out_ref[...] = jnp.clip(val, -127, 127).astype(jnp.int8)
 
 
+def _dampen_int8_rowscale_kernel(sc_ref, th_ref, ifq_ref, fs_ref, ig_ref,
+                                 out_ref):
+    """Dequant-free dampening against a QUANT-DOMAIN Fisher.
+
+    The int8 pipeline's GEMM-Fisher leaves I_Df as (int32 accumulator)^2
+    scaled per output channel — so the f32 forget-Fisher is ifq * fs[row],
+    where fs is the per-row f32 scale table (sa*sg)^2 from the GEMM's
+    epilogue channels.  Rescaling happens in-register while the block is
+    VMEM-resident; the weight codes themselves never leave int8:
+    theta' = round(theta * beta) on selected entries, beta <= 1 so the
+    per-channel weight scale table stays valid.
+    """
+    alpha = sc_ref[0, 0]
+    lam = sc_ref[0, 1]
+    i_f = ifq_ref[...].astype(F32) * fs_ref[...]       # [R,C] * [R,1] dequant
+    i_g = ig_ref[...].astype(F32)
+    th = th_ref[...].astype(F32)
+    sel = i_f > alpha * i_g
+    beta = jnp.minimum(lam * i_g / jnp.maximum(i_f, 1e-30), 1.0)
+    val = jnp.where(sel, jnp.round(th * beta), th)
+    out_ref[...] = jnp.clip(val, -127, 127).astype(jnp.int8)
+
+
 def _call(kernel, out_dtype, theta, i_f, i_g, alpha, lam, interpret):
     R, C = theta.shape
     if R % BLOCK_R != 0 or C % BLOCK_C != 0:
@@ -83,3 +106,43 @@ def dampen_int8(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
     """INT8 deployment path: select/beta/round in the quantised domain."""
     return _call(_dampen_int8_kernel, jnp.int8, theta_q, i_f, i_g, alpha, lam,
                  interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dampen_int8_rowscale(theta_q: jax.Array, i_fq: jax.Array,
+                         f_scale: jax.Array, i_g: jax.Array,
+                         alpha, lam, *, interpret: bool = False) -> jax.Array:
+    """INT8 path with a quant-domain forget-Fisher: ``i_fq`` [R, C] f32 plus
+    its per-row f32 scale table ``f_scale`` [R, 1], dequantised in-register
+    (see _dampen_int8_rowscale_kernel).  theta_q: [R, C] int8."""
+    R, C = theta_q.shape
+    if theta_q.dtype != jnp.int8:
+        raise ValueError(
+            f"dampen_int8_rowscale edits int8 weight codes in place, got "
+            f"theta_q dtype {theta_q.dtype}")
+    if i_fq.shape != (R, C) or i_g.shape != (R, C):
+        raise ValueError(
+            f"dampen_int8_rowscale Fisher operands must match theta_q "
+            f"{R, C}, got i_fq={i_fq.shape}, i_g={i_g.shape}")
+    if f_scale.shape != (R, 1):
+        raise ValueError(
+            f"dampen_int8_rowscale f_scale is the per-row Fisher scale "
+            f"table [R, 1]={R, 1}, got {f_scale.shape}")
+    if R % BLOCK_R != 0 or C % BLOCK_C != 0:
+        raise ValueError(
+            f"dampen kernel needs a [R, C] operand with R % {BLOCK_R} == 0 "
+            f"and C % {BLOCK_C} == 0 (the VPU tile), got {R}x{C} — route "
+            f"arbitrary shapes through repro.kernels.ops.dampen_int8_rowscale, "
+            f"which pads and reshapes")
+    scalars = jnp.array([[alpha, lam]], F32)
+    grid = (R // BLOCK_R, C // BLOCK_C)
+    spec = pl.BlockSpec((BLOCK_R, BLOCK_C), lambda r, c: (r, c))
+    return pl.pallas_call(
+        _dampen_int8_rowscale_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2), lambda r, c: (0, 0)), spec, spec,
+                  pl.BlockSpec((BLOCK_R, 1), lambda r, c: (r, 0)), spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.int8),
+        interpret=interpret,
+    )(scalars, theta_q, i_fq, f_scale, i_g)

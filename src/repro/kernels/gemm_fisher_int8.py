@@ -1,0 +1,119 @@
+"""INT8 backward-GEMM + Fisher epilogue — the quantized twin of
+gemm_fisher.py, matching the paper's INT8 GEMM-centric edge pipeline.
+
+The FiCABU processor streams int8 gradient patches through an INT8 GEMM
+engine and squares them in the FIMD IP; the whole importance estimate runs
+at 2 operand bytes per MAC instead of 8.  Here the same economy maps onto
+the MXU: int8 activations and int8 cotangents are contracted with an INT32
+accumulator (exact — no rounding until the epilogue), and only the final
+(bm x bk) tile is rescaled to f32 by the per-channel scale tables
+
+    dw[m, k]  = acc_i32[m, k] * sa[m] * sg[k]
+    fish[m, k] = dw[m, k]^2
+
+so the f32 work per tile is one outer-product multiply + one square, done
+while the tile is still VMEM-resident.  Because the int32 accumulation is
+exact, this kernel is BIT-EXACT against its integer-math oracle
+(ref.gemm_fisher_int8_ref) and matches gemm_fisher on the dequantized
+operands to f32 rounding error — the tolerance contract lives one level up
+(optim.compression.INT8_SWEEP_RTOL, DESIGN.md §12).
+
+  a_q: [N, M] int8 layer-input activations (chunk-flattened)
+  g_q: [N, K] int8 upstream output gradients
+  sa:  [M, 1] f32 per-channel activation scales
+  sg:  [1, K] f32 per-channel gradient scales
+  -> (dw [M, K] f32, fisher_sq [M, K] f32 = dw*dw)
+
+Grid (M/bm, K/bk, N/bn), N innermost; an int32 VMEM scratch tile holds the
+reduction; the scale tables enter as (BLOCK_M, 1) / (1, BLOCK_K) blocks so
+each grid step only touches its own channels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+BLOCK_M = 256   # dW rows per tile
+BLOCK_K = 256   # dW cols per tile
+BLOCK_N = 128   # reduction (batch*seq) slab; (128, 256) >= int8 min tile (32, 128)
+# VMEM: a(128x256 i8) + g(128x256 i8) + acc(256x256 i32) + 2 f32 outs ~= 0.9 MB
+
+
+def _gemm_fisher_int8_kernel(a_ref, g_ref, sa_ref, sg_ref,
+                             dw_ref, fish_ref, acc_ref):
+    n = pl.program_id(2)
+    n_steps = pl.num_programs(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], g_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),   # contract N: A^T @ G
+        preferred_element_type=I32)                   # exact int32 accumulate
+
+    @pl.when(n == n_steps - 1)
+    def _epilogue():
+        sc = sa_ref[...] * sg_ref[...]                # [bm,1]x[1,bk] -> [bm,bk]
+        dw = acc_ref[...].astype(F32) * sc            # dequantize once, in VMEM
+        dw_ref[...] = dw
+        fish_ref[...] = dw * dw                       # FIMD fused in VMEM
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemm_fisher_int8(a_q: jax.Array, g_q: jax.Array,
+                     sa: jax.Array, sg: jax.Array, *,
+                     interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    N, M = a_q.shape
+    N2, K = g_q.shape
+    if N != N2:
+        raise ValueError(
+            f"gemm_fisher_int8 contracts activations [N, M] against "
+            f"gradients [N, K] over a shared reduction dim, got N={N} vs "
+            f"N={N2}")
+    if a_q.dtype != jnp.int8 or g_q.dtype != jnp.int8:
+        raise ValueError(
+            f"gemm_fisher_int8 takes int8 operands (quantize with "
+            f"optim.compression.q8_quantize first), got a={a_q.dtype}, "
+            f"g={g_q.dtype}")
+    if sa.shape != (M, 1) or sg.shape != (1, K):
+        raise ValueError(
+            f"gemm_fisher_int8 scale tables must be column/row vectors "
+            f"sa [M, 1]={M, 1} and sg [1, K]={1, K} matching the operand "
+            f"channel dims, got sa={sa.shape}, sg={sg.shape}")
+    if N % BLOCK_N != 0 or M % BLOCK_M != 0 or K % BLOCK_K != 0:
+        raise ValueError(
+            f"gemm_fisher_int8 needs N % {BLOCK_N} == 0, M % {BLOCK_M} == 0 "
+            f"and K % {BLOCK_K} == 0 (the MXU tiling), got N={N}, M={M}, "
+            f"K={K} — pad the chunk-flattened operands to the tile "
+            f"multiples before calling")
+    grid = (M // BLOCK_M, K // BLOCK_K, N // BLOCK_N)
+    return pl.pallas_call(
+        _gemm_fisher_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, BLOCK_M), lambda m, k, n: (n, m)),
+            pl.BlockSpec((BLOCK_N, BLOCK_K), lambda m, k, n: (n, k)),
+            pl.BlockSpec((BLOCK_M, 1), lambda m, k, n: (m, 0)),
+            pl.BlockSpec((1, BLOCK_K), lambda m, k, n: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_M, BLOCK_K), lambda m, k, n: (m, k)),
+            pl.BlockSpec((BLOCK_M, BLOCK_K), lambda m, k, n: (m, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), F32),
+            jax.ShapeDtypeStruct((M, K), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((BLOCK_M, BLOCK_K), I32)],
+        interpret=interpret,
+    )(a_q, g_q, sa, sg)

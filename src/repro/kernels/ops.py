@@ -13,8 +13,16 @@ import jax.numpy as jnp
 from . import dampen as _dampen
 from . import fimd as _fimd
 from . import gemm_fisher as _gf
+from . import gemm_fisher_int8 as _gf8
 
 F32 = jnp.float32
+
+
+def _check_elementwise(name, theta, i_f, i_g):
+    if i_f.shape != theta.shape or i_g.shape != theta.shape:
+        raise ValueError(
+            f"{name} is elementwise: Fisher operands must match theta's "
+            f"shape {theta.shape}, got i_f={i_f.shape}, i_g={i_g.shape}")
 
 
 def _interpret() -> bool:
@@ -55,6 +63,7 @@ def dampen(theta: jax.Array, i_f: jax.Array, i_g: jax.Array,
            alpha, lam) -> Tuple[jax.Array, jax.Array]:
     """SSD Eq. (3)+(4) via the fused Pallas kernel. Any shape/dtype.
     Returns (theta', selected_mask) matching core.ssd.dampen_array."""
+    _check_elementwise("dampen", theta, i_f, i_g)
     shape = theta.shape
     th2, P = _to_2d(theta.reshape(-1), _dampen.BLOCK_C)
     if2, _ = _to_2d(i_f.reshape(-1).astype(F32), _dampen.BLOCK_C)
@@ -67,6 +76,11 @@ def dampen(theta: jax.Array, i_f: jax.Array, i_g: jax.Array,
 
 def dampen_int8(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
                 alpha, lam) -> jax.Array:
+    if theta_q.dtype != jnp.int8:
+        raise ValueError(
+            f"dampen_int8 edits int8 weight codes in place (use dampen for "
+            f"float weights), got theta_q dtype {theta_q.dtype}")
+    _check_elementwise("dampen_int8", theta_q, i_f, i_g)
     shape = theta_q.shape
     th2, P = _to_2d(theta_q.reshape(-1), _dampen.BLOCK_C)
     if2, _ = _to_2d(i_f.reshape(-1).astype(F32), _dampen.BLOCK_C)
@@ -75,11 +89,74 @@ def dampen_int8(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
     return out.reshape(-1)[:P].reshape(shape)
 
 
+def dampen_int8_rowscale(theta_q: jax.Array, i_fq: jax.Array,
+                         f_scale: jax.Array, i_g: jax.Array,
+                         alpha, lam) -> jax.Array:
+    """Dequant-free dampening with a quant-domain forget-Fisher: ``i_fq``
+    [R, C] plus its per-row f32 scale table ``f_scale`` [R] are dequantised
+    in-register inside the kernel.  theta_q: [R, C] int8 -> [R, C] int8."""
+    if theta_q.ndim != 2:
+        raise ValueError(
+            f"dampen_int8_rowscale takes a [R, C] per-channel weight (rows "
+            f"are output channels), got shape {theta_q.shape}")
+    if theta_q.dtype != jnp.int8:
+        raise ValueError(
+            f"dampen_int8_rowscale edits int8 weight codes in place, got "
+            f"theta_q dtype {theta_q.dtype}")
+    R, C = theta_q.shape
+    _check_elementwise("dampen_int8_rowscale", theta_q, i_fq, i_g)
+    if f_scale.shape != (R,):
+        raise ValueError(
+            f"dampen_int8_rowscale f_scale is the per-row Fisher scale "
+            f"table [R]={R,}, got {f_scale.shape}")
+    th2 = _pad_to(_pad_to(theta_q, _dampen.BLOCK_C, 1), _dampen.BLOCK_R, 0)
+    if2 = _pad_to(_pad_to(i_fq.astype(F32), _dampen.BLOCK_C, 1),
+                  _dampen.BLOCK_R, 0)
+    ig2 = _pad_to(_pad_to(i_g.astype(F32), _dampen.BLOCK_C, 1),
+                  _dampen.BLOCK_R, 0)
+    fs2 = _pad_to(f_scale.astype(F32), _dampen.BLOCK_R, 0)[:, None]
+    out = _dampen.dampen_int8_rowscale(th2, if2, fs2, ig2, alpha, lam,
+                                       interpret=_interpret())
+    return out[:R, :C]
+
+
 def gemm_fisher(a: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """dW = a^T @ g and dW^2, fused. a: [N, M], g: [N, K]."""
+    if a.ndim != 2 or g.ndim != 2 or a.shape[0] != g.shape[0]:
+        raise ValueError(
+            f"gemm_fisher contracts [N, M] against [N, K] over a shared "
+            f"reduction dim, got a={a.shape}, g={g.shape}")
     N, M = a.shape
     K = g.shape[1]
     a2 = _pad_to(_pad_to(a, _gf.BLOCK_N, 0), _gf.BLOCK_M, 1)
     g2 = _pad_to(_pad_to(g, _gf.BLOCK_N, 0), _gf.BLOCK_K, 1)
     dw, fish = _gf.gemm_fisher(a2, g2, interpret=_interpret())
+    return dw[:M, :K], fish[:M, :K]
+
+
+def gemm_fisher_int8(a_q: jax.Array, g_q: jax.Array, sa: jax.Array,
+                     sg: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """INT8 dW = a_q^T @ g_q (exact int32 accumulate) rescaled per channel
+    in the epilogue, plus dW^2.  a_q: [N, M] int8, g_q: [N, K] int8,
+    sa: [M] f32, sg: [K] f32."""
+    if a_q.ndim != 2 or g_q.ndim != 2 or a_q.shape[0] != g_q.shape[0]:
+        raise ValueError(
+            f"gemm_fisher_int8 contracts [N, M] against [N, K] over a "
+            f"shared reduction dim, got a_q={a_q.shape}, g_q={g_q.shape}")
+    if a_q.dtype != jnp.int8 or g_q.dtype != jnp.int8:
+        raise ValueError(
+            f"gemm_fisher_int8 takes int8 operands (quantize with "
+            f"optim.compression.q8_quantize first), got a_q={a_q.dtype}, "
+            f"g_q={g_q.dtype}")
+    N, M = a_q.shape
+    K = g_q.shape[1]
+    if sa.shape != (M,) or sg.shape != (K,):
+        raise ValueError(
+            f"gemm_fisher_int8 scale tables must be 1-D per-channel vectors "
+            f"sa [M]={M,} and sg [K]={K,}, got sa={sa.shape}, sg={sg.shape}")
+    a2 = _pad_to(_pad_to(a_q, _gf8.BLOCK_N, 0), _gf8.BLOCK_M, 1)
+    g2 = _pad_to(_pad_to(g_q, _gf8.BLOCK_N, 0), _gf8.BLOCK_K, 1)
+    sa2 = _pad_to(sa.astype(F32), _gf8.BLOCK_M, 0)[:, None]
+    sg2 = _pad_to(sg.astype(F32), _gf8.BLOCK_K, 0)[None, :]
+    dw, fish = _gf8.gemm_fisher_int8(a2, g2, sa2, sg2, interpret=_interpret())
     return dw[:M, :K], fish[:M, :K]

@@ -39,6 +39,29 @@ def dampen_int8_ref(theta_q: jax.Array, i_f: jax.Array, i_g: jax.Array,
     return jnp.clip(val, -127, 127).astype(jnp.int8)
 
 
+def dampen_int8_rowscale_ref(theta_q: jax.Array, i_fq: jax.Array,
+                             f_scale: jax.Array, i_g: jax.Array,
+                             alpha: float, lam: float) -> jax.Array:
+    """Oracle for the dequant-free rowscale kernel: the forget-Fisher
+    arrives in the quant domain (``i_fq`` [R, C]) with a per-row f32 scale
+    table (``f_scale`` [R]); the f32 Fisher is i_fq * f_scale[r]."""
+    if theta_q.ndim != 2:
+        raise ValueError(
+            f"dampen_int8_rowscale_ref takes a [R, C] weight, got shape "
+            f"{theta_q.shape}")
+    R, C = theta_q.shape
+    if i_fq.shape != (R, C) or i_g.shape != (R, C):
+        raise ValueError(
+            f"dampen_int8_rowscale_ref Fisher operands must match theta_q "
+            f"{R, C}, got i_fq={i_fq.shape}, i_g={i_g.shape}")
+    if f_scale.shape != (R,):
+        raise ValueError(
+            f"dampen_int8_rowscale_ref f_scale is the per-row Fisher scale "
+            f"table [R]={R,}, got {f_scale.shape}")
+    i_f = i_fq.astype(F32) * f_scale.astype(F32)[:, None]
+    return dampen_int8_ref(theta_q, i_f, i_g, alpha, lam)
+
+
 def gemm_fisher_ref(a: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Fused backward-GEMM + Fisher epilogue oracle.
 
@@ -46,5 +69,40 @@ def gemm_fisher_ref(a: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     Returns (dW [M, K] in a.dtype's f32 accumulation, dW^2 f32) — the paper's
     GEMM -> FIMD stream for one patch/chunk.
     """
+    if a.ndim != 2 or g.ndim != 2 or a.shape[0] != g.shape[0]:
+        raise ValueError(
+            f"gemm_fisher_ref contracts [N, M] against [N, K] over a shared "
+            f"reduction dim, got a={a.shape}, g={g.shape}")
     dw = jnp.einsum("nm,nk->mk", a.astype(F32), g.astype(F32))
+    return dw, dw * dw
+
+
+def gemm_fisher_int8_ref(a_q: jax.Array, g_q: jax.Array, sa: jax.Array,
+                         sg: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """INT8 GEMM-Fisher oracle: exact int32 contraction, per-channel f32
+    rescale in the epilogue.
+
+    a_q: [N, M] int8; g_q: [N, K] int8; sa: [M] f32 activation scales;
+    sg: [K] f32 gradient scales.  Returns (dW [M, K] f32, dW^2 f32).
+    The int32 accumulation is exact, so the Pallas kernel must match this
+    oracle BIT-exactly (asserted in tests), unlike the fp32 kernels which
+    carry accumulation-order tolerance.
+    """
+    if a_q.ndim != 2 or g_q.ndim != 2 or a_q.shape[0] != g_q.shape[0]:
+        raise ValueError(
+            f"gemm_fisher_int8_ref contracts [N, M] against [N, K] over a "
+            f"shared reduction dim, got a_q={a_q.shape}, g_q={g_q.shape}")
+    if a_q.dtype != jnp.int8 or g_q.dtype != jnp.int8:
+        raise ValueError(
+            f"gemm_fisher_int8_ref takes int8 operands, got a_q={a_q.dtype}, "
+            f"g_q={g_q.dtype}")
+    M, K = a_q.shape[1], g_q.shape[1]
+    if sa.shape != (M,) or sg.shape != (K,):
+        raise ValueError(
+            f"gemm_fisher_int8_ref scale tables must be 1-D per-channel "
+            f"vectors sa [M]={M,} and sg [K]={K,}, got sa={sa.shape}, "
+            f"sg={sg.shape}")
+    acc = jnp.einsum("nm,nk->mk", a_q.astype(jnp.int32), g_q.astype(jnp.int32))
+    sc = sa.astype(F32)[:, None] * sg.astype(F32)[None, :]
+    dw = acc.astype(F32) * sc
     return dw, dw * dw

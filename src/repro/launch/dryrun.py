@@ -484,7 +484,9 @@ def main() -> None:
             for sname in configs.SHAPES:
                 cells.append((aid, sname))
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise ValueError(
+                "dryrun needs either --arch AND --shape, or --all")
         cells = [(args.arch, args.shape)]
 
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]

@@ -19,10 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = math.prod(shape)
     devs = jax.devices()
-    assert len(devs) >= n, (
-        f"need {n} devices, have {len(devs)} — the dry-run entrypoint must "
-        "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
-        "importing jax")
+    if len(devs) < n:
+        raise ValueError(
+            f"need {n} devices, have {len(devs)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax")
     return jax.make_mesh(shape, axes, devices=devs[:n])
 
 

@@ -101,7 +101,8 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
 def default_serve_spec(chunk_size: int = 4,
                        cache_dir: Optional[str] = None,
                        refresh_every: int = 0,
-                       sweep_mode: str = "scanned") -> UnlearnSpec:
+                       sweep_mode: str = "scanned",
+                       precision: str = "fp32") -> UnlearnSpec:
     """The serving deployment's unlearning configuration as ONE auditable
     spec (logged verbatim into the result JSON).  ``refresh_every > 0``
     arms the streamed Fisher refresh every N drains (2 microbatches per
@@ -109,13 +110,14 @@ def default_serve_spec(chunk_size: int = 4,
     for the staleness gate).  ``sweep_mode`` defaults to the scanned
     whole-sweep megaprogram: a warm drain is ONE program launch with
     on-device halting; heterogeneous stacks fall back to the layerwise
-    driver automatically."""
+    driver automatically.  ``precision="int8"`` routes every drain through
+    the quantised program family (DESIGN.md §12)."""
     refresh = (RefreshSpec(every_drains=refresh_every, max_batches=2,
                            decay=0.5) if refresh_every > 0 else None)
     return UnlearnSpec.for_mode(
         "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
         chunk_size=chunk_size, cache_dir=cache_dir, sweep_mode=sweep_mode,
-        refresh=refresh)
+        precision=precision, refresh=refresh)
 
 
 class ForgetService:
@@ -384,6 +386,12 @@ def main(argv=None) -> dict:
                          "as ONE whole-sweep program with on-device "
                          "halting (repro.engine.sweep); 'layerwise' is "
                          "the host-driven oracle loop")
+    ap.add_argument("--precision", choices=("fp32", "int8"), default="fp32",
+                    help="numeric path for the unlearning engine: 'int8' "
+                         "drains through the quantised program family "
+                         "(int8 weight codes + per-channel scale tables, "
+                         "dequant-free dampening, quantization-aware "
+                         "halting); 'fp32' is the oracle default")
     ap.add_argument("--out", default=None,
                     help="write the result JSON to this path")
     args = ap.parse_args(argv)
@@ -394,7 +402,11 @@ def main(argv=None) -> dict:
                       if args.cache_dir else 0)
 
     spec = configs.get(args.arch)
-    assert spec.kind == "lm"
+    if spec.kind != "lm":
+        raise ValueError(
+            f"serve.py drives an LM decode loop; --arch {args.arch!r} is a "
+            f"{spec.kind!r} architecture — pick an LM entry from "
+            f"repro.configs")
     cfg = spec.smoke if args.smoke else spec.full
     key = jax.random.PRNGKey(0)
     params = LM.init_lm(key, cfg)
@@ -412,7 +424,8 @@ def main(argv=None) -> dict:
                             chunk_size=ForgetService.CHUNK,
                             cache_dir=args.cache_dir,
                             refresh_every=args.fisher_refresh,
-                            sweep_mode=args.sweep_mode))
+                            sweep_mode=args.sweep_mode,
+                            precision=args.precision))
     if args.unlearn_after >= 0:
         for i, burst in enumerate(_parse_bursts(args)):
             for d in burst:
@@ -501,6 +514,23 @@ def main(argv=None) -> dict:
                         f"drain {g['group']} ran "
                         f"{eng.get('sweep_launches')} sweep-program "
                         "launches — a coalesced drain must be exactly one")
+        # precision gate: every drain's engine must report the precision the
+        # deployment requested — an int8 deployment that silently fell back
+        # to the fp32 path reproduces the oracle numerics exactly, so only
+        # this explicit tag catches it (DESIGN.md §12)
+        want_prec = svc.spec.exec.precision
+        for g in svc.group_log:
+            got = g["engine"].get("precision")
+            if got != want_prec:
+                problems.append(
+                    f"drain {g['group']} ran the {got!r} path although the "
+                    f"deployment requested precision={want_prec!r} (silent "
+                    "fallback)")
+        if (want_prec == "int8" and svc.spec.exec.sweep_mode == "scanned"
+                and svc.unlearner.stats.get("int8_sweep_launches", 0) < 1):
+            problems.append(
+                "precision='int8' with the scanned megaprogram never "
+                "launched an int8_sweep program (int8 family unused)")
         # cold-start gate: a process start against a WARM disk cache must
         # replay every program (prefill, decode, fused steps) from disk —
         # any new cache entry is a recompile the persistence layer missed

@@ -36,7 +36,10 @@ from repro.core import adapters, fisher, metrics
 
 def build(arch_id: str, smoke: bool, seq: int, vocab_cap: Optional[int] = None):
     spec = configs.get(arch_id)
-    assert spec.kind == "lm", "train.py drives LM archs; see serve.py/encdec"
+    if spec.kind != "lm":
+        raise ValueError(
+            f"train.py drives LM archs; {arch_id!r} is kind {spec.kind!r} — "
+            "see serve.py / the encdec entry points")
     cfg = spec.smoke if smoke else spec.full
     if vocab_cap:
         cfg = cfg.with_(vocab=min(cfg.vocab, vocab_cap))

@@ -380,7 +380,10 @@ def moe_ffn(p: Dict, cfg: MoEConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array
     E, K = cfg.num_experts, cfg.top_k
     nb = cfg.dispatch_blocks
     T = B * S
-    assert T % nb == 0, f"tokens {T} not divisible by dispatch blocks {nb}"
+    if T % nb != 0:
+        raise ValueError(
+            f"MoE dispatch needs batch*seq tokens ({T}) divisible by "
+            f"dispatch_blocks ({nb})")
     Tb = T // nb
     C = moe_capacity(cfg, Tb)
 

@@ -125,7 +125,10 @@ class LMConfig:
         return R.RGLRUConfig(self.d_model, d_rnn)
 
     def moe_cfg(self) -> L.MoEConfig:
-        assert self.moe is not None
+        if self.moe is None:
+            raise ValueError(
+                f"{self.name}: moe_cfg() called but this LMConfig has no "
+                "MoE spec (moe=None)")
         return L.MoEConfig(
             d_model=self.d_model, d_ff=self.d_ff,
             num_experts=self.moe.num_experts, top_k=self.moe.top_k,
@@ -268,7 +271,10 @@ def _embed(params: Params, cfg: LMConfig, tokens: jax.Array,
            prefix: Optional[jax.Array]) -> jax.Array:
     x = params["embed"]["w"].astype(cfg.dtype)[tokens]
     if cfg.prefix_len > 0:
-        assert prefix is not None, f"{cfg.name} requires stub modality prefix"
+        if prefix is None:
+            raise ValueError(
+                f"{cfg.name} has prefix_len={cfg.prefix_len} and requires a "
+                "stub modality prefix; got prefix=None")
         x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
     return x
 

@@ -1,3 +1,6 @@
 from .adamw import (AdamState, AdamWConfig, adamw_update, cosine_lr,  # noqa: F401
                     global_norm, init_adamw, make_train_step)
-from .compression import Int8Codec, TopKCodec  # noqa: F401
+from .compression import (INT8_SWEEP_RTOL, Int8Codec, Q8_MIN_SCALE,  # noqa: F401
+                          TopKCodec, q8_dequantize, q8_dequantize_tree,
+                          q8_fakequant, q8_fakequant_tree, q8_quantize,
+                          q8_quantize_tree, q8_scales)

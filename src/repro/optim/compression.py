@@ -1,26 +1,134 @@
-"""Gradient compression for the DP all-reduce path, with error feedback.
+"""Quantisation + gradient compression.
 
-Two codecs (both standard in large-scale distributed training):
+Two concerns share this module because they share ONE calibration rule
+(symmetric max-abs int8: ``scale = max|x| / 127`` clamped to
+``Q8_MIN_SCALE``, codes clipped to ±127):
+
+1. Gradient compression for the DP all-reduce path, with error feedback:
 
   * ``Int8Codec``  — per-block symmetric int8 quantisation (block 256). The
     all-reduce then moves 1/4 of the bf16 bytes; EF accumulates the residual.
   * ``TopKCodec``  — magnitude top-k with error feedback (k as a fraction);
     only (values, indices) cross the wire.
 
-On-device semantics here are compress->decompress (the numerics the pod
-sees); the byte savings enter the roofline's collective term, reported in
-benchmarks/compression_bench.py.
+  On-device semantics here are compress->decompress (the numerics the pod
+  sees); the byte savings enter the roofline's collective term, reported in
+  benchmarks/compression_bench.py.
+
+2. Per-channel weight calibration for the INT8 unlearning path
+   (``q8_scales`` / ``q8_quantize`` / ``q8_dequantize`` and their tree
+   variants): the engine's ``precision="int8"`` program family
+   (repro.engine.sweep, DESIGN.md §12) quantises parameter trees with these
+   helpers — per-channel f32 scale tables over the leading (output-channel)
+   axis, int8 codes everywhere else.  ``INT8_SWEEP_RTOL`` is the DECLARED
+   tolerance contract of that path against the fp32 oracle, asserted in
+   tests/test_quant.py and gated in benchmarks/check_regression.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32
 Params = Any
+
+# Scale-table clamp shared by Int8Codec and the q8_* calibration helpers:
+# an all-zero channel still gets a valid (positive) scale.
+Q8_MIN_SCALE = 1e-12
+
+# The declared tolerance contract of the int8 unlearning path: for every
+# layer, the relative L2 error of the int8-swept parameters against the
+# fp32-swept oracle must satisfy  ||p8 - p32|| / ||p32|| <= INT8_SWEEP_RTOL.
+# The floor is the per-channel round-trip noise (~max|w|/254 per element);
+# the headroom covers selection-mask flips on borderline Fisher entries.
+# benchmarks/check_regression.py gates the measured error against this SAME
+# number (cross-asserted in tests/test_quant.py), and also requires it to be
+# NON-zero — a silent fp32 fallback reproduces the oracle exactly and fails.
+INT8_SWEEP_RTOL = 0.10
+
+
+# ---------------------------------------------------------------------------
+# Per-channel symmetric int8 calibration (the engine's int8 path)
+# ---------------------------------------------------------------------------
+def q8_scales(x: jax.Array, *, lead_axes: int = 1,
+              min_scale: float = Q8_MIN_SCALE) -> jax.Array:
+    """Per-channel symmetric int8 scale table for ``x``.
+
+    |x| is maxed over every axis past the first ``min(lead_axes, ndim-1)``
+    (keepdims, so the table broadcasts against ``x``), scaled by 1/127 and
+    clamped to ``min_scale``.  ``lead_axes=1``: a [D, F] weight gets per-row
+    scales [D, 1]; a 1-D bias gets ONE per-tensor scale.  ``lead_axes=2`` is
+    the stacked [L, ...] layout of the scanned sweep — per (layer, channel)
+    — which produces bit-identical scales to quantising each layer alone.
+    """
+    if not isinstance(lead_axes, int) or lead_axes < 0:
+        raise ValueError(
+            f"q8_scales lead_axes must be an int >= 0 (the number of "
+            f"leading axes the scale table keeps), got {lead_axes!r}")
+    keep = min(lead_axes, max(x.ndim - 1, 0))
+    red = tuple(range(keep, x.ndim))
+    ax = jnp.abs(x.astype(F32))
+    m = jnp.max(ax, axis=red, keepdims=True) if red else ax
+    # multiply by the f32 reciprocal rather than divide by 127: XLA
+    # strength-reduces a divide-by-constant to this multiply in SOME program
+    # contexts but not others, and a 1-ULP scale disagreement between the
+    # layerwise and scanned engines shows up as q * ULP(s) in the
+    # dequantised weights — writing the multiply ourselves keeps every
+    # compilation context on the identical grid
+    return jnp.maximum(m * jnp.float32(1.0 / 127.0), min_scale)
+
+
+def q8_quantize(x: jax.Array, *, lead_axes: int = 1,
+                min_scale: float = Q8_MIN_SCALE
+                ) -> Tuple[jax.Array, jax.Array]:
+    """(codes int8, scales f32): symmetric round-to-nearest onto the
+    per-channel grid; zero maps to zero exactly."""
+    s = q8_scales(x, lead_axes=lead_axes, min_scale=min_scale)
+    q = jnp.clip(jnp.round(x.astype(F32) / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def q8_dequantize(q: jax.Array, s: jax.Array, dtype=F32) -> jax.Array:
+    return (q.astype(F32) * s).astype(dtype)
+
+
+def q8_fakequant(x: jax.Array, *, lead_axes: int = 1,
+                 min_scale: float = Q8_MIN_SCALE) -> jax.Array:
+    """quantise->dequantise round trip in ``x.dtype`` — the weights the int8
+    deployment actually executes."""
+    q, s = q8_quantize(x, lead_axes=lead_axes, min_scale=min_scale)
+    return q8_dequantize(q, s, x.dtype)
+
+
+def q8_quantize_tree(tree: Params, *, lead_axes: int = 1,
+                     min_scale: float = Q8_MIN_SCALE
+                     ) -> Tuple[Params, Params]:
+    """Quantise every leaf; returns (codes tree, scale-table tree)."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    pairs = [q8_quantize(x, lead_axes=lead_axes, min_scale=min_scale)
+             for x in flat]
+    return (jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs]))
+
+
+def q8_dequantize_tree(q_tree: Params, s_tree: Params,
+                       like: Optional[Params] = None) -> Params:
+    """Dequantise a (codes, scales) tree pair; ``like`` (a tree of arrays or
+    ShapeDtypeStructs) restores per-leaf dtypes, else f32."""
+    if like is None:
+        return jax.tree_util.tree_map(q8_dequantize, q_tree, s_tree)
+    return jax.tree_util.tree_map(
+        lambda q, s, x: q8_dequantize(q, s, x.dtype), q_tree, s_tree, like)
+
+
+def q8_fakequant_tree(tree: Params, *, lead_axes: int = 1,
+                      min_scale: float = Q8_MIN_SCALE) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: q8_fakequant(x, lead_axes=lead_axes, min_scale=min_scale),
+        tree)
 
 
 def _ef_init(params_like: Params) -> Params:

@@ -84,6 +84,60 @@ def test_gemm_fisher_sweep(N, M, K, dtype):
                                rtol=2 * tol, atol=tol * 10)
 
 
+@pytest.mark.parametrize("R,C", [(8, 1024), (13, 500), (64, 2048), (1, 7)])
+def test_dampen_int8_rowscale_sweep(R, C):
+    thq = jnp.asarray(RNG.integers(-127, 128, size=(R, C)), jnp.int8)
+    i_fq = jnp.asarray(RNG.integers(0, 128, size=(R, C)), jnp.int8)
+    fs = jnp.asarray(np.abs(RNG.normal(size=(R,))) + 1e-6, jnp.float32)
+    i_g = jnp.asarray(np.abs(RNG.normal(size=(R, C))) + 1e-6, jnp.float32)
+    got = ops.dampen_int8_rowscale(thq, i_fq, fs, i_g, 0.5, 1.0)
+    want = ref.dampen_int8_rowscale_ref(thq, i_fq, fs, i_g, 0.5, 1.0)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dampen_int8_rowscale_rejects_bad_shapes():
+    thq = jnp.zeros((4, 8), jnp.int8)
+    i_fq = jnp.zeros((4, 8), jnp.int8)
+    i_g = jnp.ones((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="scale"):
+        ops.dampen_int8_rowscale(thq, i_fq, jnp.ones((3,)), i_g, 1.0, 1.0)
+    with pytest.raises(ValueError, match="int8"):
+        ops.dampen_int8_rowscale(thq.astype(jnp.float32), i_fq,
+                                 jnp.ones((4,)), i_g, 1.0, 1.0)
+    with pytest.raises(ValueError, match=r"\[R, C\]"):
+        ops.dampen_int8_rowscale(thq.reshape(-1), i_fq.reshape(-1),
+                                 jnp.ones((4,)), i_g.reshape(-1), 1.0, 1.0)
+
+
+@pytest.mark.parametrize("N,M,K", [(64, 128, 128), (100, 200, 96),
+                                   (32, 256, 384), (8, 64, 64)])
+def test_gemm_fisher_int8_sweep(N, M, K):
+    a_q = jnp.asarray(RNG.integers(-127, 128, size=(N, M)), jnp.int8)
+    g_q = jnp.asarray(RNG.integers(-127, 128, size=(N, K)), jnp.int8)
+    sa = jnp.asarray(np.abs(RNG.normal(size=(M,))) + 1e-3, jnp.float32)
+    sg = jnp.asarray(np.abs(RNG.normal(size=(K,))) + 1e-3, jnp.float32)
+    dw, fish = ops.gemm_fisher_int8(a_q, g_q, sa, sg)
+    dwr, fishr = ref.gemm_fisher_int8_ref(a_q, g_q, sa, sg)
+    # int32 accumulation is exact, the epilogue rescale is one f32 multiply
+    # per output — the kernel and the oracle must agree to the ULP
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+    np.testing.assert_array_equal(np.asarray(fish), np.asarray(fishr))
+
+
+def test_gemm_fisher_int8_rejects_bad_inputs():
+    a_q = jnp.zeros((16, 32), jnp.int8)
+    g_q = jnp.zeros((16, 24), jnp.int8)
+    with pytest.raises(ValueError, match="int8"):
+        ops.gemm_fisher_int8(a_q.astype(jnp.float32), g_q,
+                             jnp.ones((32,)), jnp.ones((24,)))
+    with pytest.raises(ValueError, match="scale"):
+        ops.gemm_fisher_int8(a_q, g_q, jnp.ones((31,)), jnp.ones((24,)))
+    with pytest.raises(ValueError, match="reduction"):
+        ops.gemm_fisher_int8(a_q, jnp.zeros((15, 24), jnp.int8),
+                             jnp.ones((32,)), jnp.ones((24,)))
+
+
 def test_gemm_fisher_is_square_of_dw():
     a = jnp.asarray(RNG.normal(size=(128, 256)), jnp.float32)
     g = jnp.asarray(RNG.normal(size=(128, 256)), jnp.float32)

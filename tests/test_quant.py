@@ -1,0 +1,360 @@
+"""INT8 unlearning path tests (engine precision="int8", DESIGN.md §12):
+
+  * per-channel quantise/dequantise properties (hypothesis when available):
+    round-trip error bound, symmetric ±127 code range, exact zero
+    preservation, and dampening monotonicity surviving quantisation;
+  * the stacked [L, ...] lead_axes=2 scale tables are BIT-identical to
+    quantising each layer alone (what makes the scanned int8 sweep exact);
+  * int8 scanned sweep is BIT-exact vs the int8 layerwise drive loop —
+    params, halt depth, selection counts, trace, MACs;
+  * the declared tolerance contract: int8 vs the fp32 oracle within
+    INT8_SWEEP_RTOL and NON-zero (a silent fp32 fallback is exactly 0);
+  * quantization-aware halting: with tau mid-trace, int8 halts at the SAME
+    layer as fp32, layerwise and scanned (regression pin);
+  * program-cache lifecycle: int8_sweep/quant families compile once, warm
+    repeats and hyperparameter changes replay with zero retraces;
+  * QuantSpec / ExecSpec.precision: JSON round trip, to_config lowering,
+    ValueError on contradictions;
+  * the check_regression gate bound is the SAME number as the declared
+    INT8_SWEEP_RTOL (cross-assert — neither can drift alone).
+"""
+import dataclasses
+import importlib.util
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adapters, cau, fisher, ssd
+from repro.data import synthetic as syn
+from repro.engine import TRACE_LOG, UnlearnSession
+from repro.models import lm as LM
+from repro.optim.compression import (INT8_SWEEP_RTOL, Q8_MIN_SCALE,
+                                     q8_dequantize, q8_fakequant_tree,
+                                     q8_quantize, q8_quantize_tree,
+                                     q8_scales)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:          # CI installs hypothesis; the container may not
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# calibration properties
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _weights = hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(1, 7), st.integers(1, 33)),
+        elements=st.floats(-100.0, 100.0, width=32, allow_nan=False))
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(_weights)
+    def test_roundtrip_error_bound(w):
+        """|fq(x) - x| <= s/2 per element: round-to-nearest onto a grid of
+        pitch s never moves a value more than half a pitch (values beyond
+        the clip point cannot exist — s covers max|row|)."""
+        x = jnp.asarray(w)
+        q, s = q8_quantize(x)
+        rt = q8_dequantize(q, s)
+        bound = 0.5 * np.broadcast_to(np.asarray(s), w.shape) + 1e-6
+        assert np.all(np.abs(np.asarray(rt) - w) <= bound)
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(_weights)
+    def test_symmetric_code_range(w):
+        """Codes live in the SYMMETRIC int8 range [-127, 127]: -128 never
+        occurs, so negation of the codes is always representable."""
+        q, _ = q8_quantize(jnp.asarray(w))
+        qn = np.asarray(q)
+        assert qn.min() >= -127 and qn.max() <= 127
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(_weights)
+    def test_zero_preservation(w):
+        """Exact zeros quantise to code 0 and dequantise to exactly 0.0 —
+        symmetric quantisation has no zero-point offset."""
+        w = w.copy()
+        w.reshape(-1)[:: max(1, w.size // 7)] = 0.0
+        q, s = q8_quantize(jnp.asarray(w))
+        zero = w == 0.0
+        assert np.all(np.asarray(q)[zero] == 0)
+        assert np.all(np.asarray(q8_dequantize(q, s))[zero] == 0.0)
+
+    @needs_hypothesis
+    @settings(max_examples=40, deadline=None)
+    @given(_weights, st.floats(0.1, 20.0), st.floats(0.1, 2.0))
+    def test_dampening_monotone_under_quantisation(w, alpha, lam):
+        """Quant-domain dampening never grows a weight's magnitude: beta <=
+        1 scales codes toward zero, so |dequant(new)| <= |dequant(old)|
+        everywhere — the scale table stays valid after the edit."""
+        x = jnp.asarray(w)
+        q, s = q8_quantize(x)
+        i_f = jnp.asarray(np.abs(RNG.normal(size=w.shape)) + 1e-6,
+                          jnp.float32)
+        i_g = jnp.asarray(np.abs(RNG.normal(size=w.shape)) + 1e-6,
+                          jnp.float32)
+        new_q, _ = ssd.dampen_q8_array(q, i_f, i_g, alpha, lam)
+        assert np.all(np.abs(np.asarray(new_q, np.int32))
+                      <= np.abs(np.asarray(q, np.int32)))
+        assert np.all(np.abs(np.asarray(q8_dequantize(new_q, s)))
+                      <= np.abs(np.asarray(q8_dequantize(q, s))))
+
+
+def test_scale_floor_and_allzero_channel():
+    x = jnp.zeros((3, 5), jnp.float32)
+    q, s = q8_quantize(x)
+    assert np.all(np.asarray(s) == Q8_MIN_SCALE)
+    assert np.all(np.asarray(q) == 0)
+
+
+def test_stacked_scales_bitexact_vs_per_layer():
+    """lead_axes=2 on a stacked [L, ...] tree gives the SAME bits as
+    quantising each layer alone — the invariant that lets the scanned
+    sweep's stacked scale tables reproduce the layerwise engine exactly."""
+    w = jnp.asarray(RNG.normal(size=(3, 8, 16)) *
+                    np.exp(RNG.uniform(-3, 0, size=(3, 1, 1))), jnp.float32)
+    q_st, s_st = q8_quantize(w, lead_axes=2)
+    for l in range(3):
+        q_l, s_l = q8_quantize(w[l])
+        np.testing.assert_array_equal(np.asarray(q_st[l]), np.asarray(q_l))
+        np.testing.assert_array_equal(np.asarray(s_st[l]), np.asarray(s_l))
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-exactness, tolerance contract, quantization-aware halting
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def trace_log():
+    TRACE_LOG.clear()
+    yield TRACE_LOG
+    TRACE_LOG.clear()
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_stats_equal(sa, sb):
+    for key in ("stopped_at_l", "selected_per_layer", "checkpoints_hit",
+                "forget_acc_trace", "macs", "macs_ssd", "macs_vs_ssd_pct"):
+        assert sa[key] == sb[key], (key, sa[key], sb[key])
+
+
+@pytest.fixture(scope="module")
+def lm_setting():
+    cfg_m = LM.LMConfig(name="t-quant", n_layers=4, d_model=32, n_heads=4,
+                        n_kv_heads=2, d_ff=64, vocab=64,
+                        block_pattern=("local", "attn"), window=8,
+                        tie_embeddings=True)
+    dcfg = syn.LMDataConfig(vocab=64, n_domains=4, seq_len=16,
+                            n_per_domain=8, seed=1)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg_m)
+    loss_fn = lambda p, b: LM.lm_loss(p, cfg_m, b[0], b[1], aux_weight=0.0)
+    i_d = fisher.diag_fisher(loss_fn, params, (toks[:, :-1], toks[:, 1:]),
+                             chunk_size=4)
+    adapter = adapters.lm_adapter(cfg_m, 16)
+    logits, _ = adapter.forward_collect(params, toks[:8, :-1])
+    return {"cfg": cfg_m, "toks": toks, "doms": doms, "params": params,
+            "i_d": i_d, "adapter": adapter,
+            "hard_labels": jnp.argmax(logits, -1)}
+
+
+def _cfg(precision="fp32", **kw):
+    base = dict(alpha=6.0, lam=0.5, tau=-1.0, checkpoint_every=1,
+                chunk_size=4, precision=precision)
+    base.update(kw)
+    return cau.UnlearnConfig(**base)
+
+
+def test_int8_scanned_bitexact_vs_layerwise(lm_setting):
+    """The int8 scanned megaprogram and the int8 layerwise drive loop
+    produce IDENTICAL bits: same dequantised params, same halt depth,
+    selection counts, accuracy trace and MAC accounting.  (This is what the
+    materialised-fakequant-reference and reciprocal-multiply rules buy —
+    see DESIGN.md §12.)"""
+    m = lm_setting
+    fb = m["toks"][:8]
+    cfg = _cfg("int8")
+    p_lw, s_lw = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], fb[:, :-1], fb[:, 1:], cfg)
+    p_sc, s_sc = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], fb[:, :-1], fb[:, 1:],
+        dataclasses.replace(cfg, sweep_mode="scanned"))
+    assert s_lw["engine"]["precision"] == "int8"
+    assert s_sc["engine"]["precision"] == "int8"
+    assert s_sc["engine"]["sweep_mode"] == "scanned"
+    _assert_trees_equal(p_lw, p_sc)
+    _assert_stats_equal(s_lw, s_sc)
+
+
+def test_int8_within_declared_tolerance_of_fp32(lm_setting):
+    """The tolerance CONTRACT: per-layer relative L2 of int8-vs-fp32 swept
+    params <= INT8_SWEEP_RTOL, and > 0 (bit-identical would mean the int8
+    path silently ran fp32).  Compared against the fp32 oracle's deployed
+    fake-quant state so untouched-layer round-trip noise cancels."""
+    m = lm_setting
+    fb = m["toks"][:8]
+    p32, _ = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], fb[:, :-1], fb[:, 1:], _cfg("fp32",
+                                                 sweep_mode="scanned"))
+    p8, s8 = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], fb[:, :-1], fb[:, 1:], _cfg("int8",
+                                                 sweep_mode="scanned"))
+    assert s8["engine"]["precision"] == "int8"
+    rels = []
+    for a, b in zip(jax.tree_util.tree_leaves(q8_fakequant_tree(p32)),
+                    jax.tree_util.tree_leaves(p8)):
+        d = float(jnp.linalg.norm((a - b).astype(jnp.float32).ravel()))
+        n = float(jnp.linalg.norm(a.astype(jnp.float32).ravel()))
+        rels.append(d / max(n, 1e-30))
+    assert max(rels) <= INT8_SWEEP_RTOL, rels
+    assert max(rels) > 0.0, "int8 path reproduced fp32 exactly — fallback?"
+
+
+@pytest.mark.parametrize("sweep_mode", ["layerwise", "scanned"])
+def test_int8_halt_depth_parity(lm_setting, sweep_mode):
+    """Quantization-aware halting pin: the checkpoint compares the
+    DEQUANTISED partial accumulator, so the int8 accuracy trace rides
+    within round-trip noise of the fp32 one.  The pin: a mid-sweep halt
+    depth must have a NON-EMPTY shared tau window (both traces above tau
+    before it, below at it) — quantisation noise has not reordered the
+    crossing — and a tau from that window halts both precisions there."""
+    m = lm_setting
+    fb = m["toks"][:8]
+    labels = m["hard_labels"]
+    traces = {}
+    for prec in ("fp32", "int8"):
+        _, s = UnlearnSession(m["adapter"], m["i_d"]).forget(
+            m["params"], fb[:, :-1], labels,
+            _cfg(prec, sweep_mode=sweep_mode))
+        traces[prec] = [a for _, a in s["forget_acc_trace"]]
+    a32, a8 = traces["fp32"], traces["int8"]
+    assert len(a32) == len(a8) and len(a32) >= 3
+    # widest shared window over mid-sweep halt depths: tau must sit at or
+    # above both traces at l* yet strictly below both everywhere before it
+    best = None
+    for lstar in range(2, len(a32)):
+        lo = max(a32[lstar - 1], a8[lstar - 1])
+        hi = min(min(a32[:lstar - 1]), min(a8[:lstar - 1]))
+        if best is None or hi - lo > best[0]:
+            best = (hi - lo, lstar, lo, hi)
+    width, lstar, lo, hi = best
+    assert width > 0, (
+        f"no tau halts fp32 and int8 at the same mid-sweep depth — "
+        f"quantisation reordered the halt traces: fp32={a32} int8={a8}")
+    tau = 0.5 * (lo + hi)
+    _, s32 = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], fb[:, :-1], labels,
+        _cfg("fp32", tau=tau, sweep_mode=sweep_mode))
+    _, s8 = UnlearnSession(m["adapter"], m["i_d"]).forget(
+        m["params"], fb[:, :-1], labels,
+        _cfg("int8", tau=tau, sweep_mode=sweep_mode))
+    assert s32["stopped_at_l"] == lstar
+    assert s8["stopped_at_l"] == lstar
+
+
+def test_int8_forget_many_bitexact_and_warm(lm_setting, trace_log):
+    """Coalesced int8 drain: forget_many through the scanned megaprogram is
+    bit-exact vs per-set layerwise int8 sweeps, and the SECOND drain replays
+    every program — zero retraces in the int8_sweep AND quant families."""
+    m = lm_setting
+    sets = []
+    for d in (0, 1):
+        fb = m["toks"][m["doms"] == d][:8]
+        sets.append((fb[:, :-1], fb[:, 1:]))
+    cfg = _cfg("int8", sweep_mode="scanned")
+    sess = UnlearnSession(m["adapter"], m["i_d"])
+    p_many, stats_k, gstats = sess.forget_many(m["params"], sets, cfg)
+    assert gstats["engine"]["precision"] == "int8"
+    assert len(stats_k) == len(sets)
+    p_lw, _, g_lw = UnlearnSession(m["adapter"], m["i_d"]).forget_many(
+        m["params"], sets, _cfg("int8"))
+    assert g_lw["engine"]["precision"] == "int8"
+    _assert_trees_equal(p_many, p_lw)
+
+    trace_log.clear()
+    sess.forget_many(m["params"], sets, cfg)
+    assert trace_log == [], f"warm int8 drain retraced: {trace_log}"
+    assert sess.stats["int8_sweep_compiles"] == 1
+    assert sess.stats["int8_sweep_hits"] >= 1
+    assert sess.stats["quant_compiles"] == 1
+    assert sess.stats["quant_hits"] >= 1
+
+
+def test_int8_warm_across_hyperparams(lm_setting, trace_log):
+    """alpha/lam/tau are DATA to the compiled int8 programs — changing them
+    must not retrace (the program cache keys on shapes, not values)."""
+    m = lm_setting
+    fb = m["toks"][:8]
+    sess = UnlearnSession(m["adapter"], m["i_d"])
+    sess.forget(m["params"], fb[:, :-1], fb[:, 1:],
+                _cfg("int8", sweep_mode="scanned"))
+    trace_log.clear()
+    sess.forget(m["params"], fb[:, :-1], fb[:, 1:],
+                _cfg("int8", sweep_mode="scanned", alpha=9.0, lam=0.2,
+                     tau=0.3))
+    assert trace_log == [], f"hyperparameter change retraced: {trace_log}"
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing + the cross-asserted gate bound
+# ---------------------------------------------------------------------------
+def test_quantspec_json_roundtrip():
+    from repro.api import QuantSpec, UnlearnSpec
+    spec = UnlearnSpec.for_mode("ficabu", alpha=8.0, tau=0.2,
+                                precision="int8",
+                                quant=QuantSpec(min_scale=1e-10))
+    back = UnlearnSpec.from_dict(spec.to_dict())
+    assert back == spec
+    assert back.exec.precision == "int8"
+    assert back.exec.quant.min_scale == 1e-10
+    ucfg = back.to_config()
+    assert ucfg.precision == "int8"
+    assert ucfg.quant_min_scale == 1e-10
+
+
+def test_quantspec_validation():
+    from repro.api import ExecSpec, QuantSpec
+    with pytest.raises(ValueError, match="precision"):
+        ExecSpec(precision="int4")
+    with pytest.raises(ValueError, match="int8"):
+        ExecSpec(precision="fp32", quant=QuantSpec())
+    with pytest.raises(ValueError, match="bits"):
+        QuantSpec(bits=4)
+    with pytest.raises(ValueError, match="min_scale"):
+        QuantSpec(min_scale=0.0)
+    with pytest.raises(ValueError, match="precision"):
+        cau.UnlearnConfig(precision="fp16")
+    with pytest.raises(ValueError, match="quant_min_scale"):
+        cau.UnlearnConfig(quant_min_scale=-1.0)
+
+
+def test_regression_gate_matches_declared_rtol():
+    """benchmarks/check_regression.py hardcodes the int8 tolerance bound so
+    the gate cannot be loosened by editing the library constant alone; this
+    cross-assert forces the two to move together."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "check_regression.py")
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.INT8_SWEEP_RTOL_GATE == INT8_SWEEP_RTOL

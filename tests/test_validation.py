@@ -1,0 +1,111 @@
+"""Input-validation contract: user-reachable misconfiguration raises
+ValueError with an actionable message, never a bare ``assert`` (asserts
+vanish under ``python -O`` and say nothing about how to fix the call).
+
+Covers the PR-6 sweep of the remaining bare asserts: checkpoint shape
+mismatch, sharding mode strings, MoE dispatch divisibility, LMConfig MoE /
+prefix preconditions, arch-registry duplicates, data-iterator host split,
+mesh capacity, and the launch entry-point guards.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import base as configs_base
+from repro.ckpt import checkpoint as ckpt
+from repro.data.synthetic import Batches
+from repro.dist import sharding
+from repro.launch import mesh as mesh_mod
+from repro.launch import train as train_mod
+from repro.models import layers as L
+from repro.models import lm as LM
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.ones((2, 3), jnp.float32)}
+    ckpt.save(str(tmp_path), 0, tree)
+    bad_like = {"w": jnp.ones((2, 4), jnp.float32)}
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), 0, bad_like)
+
+
+@pytest.mark.parametrize("fn", [sharding.param_pspecs,
+                                sharding.stacked_param_pspecs])
+def test_sharding_mode_rejected(fn):
+    with pytest.raises(ValueError, match="'tp' or 'fsdp'"):
+        fn({"w": jnp.ones((4, 4))}, mode="dp")
+
+
+def test_moe_dispatch_divisibility():
+    cfg = L.MoEConfig(d_model=8, d_ff=16, num_experts=2, top_k=1,
+                      capacity_factor=1.0, dispatch_blocks=3)
+    p = L.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((2, 5, 8), jnp.float32)          # 10 tokens, 3 blocks
+    with pytest.raises(ValueError, match="divisible"):
+        L.moe_ffn(p, cfg, x)
+
+
+def test_lmconfig_moe_cfg_requires_moe():
+    cfg = LM.LMConfig(name="t-val", n_layers=2, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab=32)
+    with pytest.raises(ValueError, match="moe"):
+        cfg.moe_cfg()
+
+
+def test_lm_prefix_required():
+    cfg = LM.LMConfig(name="t-prefix", n_layers=2, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab=32, prefix_len=2)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="prefix"):
+        LM.forward(params, cfg, toks)
+
+
+def test_arch_registry_duplicate_rejected():
+    spec = configs.get("gemma3-1b")
+    with pytest.raises(ValueError, match="duplicate"):
+        configs_base.register(spec)
+
+
+def test_batches_host_split_and_ragged_arrays():
+    a = np.zeros((8, 4), np.int32)
+    with pytest.raises(ValueError, match="divide"):
+        Batches((a,), batch=4, n_hosts=3)
+    with pytest.raises(ValueError, match="leading"):
+        Batches((a, np.zeros((7, 4), np.int32)), batch=4)
+
+
+def test_mesh_capacity_guard():
+    # host CPU exposes far fewer than the 256 devices the production mesh
+    # needs — the guard must explain the XLA_FLAGS remedy
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        mesh_mod.make_production_mesh()
+
+
+def test_train_build_rejects_non_lm():
+    non_lm = [aid for aid, s in configs.all_archs().items()
+              if s.kind != "lm"]
+    if not non_lm:
+        pytest.skip("no non-LM archs registered")
+    with pytest.raises(ValueError, match="train.py drives LM archs"):
+        train_mod.build(non_lm[0], smoke=True, seq=16)
+
+
+def test_serve_main_rejects_non_lm():
+    from repro.launch import serve as serve_mod
+    non_lm = [aid for aid, s in configs.all_archs().items()
+              if s.kind != "lm"]
+    if not non_lm:
+        pytest.skip("no non-LM archs registered")
+    with pytest.raises(ValueError, match="LM"):
+        serve_mod.main(["--arch", non_lm[0], "--smoke", "--requests", "1"])
+
+
+def test_dryrun_requires_arch_shape(tmp_path, monkeypatch):
+    from repro.launch import dryrun
+    monkeypatch.setattr("sys.argv", ["dryrun", "--out", str(tmp_path)])
+    with pytest.raises(ValueError, match="--arch"):
+        dryrun.main()
