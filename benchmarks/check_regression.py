@@ -67,6 +67,14 @@ ABS_GATES = {
         ("int8_halt_parity", 1, 1),
         ("int8_param_rel_err", 1e-7, INT8_SWEEP_RTOL_GATE),
     ),
+    # the fleet's shared-program-cache contract (repro.fleet): N
+    # same-family tenants compile exactly the N=1 program set (ratio
+    # pinned to 1.0 — tenant count must not multiply compiles), and a
+    # warm drain round across every tenant replays with zero compiles
+    "BENCH_serve.json": (
+        ("fleet_shared_compile_ratio", 1.0, 1.0),
+        ("fleet_warm_drain_compiles", 0, 0),
+    ),
 }
 
 

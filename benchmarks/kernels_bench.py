@@ -359,6 +359,83 @@ def serve_bench(arch: str = "gemma3-1b", reps: int = 3, n_domains: int = 3
     return out
 
 
+def fleet_bench(arch: str = "gemma3-1b", reps: int = 3, n_tenants: int = 3
+                ) -> dict:
+    """Multi-tenant fleet compile economics (repro.fleet), merged into
+    BENCH_serve.json:
+
+      * ``fleet_shared_compile_ratio`` — total engine-program compiles for
+        N same-family tenants over the N=1 run.  The shared ProgramCache
+        contract pins this to exactly 1.0: tenant count must not multiply
+        compiles (gated absolutely by check_regression.py);
+      * ``fleet_warm_drain_compiles`` — compiles across a warm drain round
+        on every tenant (must be 0: all tenants replay shared programs);
+      * per-tenant warm drain latency, N=1 vs N=3 (machine-relative
+        context for the compile counters).
+    """
+    from repro import configs
+    from repro.api import UnlearnSpec
+    from repro.data import synthetic as syn
+    from repro.fleet import Fleet
+    from repro.models import lm as LM
+
+    cfg = configs.get(arch).smoke
+    spec = UnlearnSpec.for_mode("ficabu", alpha=8.0, lam=1.0, tau=-1.0,
+                                checkpoint_every=2, chunk_size=4,
+                                sweep_mode="scanned")
+
+    def run(n: int):
+        fleet = Fleet()
+        for k in range(n):
+            dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4,
+                                    seq_len=24, n_per_domain=8, seed=k)
+            toks, doms = syn.make_lm_domains(dcfg)
+            params = LM.init_lm(jax.random.PRNGKey(k), cfg)
+            fleet.add_tenant(f"t{k}", cfg, toks, doms, 24, params=params,
+                             spec=spec)
+        for k in range(n):
+            fleet.submit(f"t{k}", 1, due_batch=1)
+        fleet.drain(1)  # cold round: the family compiles once, total
+        cold_compiles = fleet.programs.compiles
+        warm_compiles = 0
+        t0 = time.time()
+        for r in range(reps):
+            for k in range(n):
+                fleet.submit(f"t{k}", 1 + (r % 3), due_batch=2 + r)
+            before = fleet.programs.compiles
+            fleet.drain(2 + r)
+            warm_compiles += fleet.programs.compiles - before
+        t_warm = (time.time() - t0) / (reps * n)
+        return cold_compiles, warm_compiles, t_warm
+
+    n1_compiles, n1_warm, t1 = run(1)
+    nN_compiles, nN_warm, tN = run(n_tenants)
+    out = {
+        "fleet_config": (f"{arch}-smoke x {n_tenants} same-family tenants, "
+                         "single-domain drains, forget batch 8 x 24"),
+        "fleet_compiles_n1": n1_compiles,
+        "fleet_compiles_n3": nN_compiles,
+        "fleet_shared_compile_ratio": nN_compiles / n1_compiles,
+        "fleet_warm_drain_compiles": nN_warm + n1_warm,
+        "fleet_warm_drain_per_tenant_s": tN,
+        "fleet_single_warm_drain_per_tenant_s": t1,
+    }
+    _merge_bench_json(BENCH_SERVE_PATH, out)
+    print("# Fleet compile economics (shared program cache)")
+    print(f"compiles      n=1 {n1_compiles:3d}         n={n_tenants}  "
+          f"{nN_compiles:3d}         ratio "
+          f"{out['fleet_shared_compile_ratio']:.2f}x")
+    print(f"warm drain    {tN:8.4f}s/tenant  (n=1: {t1:8.4f}s)  "
+          f"compiles {out['fleet_warm_drain_compiles']}")
+    print(f"kernels_bench,fleet_drain,{tN * 1e6:.0f},"
+          f"ratio={out['fleet_shared_compile_ratio']:.2f}")
+    assert out["fleet_shared_compile_ratio"] == 1.0, \
+        "tenant count multiplied engine compiles!"
+    assert out["fleet_warm_drain_compiles"] == 0, \
+        "a warm fleet drain recompiled!"
+    return out
+
+
 def refresh_bench(arch: str = "gemma3-1b", reps: int = 5,
                   n_retain_batches: int = 4) -> dict:
     """Streamed I_D refresh vs a from-scratch global-Fisher recompute,
@@ -562,6 +639,7 @@ def main() -> dict:
     out["sweep"] = sweep_bench()
     out["quant"] = quant_bench()
     out["serve"] = serve_bench()
+    out["fleet"] = fleet_bench()
     return out
 
 

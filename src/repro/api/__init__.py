@@ -12,4 +12,4 @@ are deprecation shims over this module and remain bit-identical.
 from .facade import (ForgetRequest, Unlearner,  # noqa: F401
                      compilation_cache_entries, enable_compilation_cache)
 from .specs import (MODES, DampenSpec, ExecSpec, HaltSpec,  # noqa: F401
-                    QuantSpec, RefreshSpec, UnlearnSpec)
+                    QuantSpec, RefreshSpec, ServeSpec, UnlearnSpec)

@@ -24,8 +24,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from repro.core.cau import ModelAdapter, UnlearnConfig
-from repro.engine import (FisherStream, RefreshPolicy, UnlearnSession,
-                          shape_signature)
+from repro.engine import (FisherStream, ProgramCache, RefreshPolicy,
+                          UnlearnSession, shape_signature)
 
 from .specs import RefreshSpec, UnlearnSpec
 
@@ -96,12 +96,20 @@ class Unlearner:
     request.  A Fisher tree whose structure differs from the session's is
     rejected — refresh values, never shape (the engine's cached programs are
     specialized to the Fisher leaf shapes).
+
+    ``programs=`` injects a process-level ``repro.engine.ProgramCache`` into
+    the facade's session — the multi-tenant fleet hands every tenant the
+    same cache so same-family tenants compile each program family once.
+    ``name=`` labels this facade (the fleet's tenant name) in diagnostics
+    and error messages; it defaults to the adapter's model name.
     """
 
     def __init__(self, adapter: ModelAdapter,
                  fisher_global: Optional[Params] = None,
                  spec: Optional[UnlearnSpec] = None, *,
-                 session: Optional[UnlearnSession] = None):
+                 session: Optional[UnlearnSession] = None,
+                 programs: Optional[ProgramCache] = None,
+                 name: Optional[str] = None):
         if not isinstance(adapter, ModelAdapter):
             raise ValueError(
                 f"Unlearner needs a repro.core.ModelAdapter (see "
@@ -111,8 +119,15 @@ class Unlearner:
             raise ValueError(
                 f"spec must be an UnlearnSpec (see repro.api), "
                 f"got {type(spec).__name__}")
+        if programs is not None and not isinstance(programs, ProgramCache):
+            raise ValueError(
+                f"programs must be a repro.engine.ProgramCache (the "
+                f"process-level compiled-program store a fleet shares "
+                f"across tenants), got {type(programs).__name__}")
         self.adapter = adapter
         self.spec = spec
+        self.name: str = adapter.name if name is None else str(name)
+        self._programs = programs
         self.mesh = None
         self._fisher: Optional[Params] = None
         self._session: Optional[UnlearnSession] = None
@@ -132,12 +147,26 @@ class Unlearner:
                     f"{session.adapter.name!r}, not {adapter.name!r}; a warm "
                     "session's compiled programs are adapter-specific — "
                     "build a new Unlearner for the other model")
+            if programs is not None and session.programs is not programs:
+                raise ValueError(
+                    "session= and programs= disagree: the supplied warm "
+                    "session already holds its own program cache — adopt "
+                    "the session without programs=, or build a fresh "
+                    "Unlearner around the shared cache")
             self._session = session
             self._fisher = session.fisher_global
         if fisher_global is not None:
             self.set_fisher(fisher_global)
         if spec.exec.cache_dir is not None:
             enable_compilation_cache(spec.exec.cache_dir)
+
+    def _owner_desc(self) -> str:
+        """Who this facade's Fisher/session belong to, for error messages:
+        the tenant name when the facade is fleet-labelled, always the
+        model."""
+        if self.name != self.adapter.name:
+            return f"tenant {self.name!r} (model {self.adapter.name!r})"
+        return f"model {self.adapter.name!r}"
 
     # -- Fisher lifecycle ---------------------------------------------------
     @property
@@ -158,13 +187,18 @@ class Unlearner:
         anchor = self._fisher
         if anchor is not None \
                 and shape_signature(tree) != shape_signature(anchor):
+            # name WHO this Fisher was armed for: with N pooled tenants a
+            # bare shape dump is ambiguous — the usual cause is handing
+            # tenant A's facade a tree computed for tenant B's model
             raise ValueError(
-                "refusing to replace the session's global Fisher with a "
-                "structurally different tree (treedef/leaf shapes/dtypes "
-                "changed) — the warm session's compiled programs are "
-                "specialized to the current structure. Refresh Fisher "
-                "VALUES with the same structure, or build a new Unlearner "
-                "for the new model.")
+                f"refusing to replace the global Fisher armed for "
+                f"{self._owner_desc()} with a structurally different tree "
+                "(treedef/leaf shapes/dtypes changed) — the warm session's "
+                "compiled programs are specialized to the current "
+                "structure, and a mismatched tree usually means this is "
+                "another tenant's/model's Fisher. Refresh Fisher VALUES "
+                "with the same structure, or build a new Unlearner for "
+                "the new model.")
         if self.mesh is not None:
             tree = self.place_params(tree)  # same layout rule as params
         self._fisher = tree
@@ -370,7 +404,8 @@ class Unlearner:
             # in-place editing is strictly opt-in (ExecSpec.donate=True)
             donate = bool(self.spec.exec.donate)
             self._session = UnlearnSession(self.adapter, self._fisher,
-                                           donate=donate)
+                                           donate=donate,
+                                           programs=self._programs)
         # the scanned-sweep program lays its stacked [L, ...] trees out by
         # dist.sharding rules; hand the session the mesh + layout mode
         if self.mesh is not None:
@@ -391,7 +426,9 @@ class Unlearner:
         sess = self._session
         if sess is None and self._fisher is not None:
             sess = self._ensure_session()
-        sib = Unlearner(self.adapter, self._fisher, spec, session=sess)
+        sib = Unlearner(self.adapter, self._fisher, spec, session=sess,
+                        programs=None if sess is not None else self._programs,
+                        name=self.name)
         if self.mesh is not None:
             sib.shard(self.mesh)
         return sib

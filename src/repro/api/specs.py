@@ -299,6 +299,105 @@ class ExecSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The serving deployment's configuration — ONE frozen, auditable spec
+    consumed by both the single-tenant ``serve.py`` path and the fleet
+    (``repro.fleet``), replacing ``ForgetService``'s positional-argument
+    signature and its ``CHUNK`` class constant.
+
+    ``chunk_size``      Fisher/engine gradient chunking; forget batches are
+                        padded (never trimmed) to a multiple of it.
+    ``coalesce``        union all forget requests due at a drain point into
+                        ONE engine sweep (the serving default); False drains
+                        one request per sweep (the sequential baseline).
+    ``refresh_every``   arm the streamed global-Fisher refresh every N
+                        drains (0 = keep the one-shot I_D).
+    ``sweep_mode``      engine drive loop ("scanned" megaprogram default).
+    ``precision``       numeric path ("fp32" | "int8" program family).
+    ``cache_dir``       persistent XLA compilation cache (process-global —
+                        a fleet shares ONE dir, see ``FleetSpec``).
+    ``max_forget_samples``  per-request forget-batch cap (the serving
+                        harness slices each domain's forget split to this).
+
+    JSON round-trip via ``to_json``/``from_json``; validation raises
+    ``ValueError`` with actionable messages, never ``assert`` — the same
+    discipline as ``UnlearnSpec``.  ``to_unlearn_spec()`` lowers to the
+    deployment's engine-facing ``UnlearnSpec`` (the mapping previously
+    hardcoded in ``serve.default_serve_spec``).
+    """
+    chunk_size: int = 4
+    coalesce: bool = True
+    refresh_every: int = 0
+    sweep_mode: str = "scanned"
+    precision: str = "fp32"
+    cache_dir: Optional[str] = None
+    max_forget_samples: int = 8
+
+    def __post_init__(self):
+        _require(isinstance(self.chunk_size, int)
+                 and not isinstance(self.chunk_size, bool)
+                 and self.chunk_size >= 1,
+                 f"ServeSpec.chunk_size must be an int >= 1, "
+                 f"got {self.chunk_size!r}")
+        _require(isinstance(self.coalesce, bool),
+                 f"ServeSpec.coalesce must be a bool, got {self.coalesce!r}")
+        _require(isinstance(self.refresh_every, int)
+                 and not isinstance(self.refresh_every, bool)
+                 and self.refresh_every >= 0,
+                 f"ServeSpec.refresh_every must be an int >= 0 (0 keeps the "
+                 f"one-shot I_D), got {self.refresh_every!r}")
+        _require(self.sweep_mode in _SWEEP_MODES,
+                 f"ServeSpec.sweep_mode must be one of {_SWEEP_MODES}, "
+                 f"got {self.sweep_mode!r}")
+        _require(self.precision in _PRECISIONS,
+                 f"ServeSpec.precision must be one of {_PRECISIONS}, "
+                 f"got {self.precision!r}")
+        _require(self.cache_dir is None
+                 or (isinstance(self.cache_dir, str) and self.cache_dir),
+                 f"ServeSpec.cache_dir must be None or a non-empty path, "
+                 f"got {self.cache_dir!r}")
+        _require(isinstance(self.max_forget_samples, int)
+                 and not isinstance(self.max_forget_samples, bool)
+                 and self.max_forget_samples >= 1,
+                 f"ServeSpec.max_forget_samples must be an int >= 1, "
+                 f"got {self.max_forget_samples!r}")
+
+    def to_unlearn_spec(self) -> "UnlearnSpec":
+        """Lower to the deployment's engine-facing ``UnlearnSpec`` — the
+        exact mapping the legacy ``serve.default_serve_spec`` hardcoded
+        (alpha/tau/checkpoint cadence pinned for the serving smoke lane;
+        ``refresh_every > 0`` arms a 2-microbatch, decay-0.5 EMA refresh)."""
+        refresh = (RefreshSpec(every_drains=self.refresh_every,
+                               max_batches=2, decay=0.5)
+                   if self.refresh_every > 0 else None)
+        return UnlearnSpec.for_mode(
+            "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
+            chunk_size=self.chunk_size, cache_dir=self.cache_dir,
+            sweep_mode=self.sweep_mode, precision=self.precision,
+            refresh=refresh)
+
+    # -- JSON round trip ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Any) -> "ServeSpec":
+        return _from_dict(cls, d, "ServeSpec")
+
+    def to_json(self, **json_kw) -> str:
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServeSpec":
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"ServeSpec.from_json: not valid JSON: {e}") \
+                from e
+        return cls.from_dict(d)
+
+
+@dataclasses.dataclass(frozen=True)
 class UnlearnSpec:
     """mode + (DampenSpec, HaltSpec, ExecSpec): one auditable request config.
 

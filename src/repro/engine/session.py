@@ -31,6 +31,7 @@ from repro.optim.compression import (q8_dequantize_tree, q8_fakequant_tree,
                                      q8_quantize_tree)
 
 from .fused import _note_trace, build_fused_step, shape_signature
+from .programs import ProgramCache
 from .sweep import (build_sweep_program, effective_tau32, plan_scanned_sweep,
                     sweep_cache_key)
 
@@ -52,7 +53,8 @@ class UnlearnSession:
     """
 
     def __init__(self, adapter: ModelAdapter, fisher_global: Params,
-                 *, donate: Optional[bool] = False):
+                 *, donate: Optional[bool] = False,
+                 programs: Optional[ProgramCache] = None):
         self.adapter = adapter
         self.fisher_global = fisher_global
         self.donate = donate
@@ -60,12 +62,15 @@ class UnlearnSession:
         # [L, ...] trees (set by the facade's shard(); None = single device)
         self.mesh = None
         self.mesh_sharding: str = "tp"
-        self._fused: Dict[Hashable, Callable] = {}
-        self._partial: Dict[Hashable, Callable] = {}
-        self._refresh: Dict[Hashable, Callable] = {}
-        self._sweeps: Dict[Hashable, Callable] = {}
-        self._sweep_plans: Dict[Hashable, Any] = {}
-        self._quant: Dict[Hashable, Callable] = {}
+        # compiled-program store: private by default (pre-fleet behavior),
+        # or a shared process-level cache so same-family tenants compile
+        # each program once.  Keys are namespaced by the adapter FAMILY
+        # (name + depth) and the donation regime — sharing never crosses
+        # families, and a donating session can never hand a buffer-eating
+        # executable to a non-donating one.
+        self.programs = programs if programs is not None else ProgramCache()
+        self.programs.sessions += 1
+        self._ns: Hashable = (adapter.name, adapter.n_layers, donate)
         self.stats: Dict[str, int] = {
             "requests": 0, "group_sweeps": 0,
             "fused_compiles": 0, "fused_hits": 0,
@@ -81,6 +86,25 @@ class UnlearnSession:
         }
 
     # -- program cache ------------------------------------------------------
+    def _cached(self, family: str, key: Hashable,
+                builder: Callable[[], Callable]) -> Callable:
+        """Fetch/compile through the (possibly shared) program cache,
+        crediting this SESSION's per-family counters: a program another
+        tenant already compiled is a cache hit here — exactly the
+        accounting the cross-tenant sharing gates read."""
+        prog, compiled = self.programs.get_or_build((self._ns,) + key,
+                                                    builder)
+        self.stats[f"{family}_compiles" if compiled
+                   else f"{family}_hits"] += 1
+        return prog
+
+    @property
+    def _refresh(self) -> Dict[Hashable, Callable]:
+        """This session's live refresh-family entries (lifecycle tests
+        count them); keys are the stream-level keys, namespace stripped."""
+        return {k[1:]: v for k, v in self.programs._progs.items()
+                if k[0] == self._ns and len(k) > 1 and k[1] == "refresh"}
+
     def _layer_key(self, j: int) -> Hashable:
         lk = getattr(self.adapter, "layer_key", None)
         return ("j", j) if lk is None else lk(j)
@@ -109,10 +133,9 @@ class UnlearnSession:
                shape_signature(layer_p), shape_signature(acts_c),
                shape_signature(cot_c), with_act, cfg.use_kernel,
                self.adapter.exclude is not None)
-        prog = self._fused.get(key)
-        if prog is None:
-            adapter = self.adapter
+        adapter = self.adapter
 
+        def builder():
             def apply_fn(c, lp, a, _j=j):
                 return adapter.apply_layer(c, _j, lp, a)
 
@@ -120,18 +143,15 @@ class UnlearnSession:
             # reference=params the first set's edit target IS the snapshot
             # buffer later sets (and this call's vjp) still read — donating
             # it would delete the reference mid-group.
-            prog = build_fused_step(
+            return build_fused_step(
                 apply_fn, with_act_grad=with_act, use_kernel=cfg.use_kernel,
                 exclude=adapter.exclude,
                 donate=False if split_edit else self.donate,
                 split_edit=split_edit,
                 precision=cfg.precision,
                 tag=f"{kind}:{self._layer_key(j)}")
-            self._fused[key] = prog
-            self.stats["fused_compiles"] += 1
-        else:
-            self.stats["fused_hits"] += 1
-        return prog
+
+        return self._cached("fused", key, builder)
 
     def sweep_program(self, key: Hashable, builder: Callable[[], Callable],
                       *, family: str = "sweep") -> Callable:
@@ -142,32 +162,22 @@ class UnlearnSession:
         Balanced-Dampening profile changes and streamed I_D refreshes
         included.  ``family`` selects the compile/hit counter pair —
         "sweep" (fp32) or "int8_sweep" (the quantised program family)."""
-        prog = self._sweeps.get(key)
-        if prog is None:
-            prog = builder()
-            self._sweeps[key] = prog
-            self.stats[f"{family}_compiles"] += 1
-        else:
-            self.stats[f"{family}_hits"] += 1
-        return prog
+        return self._cached(family, key, builder)
 
     def _fakequant_program(self, tree: Params, min_scale: float) -> Callable:
         """Whole-tree per-channel fakequant as ONE cached jitted program —
         the layerwise int8 driver's entry step (the scanned program fuses
         the same op into its own trace)."""
         key = ("quant", shape_signature(tree), float(min_scale))
-        prog = self._quant.get(key)
-        if prog is None:
+
+        def builder():
             def run(t, _ms=float(min_scale)):
                 _note_trace("quant")
                 return q8_fakequant_tree(t, min_scale=_ms)
 
-            prog = jax.jit(run)
-            self._quant[key] = prog
-            self.stats["quant_compiles"] += 1
-        else:
-            self.stats["quant_hits"] += 1
-        return prog
+            return jax.jit(run)
+
+        return self._cached("quant", key, builder)
 
     def refresh_program(self, key: Hashable, builder: Callable[[], Callable]
                         ) -> Callable:
@@ -175,25 +185,18 @@ class UnlearnSession:
         the session hosts these compiled steps next to the fused/checkpoint
         families so ONE warm session owns every program a serving process
         replays, and the zero-retrace lifecycle tests cover all three."""
-        prog = self._refresh.get(key)
-        if prog is None:
-            prog = builder()
-            self._refresh[key] = prog
-            self.stats["refresh_compiles"] += 1
-        else:
-            self.stats["refresh_hits"] += 1
-        return prog
+        return self._cached("refresh", key, builder)
 
     def evict_refresh_programs(self, token) -> int:
         """Drop every refresh program keyed to ``token`` (a FisherStream's
         ``cache_token``): re-arming a facade's refresh replaces the stream,
         and the dead stream's executables must not accumulate in a
-        long-lived session."""
-        dead = [k for k in self._refresh
-                if isinstance(k, tuple) and len(k) > 1 and k[1] is token]
-        for k in dead:
-            del self._refresh[k]
-        return len(dead)
+        long-lived session/shared cache.  Scoped to THIS session's
+        namespace — a fleet tenant can never evict a sibling's family."""
+        ns = self._ns
+        return self.programs.evict_where(
+            lambda k: (k[0] == ns and len(k) > 2 and k[1] == "refresh"
+                       and k[2] is token))
 
     # -- checkpoint partial inference ---------------------------------------
     def _uniform_suffix(self, acts: List[jax.Array]) -> bool:
@@ -211,8 +214,8 @@ class UnlearnSession:
         L = adapter.n_layers
         key = ("suffix", shape_signature(params), shape_signature(act),
                shape_signature(labels))
-        prog = self._partial.get(key)
-        if prog is None:
+
+        def builder():
             def run(prm, a, lbl, j):
                 _note_trace("suffix")
                 x = a
@@ -227,20 +230,17 @@ class UnlearnSession:
                                         adapter.get_layer(prm, L - 1), x)
                 return adapter.acc(x, lbl)
 
-            prog = jax.jit(run)
-            self._partial[key] = prog
-            self.stats["partial_compiles"] += 1
-        else:
-            self.stats["partial_hits"] += 1
-        return prog
+            return jax.jit(run)
+
+        return self._cached("partial", key, builder)
 
     def _perj_program(self, j: int, params, act, labels) -> Callable:
         adapter = self.adapter
         L = adapter.n_layers
         key = ("partial", j, shape_signature(params), shape_signature(act),
                shape_signature(labels))
-        prog = self._partial.get(key)
-        if prog is None:
+
+        def builder():
             def run(prm, a, lbl, _j=j):
                 _note_trace(f"partial:{_j}")
                 x = a
@@ -249,12 +249,9 @@ class UnlearnSession:
                                             adapter.get_layer(prm, jj), x)
                 return adapter.acc(x, lbl)
 
-            prog = jax.jit(run)
-            self._partial[key] = prog
-            self.stats["partial_compiles"] += 1
-        else:
-            self.stats["partial_hits"] += 1
-        return prog
+            return jax.jit(run)
+
+        return self._cached("partial", key, builder)
 
     def partial_acc(self, j: int, params, act, labels,
                     uniform: bool) -> jax.Array:
@@ -299,11 +296,10 @@ class UnlearnSession:
         sig0 = shape_signature(forget_sets[0])
         if any(shape_signature(s) != sig0 for s in forget_sets[1:]):
             return None  # ragged group: per-set shapes must stack
-        pk = (shape_signature(params), sig0)
-        if pk not in self._sweep_plans:
-            self._sweep_plans[pk] = plan_scanned_sweep(
-                adapter, params, forget_sets[0][0])
-        plan = self._sweep_plans[pk]
+        pk = (self._ns, "plan", shape_signature(params), sig0)
+        plan = self.programs.plan_or_build(
+            pk, lambda: plan_scanned_sweep(adapter, params,
+                                           forget_sets[0][0]))
         if plan is None:
             return None
 

@@ -1,0 +1,15 @@
+"""Multi-tenant serving fleet: spec-driven tenant registry, one drain
+scheduler, cross-tenant compiled-program sharing (DESIGN.md §13).
+
+    from repro.fleet import Fleet, FleetSpec, TenantSpec
+
+    fspec = FleetSpec(tenants=(TenantSpec("a"), TenantSpec("b", seed=1)))
+    fleet = Fleet.from_spec(fspec, build_tenant)
+    fleet.submit("a", domain=1, due_batch=1)
+    fleet.drain(1)
+"""
+from .fleet import Fleet, TenantRuntime  # noqa: F401
+from .scheduler import (POLICIES, DrainGroup,  # noqa: F401
+                        DrainScheduler)
+from .specs import (SCHEDULING_POLICIES, FleetSpec,  # noqa: F401
+                    TenantSpec)

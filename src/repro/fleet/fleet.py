@@ -1,0 +1,418 @@
+"""The ``Fleet`` facade: N tenants, ONE scheduler, ONE program cache.
+
+Each tenant is a served model (config + weights + synthetic domain data)
+with its own ``Unlearner`` facade, forget queue, audit logs and tenant-
+scoped Fisher.  The fleet owns exactly one ``ProgramCache`` — injected into
+every tenant's engine session — so same-family tenants (equal architecture
+⇒ equal layer kinds + shapes ⇒ identical jaxprs) compile each engine
+program ONCE for all of them, and one ``DrainScheduler`` that multiplexes
+the forget queues across drain points (fair-share or deadline ordering,
+coalescing within a tenant).
+
+The per-tenant drain mechanics (coalescing due requests into one
+back-end-first sweep, pad-never-trim CHUNK alignment, drain-width
+equalization for the scanned megaprogram, streamed Fisher refresh, audit
+logging) live in ``TenantRuntime`` — this is the engine room that
+``repro.launch.serve.ForgetService`` historically carried; the legacy
+single-tenant service is now a thin adapter over a one-tenant fleet and
+stays bit-identical.
+
+What sharing does and does not share: compiled programs close over only
+the adapter's pure apply-closures; every piece of tenant state (params,
+Fisher, forget batches) enters as a traced operand.  Program keys are
+namespaced by ``(adapter.name, n_layers, donate)``, so distinct families
+can never collide, and sharing programs NEVER shares weights — tenant
+isolation is asserted bit-exactly by ``serve.py --fleet --check`` and
+tests/test_fleet.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.api import ForgetRequest, Unlearner, UnlearnSpec
+from repro.core import adapters
+from repro.engine import ProgramCache
+
+from .scheduler import DrainGroup, DrainScheduler
+from .specs import FleetSpec, TenantSpec
+
+
+class TenantRuntime:
+    """One tenant's engine room: weights, data, warm ``Unlearner``, logs.
+
+    ``run_due`` is the drain body: coalesce the due domains into ONE engine
+    sweep over the unioned forget sets and return the edited weights.  The
+    facade's session (and with it every compiled program, hosted in the
+    fleet's shared cache) persists across drains.
+    """
+
+    def __init__(self, name: str, cfg, tokens, domains, seq_len: int,
+                 spec: UnlearnSpec, *, programs: Optional[ProgramCache] = None,
+                 weight: float = 1.0, tag: Optional[str] = None,
+                 arch: Optional[str] = None, seed: int = 0,
+                 coalesce: bool = True, max_forget_samples: int = 8):
+        self.name = name
+        self.arch = arch
+        self.seed = seed
+        self.weight = weight
+        self.tag = tag if tag is not None else f"serve:{name}"
+        self.cfg = cfg
+        self.tokens = tokens
+        self.domains = domains
+        self.seq_len = seq_len
+        self.spec = spec
+        self.chunk = spec.exec.chunk_size
+        self.coalesce = coalesce
+        self.max_forget_samples = max_forget_samples
+        self.adapter = adapters.lm_adapter(cfg, seq_len - 1)
+        self.unlearner: Optional[Unlearner] = None
+        self._programs = programs
+        self.params = None               # installed by the fleet / adapter
+        self.log: List[Dict] = []        # one entry per domain request
+        self.group_log: List[Dict] = []  # one entry per coalesced sweep
+        self.refresh_log: List[Dict] = []  # one entry per Fisher refresh
+        self.sweeps = 0
+        self.groups = 0
+        self.stale_fisher = None   # host snapshot of the one-shot I_D
+        self.retain_batches: List = []
+
+    def _loss_fn(self, p, b):
+        from repro.models import lm as LM
+        return LM.lm_loss(p, self.cfg, b[0], b[1], aux_weight=0.0)
+
+    def _warm(self, params) -> Unlearner:
+        if self.unlearner is None:
+            self.unlearner = Unlearner(self.adapter, spec=self.spec,
+                                       programs=self._programs,
+                                       name=self.name)
+            if self.spec.refresh is not None:
+                # with refresh armed, the one-shot I_D, the refresh folds
+                # AND the --check reference recompute all use the SAME
+                # retain stream: the staleness oracle then isolates what
+                # the refresh claims to fix — I_D drifting off the EDITED
+                # weights — instead of being satisfied by mere data shift
+                # (an EMA pulled onto different data looks "closer" even
+                # if a regression folded at the stale weights)
+                from repro.core import fisher as fisher_mod
+                rest = self.tokens[32:]
+                step = max(len(rest) // 2, 1)
+                self.retain_batches = [
+                    (rb[:, :-1], rb[:, 1:])
+                    for rb in (rest[:step], rest[step:step * 2]) if len(rb)]
+                self.unlearner.set_fisher(fisher_mod.diag_fisher_streaming(
+                    self._loss_fn, params, self.retain_batches,
+                    chunk_size=self.spec.exec.chunk_size))
+                self.unlearner.enable_fisher_refresh(
+                    None, self.retain_batches, self._loss_fn)
+                # host snapshot of the pre-refresh I_D for the staleness
+                # oracle (the live tree is replaced by refreshes)
+                self.stale_fisher = jax.tree_util.tree_map(
+                    np.asarray, self.unlearner.fisher_global)
+            else:
+                sample = self.tokens[:32]
+                self.unlearner.ensure_fisher(
+                    self._loss_fn, params, (sample[:, :-1], sample[:, 1:]))
+        return self.unlearner
+
+    def maybe_refresh(self, params, batch_idx) -> bool:
+        """Streamed I_D refresh between drains (policy-scheduled)."""
+        if self.unlearner is None or self.unlearner.fisher_stream is None:
+            return False
+        t0 = time.time()
+        entry = self.unlearner.refresh_if_due(params)
+        if entry is None:
+            return False
+        entry = dict(entry, batch=batch_idx,
+                     latency_s=round(time.time() - t0, 3))
+        self.refresh_log.append(entry)
+        print(f"[{self.tag}] fisher refresh {len(self.refresh_log) - 1}: "
+              f"folded {entry['batches']} retain microbatch(es) at the "
+              f"edited weights (ema_count={entry['ema_count']}, "
+              f"compiles={entry['engine']['refresh_compiles']}, "
+              f"hits={entry['engine']['refresh_hits']})", flush=True)
+        return True
+
+    def staleness_report(self, params) -> Optional[Dict]:
+        """The --check oracle: is the refreshed I_D closer than the stale
+        one-shot snapshot to a from-scratch recompute at the CURRENT
+        (edited) weights?"""
+        from repro.core import fisher as fisher_mod
+        from repro.engine import tree_rel_err
+        if self.stale_fisher is None or not self.refresh_log:
+            return None
+        recompute = fisher_mod.diag_fisher_streaming(
+            self._loss_fn, params, self.retain_batches,
+            chunk_size=self.spec.exec.chunk_size)
+        stale = tree_rel_err(self.stale_fisher, recompute)
+        refreshed = tree_rel_err(self.unlearner.fisher_global, recompute)
+        return {"stale_rel_err": stale, "refreshed_rel_err": refreshed,
+                "improved": refreshed < stale}
+
+    @staticmethod
+    def _wrap_pad(fb, extra: int):
+        """The pad-never-trim policy: grow ``fb`` by ``extra`` wrap-repeated
+        samples (used for CHUNK alignment and drain-width equalization —
+        one idiom, one place)."""
+        if not extra:
+            return fb
+        reps = np.concatenate([fb] * (extra // len(fb) + 1))[:extra]
+        return np.concatenate([fb, reps])
+
+    def _forget_batch(self, domain: int):
+        """Forget samples for one domain, PADDED (never trimmed) to a chunk
+        multiple — trimming could silently drop a whole domain's samples
+        when fewer than chunk_size exist. Returns (batch | None, n_padded)."""
+        from repro.data import lm_split_forget_retain
+        splits = lm_split_forget_retain(self.tokens, self.domains, domain)
+        fb = splits["forget"][:self.max_forget_samples]
+        if len(fb) == 0:
+            return None, 0
+        pad = (-len(fb)) % self.chunk
+        return self._wrap_pad(fb, pad), pad
+
+    def run_due(self, params, due_domains, batch_idx):
+        """Coalesce ``due_domains`` into one sweep at ``batch_idx``;
+        returns (params, ran_any).  With ``coalesce=False`` (the sequential
+        baseline, ``ServeSpec.coalesce``) each due request drains as its
+        own single-domain sweep instead."""
+        due_domains = list(due_domains)
+        if not self.coalesce and len(due_domains) > 1:
+            ran_any = False
+            for dom in due_domains:
+                params, ran = self.run_due(params, [dom], batch_idx)
+                ran_any = ran_any or ran
+            return params, ran_any
+        group: List[Dict] = []
+        seen = set()
+        n_merged = 0
+        for dom in due_domains:
+            if dom in seen:
+                # same-domain duplicates union trivially, but every submitted
+                # deletion request must leave an audit-log trace
+                self.log.append({"domain": dom, "batch": batch_idx,
+                                 "merged_into_group": self.groups})
+                n_merged += 1
+                continue
+            fb, pad = self._forget_batch(dom)
+            if fb is None:
+                self.log.append({"domain": dom, "batch": batch_idx,
+                                 "skipped": "no forget samples"})
+                print(f"[{self.tag}] forget request for domain {dom} "
+                      "skipped: no samples in that domain", flush=True)
+                continue
+            if pad:
+                print(f"[{self.tag}] forget batch for domain {dom} padded "
+                      f"by {pad} repeated samples to a multiple of "
+                      f"{self.chunk}", flush=True)
+            seen.add(dom)
+            group.append({"domain": dom, "fb": fb, "padded": pad})
+        if not group:
+            return params, False
+        # equalize set sizes within the drain (same wrap-repeat policy as
+        # the CHUNK padding): the scanned megaprogram stacks the group's
+        # forget sets, so a small domain must not force the whole drain
+        # onto the layerwise fallback path.  The layerwise driver handles
+        # ragged groups natively — don't perturb its statistics.
+        widest = max(len(g["fb"]) for g in group)
+        if self.spec.exec.sweep_mode == "scanned":
+            for g in group:
+                extra = widest - len(g["fb"])
+                if extra:
+                    g["fb"] = self._wrap_pad(g["fb"], extra)
+                    g["padded"] += extra
+                    print(f"[{self.tag}] forget batch for domain "
+                          f"{g['domain']} padded by {extra} repeated "
+                          f"samples to the drain's widest set ({widest})",
+                          flush=True)
+
+        unl = self._warm(params)
+        t0 = time.time()
+        params, stats_k, gstats = unl.forget_group(
+            [ForgetRequest(g["fb"][:, :-1], g["fb"][:, 1:], tag=g["domain"])
+             for g in group],
+            params=params)
+        latency = round(time.time() - t0, 3)
+        self.sweeps += gstats["sweeps"]
+        self.groups += 1
+        gi = self.groups - 1
+        self.group_log.append({
+            "group": gi, "batch": batch_idx,
+            "domains": [g["domain"] for g in group],
+            "requests": len(group) + n_merged,
+            # the drain's program signature: set count + per-set batch.
+            # Compiled programs are keyed by it, so the --check recompile
+            # gate flags warm drains of a SEEN signature only — the first
+            # drain of a new group size/width legitimately compiles.
+            "sweep_sig": [len(group), widest],
+            "sweeps": gstats["sweeps"], "latency_s": latency,
+            "engine": gstats["engine"],
+        })
+        for g, st in zip(group, stats_k):
+            self.log.append({
+                "domain": g["domain"], "batch": batch_idx, "group": gi,
+                "latency_s": latency, "padded": g["padded"],
+                "stopped_at_l": st["stopped_at_l"],
+                "macs_vs_ssd_pct": st["macs_vs_ssd_pct"],
+                "engine": gstats["engine"],
+            })
+        print(f"[{self.tag}] coalesced sweep {gi}: unlearned domains "
+              f"{[g['domain'] for g in group]} in place "
+              f"(sweeps={gstats['sweeps']}, "
+              f"stop_l={[st['stopped_at_l'] for st in stats_k]}, "
+              f"compiles={gstats['engine']['compiles']}, "
+              f"hits={gstats['engine']['cache_hits']})", flush=True)
+        # streamed I_D refresh between drains: fold retain microbatches at
+        # the freshly edited weights when the RefreshSpec policy says so
+        self.maybe_refresh(params, batch_idx)
+        return params, True
+
+
+class Fleet:
+    """N tenant runtimes + ONE scheduler + ONE shared program cache."""
+
+    def __init__(self, *, scheduling: str = "fair",
+                 max_groups_per_drain: int = 0,
+                 programs: Optional[ProgramCache] = None,
+                 spec: Optional[FleetSpec] = None):
+        if programs is not None and not isinstance(programs, ProgramCache):
+            raise ValueError(
+                f"Fleet programs= must be a repro.engine.ProgramCache, "
+                f"got {type(programs).__name__}")
+        self.spec = spec
+        self.programs = programs if programs is not None else ProgramCache()
+        self.scheduler = DrainScheduler(scheduling,
+                                        max_groups=max_groups_per_drain)
+        self.tenants: Dict[str, TenantRuntime] = {}
+        self.drain_log: List[Dict] = []  # one entry per (tenant, drain)
+
+    @classmethod
+    def from_spec(cls, fspec: FleetSpec, build_tenant) -> "Fleet":
+        """Build a fleet from its spec. ``build_tenant(tspec)`` returns a
+        mapping with keys ``cfg``, ``tokens``, ``domains``, ``seq_len``,
+        ``params`` — the launcher owns model/data construction, the fleet
+        owns engines and scheduling."""
+        if not isinstance(fspec, FleetSpec):
+            raise ValueError(f"Fleet.from_spec expects a FleetSpec, "
+                             f"got {type(fspec).__name__}")
+        fleet = cls(scheduling=fspec.scheduling,
+                    max_groups_per_drain=fspec.max_groups_per_drain,
+                    spec=fspec)
+        for t in fspec.tenants:
+            built = build_tenant(t)
+            missing = {"cfg", "tokens", "domains", "seq_len", "params"} \
+                - set(built)
+            if missing:
+                raise ValueError(
+                    f"build_tenant({t.name!r}) must return cfg/tokens/"
+                    f"domains/seq_len/params; missing {sorted(missing)}")
+            fleet.add_tenant(t, built["cfg"], built["tokens"],
+                             built["domains"], built["seq_len"],
+                             params=built["params"],
+                             spec=fspec.tenant_unlearn_spec(t.name),
+                             coalesce=fspec.serve.coalesce,
+                             max_forget_samples=fspec.serve
+                             .max_forget_samples)
+        return fleet
+
+    def add_tenant(self, tspec, cfg, tokens, domains, seq_len: int, *,
+                   params=None, spec: Optional[UnlearnSpec] = None,
+                   weight: Optional[float] = None,
+                   tag: Optional[str] = None, coalesce: bool = True,
+                   max_forget_samples: int = 8) -> TenantRuntime:
+        """Register one tenant. ``tspec`` is a TenantSpec or a bare name."""
+        if isinstance(tspec, TenantSpec):
+            name, arch, seed = tspec.name, tspec.arch, tspec.seed
+            if weight is None:
+                weight = tspec.weight
+            if spec is None:
+                spec = tspec.spec
+        else:
+            name, arch, seed = str(tspec), None, 0
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} is already in this fleet")
+        if spec is None:
+            raise ValueError(
+                f"tenant {name!r} needs an UnlearnSpec — pass spec= or use "
+                "Fleet.from_spec, which derives it from the fleet's "
+                "ServeSpec")
+        rt = TenantRuntime(name, cfg, tokens, domains, seq_len, spec,
+                           programs=self.programs,
+                           weight=1.0 if weight is None else weight,
+                           tag=tag, arch=arch, seed=seed,
+                           coalesce=coalesce,
+                           max_forget_samples=max_forget_samples)
+        rt.params = params
+        self.tenants[name] = rt
+        self.scheduler.register(name, rt.weight)
+        return rt
+
+    def tenant(self, name: str) -> TenantRuntime:
+        if name not in self.tenants:
+            raise ValueError(f"no tenant {name!r} in this fleet; have "
+                             f"{sorted(self.tenants)}")
+        return self.tenants[name]
+
+    def submit(self, tenant: str, domain: int, due_batch: int) -> None:
+        self.tenant(tenant)  # actionable unknown-tenant error
+        self.scheduler.submit(tenant, int(domain), due_batch)
+
+    def drain(self, batch_idx) -> List[Dict]:
+        """Run every drain group the scheduler selects at ``batch_idx``.
+
+        Each group is one tenant's coalesced due requests → one engine
+        sweep over that tenant's weights.  Returns the new drain-log
+        entries (also appended to ``self.drain_log``)."""
+        entries: List[Dict] = []
+        for g in self.scheduler.due_groups(batch_idx):
+            rt = self.tenants[g.tenant]
+            groups_before = rt.groups
+            rt.params, ran = rt.run_due(rt.params, list(g.payloads),
+                                        batch_idx)
+            entry = {"tenant": g.tenant, "batch": batch_idx,
+                     "payloads": list(g.payloads), "ran": ran,
+                     "group": rt.group_log[-1]
+                     if ran and rt.groups > groups_before else None}
+            self.drain_log.append(entry)
+            entries.append(entry)
+        return entries
+
+    def refresh_if_due(self, batch_idx) -> List[str]:
+        """Policy-scheduled Fisher refreshes outside drain points."""
+        refreshed = []
+        for name, rt in self.tenants.items():
+            if rt.params is not None and rt.maybe_refresh(rt.params,
+                                                          batch_idx):
+                refreshed.append(name)
+        return refreshed
+
+    # -- introspection ------------------------------------------------------
+    def family_program_counts(self) -> Dict[Tuple, int]:
+        """Compiled-program count per namespace (adapter.name, n_layers,
+        donate) — the unit of cross-tenant sharing.  Every cached program
+        was compiled exactly once, so this IS the per-family compile
+        count."""
+        counts: Dict[Tuple, int] = {}
+        for k in self.programs.keys():
+            ns = k[0]
+            counts[ns] = counts.get(ns, 0) + 1
+        return counts
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "tenants": {
+                name: {"arch": rt.arch, "groups": rt.groups,
+                       "sweeps": rt.sweeps,
+                       "requests": len(rt.log),
+                       "refreshes": len(rt.refresh_log),
+                       "engine": dict(rt.unlearner.stats)
+                       if rt.unlearner is not None else {}}
+                for name, rt in self.tenants.items()},
+            "program_cache": self.programs.stats(),
+            "families": {"/".join(map(str, ns)): n
+                         for ns, n in self.family_program_counts().items()},
+            "scheduler": self.scheduler.snapshot(),
+        }

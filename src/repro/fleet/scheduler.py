@@ -1,0 +1,159 @@
+"""DrainScheduler — ONE cross-tenant multiplexer over N forget queues.
+
+Every tenant submits forget requests tagged with the serving batch index at
+which they fall due (the context-adaptive deadline from the paper's serving
+loop).  At each drain point the scheduler coalesces each tenant's due
+requests into ONE drain group (the engine's ``forget_many`` path turns a
+group into a single back-end-first sweep), then orders the groups across
+tenants and — when ``max_groups`` caps how many groups one drain point may
+run — decides who drains now and who stays queued.
+
+Two policies:
+
+``deadline``  earliest due batch first (FIFO across tenants on ties).
+              Simple, but a bursty tenant that keeps the oldest deadlines
+              monopolizes every drain point.
+``fair``      weighted fair-share via virtual time: each tenant carries
+              ``served_work / weight``; the tenant with the LEAST virtual
+              time drains first, and draining k requests advances it by
+              ``k / weight``.  Under burst load a backlogged tenant's
+              virtual time grows as it is served, so light tenants
+              interleave instead of starving — the classic start-time
+              fair-queueing argument, discretized to drain points.
+
+The scheduler is pure bookkeeping: no JAX, no model state.  The ``Fleet``
+facade owns the engines and feeds selected groups to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+POLICIES = ("fair", "deadline")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    due_batch: int
+    seq: int          # global admission order — deterministic tie-break
+    payload: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainGroup:
+    """One tenant's coalesced work for one drain point."""
+    tenant: str
+    payloads: Tuple[Any, ...]
+    due_batch: int    # earliest deadline in the group
+
+    def __len__(self) -> int:
+        return len(self.payloads)
+
+
+class DrainScheduler:
+    def __init__(self, policy: str = "fair", *, max_groups: int = 0):
+        if policy not in POLICIES:
+            raise ValueError(f"DrainScheduler policy must be one of "
+                             f"{POLICIES}, got {policy!r}")
+        if not isinstance(max_groups, int) or isinstance(max_groups, bool) \
+                or max_groups < 0:
+            raise ValueError(f"DrainScheduler max_groups must be an int >= 0"
+                             f" (0 = no cap), got {max_groups!r}")
+        self.policy = policy
+        self.max_groups = max_groups
+        self._queues: Dict[str, List[_Pending]] = {}
+        self._weights: Dict[str, float] = {}
+        self._vtime: Dict[str, float] = {}
+        self._seq = 0
+        self.deferrals = 0   # groups that were due but pushed past a drain
+
+    # -- tenant registry ----------------------------------------------------
+    def register(self, tenant: str, weight: float = 1.0) -> None:
+        if not isinstance(tenant, str) or not tenant:
+            raise ValueError(f"tenant name must be a non-empty string, "
+                             f"got {tenant!r}")
+        if tenant in self._queues:
+            raise ValueError(f"tenant {tenant!r} is already registered "
+                             f"with this scheduler")
+        if not (isinstance(weight, (int, float))
+                and not isinstance(weight, bool) and weight > 0):
+            raise ValueError(f"tenant {tenant!r} weight must be > 0, "
+                             f"got {weight!r}")
+        self._queues[tenant] = []
+        self._weights[tenant] = float(weight)
+        # a newcomer starts at the floor of live virtual times so it cannot
+        # claim an unbounded "catch-up" backlog against long-running tenants
+        self._vtime[tenant] = min(self._vtime.values(), default=0.0)
+
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._queues)
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, tenant: str, payload: Any, due_batch: int) -> None:
+        if tenant not in self._queues:
+            raise ValueError(f"unknown tenant {tenant!r}; registered: "
+                             f"{sorted(self._queues)}")
+        if not isinstance(due_batch, int) or isinstance(due_batch, bool):
+            raise ValueError(f"due_batch must be an int batch index, "
+                             f"got {due_batch!r}")
+        self._queues[tenant].append(_Pending(due_batch, self._seq, payload))
+        self._seq += 1
+
+    def pending(self, tenant: Optional[str] = None) -> int:
+        if tenant is not None:
+            return len(self._queues.get(tenant, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    def next_due(self) -> Optional[int]:
+        dues = [p.due_batch for q in self._queues.values() for p in q]
+        return min(dues) if dues else None
+
+    # -- the drain decision -------------------------------------------------
+    def due_groups(self, batch_idx: int) -> List[DrainGroup]:
+        """Pop and return the drain groups to run at ``batch_idx``.
+
+        Coalesces each tenant's due requests (due_batch <= batch_idx) into
+        one group, orders groups by the scheduling policy, and enforces the
+        ``max_groups`` budget — deferred tenants keep their requests queued
+        (their deadlines only get older, so they outrank fresh work at the
+        next drain under ``deadline``, and their untouched virtual time
+        does the same under ``fair``).
+        """
+        candidates: List[Tuple[str, List[_Pending]]] = []
+        for tenant, q in self._queues.items():
+            due = [p for p in q if p.due_batch <= batch_idx]
+            if due:
+                candidates.append((tenant, due))
+        if not candidates:
+            return []
+
+        if self.policy == "deadline":
+            candidates.sort(key=lambda c: (min(p.due_batch for p in c[1]),
+                                           min(p.seq for p in c[1])))
+        else:  # fair: least virtual time first
+            candidates.sort(key=lambda c: (self._vtime[c[0]],
+                                           min(p.due_batch for p in c[1]),
+                                           min(p.seq for p in c[1])))
+
+        if self.max_groups > 0 and len(candidates) > self.max_groups:
+            self.deferrals += len(candidates) - self.max_groups
+            candidates = candidates[:self.max_groups]
+
+        groups: List[DrainGroup] = []
+        for tenant, due in candidates:
+            taken = set(id(p) for p in due)
+            self._queues[tenant] = [p for p in self._queues[tenant]
+                                    if id(p) not in taken]
+            self._vtime[tenant] += len(due) / self._weights[tenant]
+            due.sort(key=lambda p: p.seq)
+            groups.append(DrainGroup(
+                tenant=tenant,
+                payloads=tuple(p.payload for p in due),
+                due_batch=min(p.due_batch for p in due)))
+        return groups
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"policy": self.policy, "max_groups": self.max_groups,
+                "deferrals": self.deferrals,
+                "pending": {t: len(q) for t, q in self._queues.items()},
+                "vtime": dict(self._vtime)}

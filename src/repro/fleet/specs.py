@@ -1,0 +1,242 @@
+"""Fleet specs — the declarative vocabulary of a multi-tenant deployment.
+
+A FiCABU serving process hosts N *tenants*: each a served model family +
+its own adapter weights, unlearning configuration (``UnlearnSpec``), forget
+queue, and tenant-scoped Fisher state.  ``TenantSpec`` declares one tenant,
+``FleetSpec`` the whole deployment (tenants + the shared ``ServeSpec`` +
+the drain-scheduling policy).  Both are frozen dataclasses with JSON
+round-trip (``to_json``/``from_json``) and ``ValueError`` validation with
+actionable messages — the same discipline as ``repro.api.specs`` — so a
+fleet file (``serve.py --fleet fleet.json``) is a complete, auditable
+description of what the process serves.
+
+What a tenant does NOT declare: the XLA compilation cache directory.  That
+cache is process-global (``repro.api.enable_compilation_cache`` refuses to
+repoint it), so it lives on the fleet's ``ServeSpec.cache_dir``; a tenant
+whose ``UnlearnSpec.exec.cache_dir`` disagrees is a config contradiction
+and fails fleet validation up front rather than exploding at the second
+tenant's first compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, Optional, Tuple
+
+from repro.api.specs import ServeSpec, UnlearnSpec, _require
+
+SCHEDULING_POLICIES = ("fair", "deadline")
+
+
+def _known_arch(arch: str) -> None:
+    from repro import configs
+    names = tuple(configs.all_archs())
+    _require(arch in names,
+             f"TenantSpec.arch {arch!r} is not a known architecture; "
+             f"pick one of {names} (repro.configs)")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One served tenant: identity + model family + unlearning config.
+
+    ``name``    unique tenant id within the fleet (queue/routing key, and
+                the label every diagnostic and error message carries).
+    ``arch``    model family — a ``repro.configs`` architecture key.
+                Tenants sharing an arch are SAME-FAMILY: their adapters
+                have identical layer-kind+shape signatures, so the fleet's
+                shared program cache compiles each engine program once for
+                all of them.
+    ``seed``    per-tenant adapter-weight / synthetic-data seed (distinct
+                seeds = distinct weights even within a family — sharing
+                compiled programs never shares parameters).
+    ``weight``  fair-share weight for the drain scheduler (2.0 drains twice
+                as often as 1.0 under contention).
+    ``spec``    the tenant's ``UnlearnSpec`` (None: derive from the fleet's
+                ``ServeSpec`` at build time) — per-tenant precision
+                (fp32/int8), dampening and halting all live here.
+    """
+    name: str
+    arch: str = "gemma3-1b"
+    seed: int = 0
+    weight: float = 1.0
+    spec: Optional[UnlearnSpec] = None
+
+    def __post_init__(self):
+        _require(isinstance(self.name, str) and self.name,
+                 f"TenantSpec.name must be a non-empty string, "
+                 f"got {self.name!r}")
+        _require(isinstance(self.arch, str) and self.arch,
+                 f"TenantSpec.arch must be a non-empty repro.configs key, "
+                 f"got {self.arch!r}")
+        _known_arch(self.arch)
+        _require(isinstance(self.seed, int)
+                 and not isinstance(self.seed, bool) and self.seed >= 0,
+                 f"TenantSpec.seed must be an int >= 0, got {self.seed!r}")
+        _require(isinstance(self.weight, (int, float))
+                 and not isinstance(self.weight, bool)
+                 and math.isfinite(self.weight) and self.weight > 0,
+                 f"TenantSpec.weight must be a finite number > 0 (the "
+                 f"fair-share drain weight), got {self.weight!r}")
+        if isinstance(self.spec, dict):
+            object.__setattr__(self, "spec",
+                               UnlearnSpec.from_dict(self.spec))
+        _require(self.spec is None or isinstance(self.spec, UnlearnSpec),
+                 f"TenantSpec.spec must be None (derive from the fleet's "
+                 f"ServeSpec), an UnlearnSpec, or a mapping of its fields, "
+                 f"got {type(self.spec).__name__}")
+
+    # -- JSON round trip ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"name": self.name, "arch": self.arch,
+                             "seed": self.seed, "weight": self.weight}
+        d["spec"] = None if self.spec is None else self.spec.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Any) -> "TenantSpec":
+        _require(isinstance(d, dict),
+                 f"TenantSpec.from_dict expects a mapping, "
+                 f"got {type(d).__name__}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        _require(not unknown,
+                 f"unknown TenantSpec field(s) {sorted(unknown)}; expected "
+                 f"a subset of {sorted(fields)}")
+        kw = dict(d)
+        if isinstance(kw.get("spec"), dict):
+            kw["spec"] = UnlearnSpec.from_dict(kw["spec"])
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """The whole multi-tenant deployment: tenants + serving config + the
+    drain-scheduling policy.
+
+    ``scheduling``  cross-tenant drain ordering — ``"fair"`` (weighted
+                    fair-share by served work; a bursty tenant cannot
+                    starve the others) or ``"deadline"`` (oldest due batch
+                    first, FIFO across tenants).
+    ``max_groups_per_drain``  at most this many tenant drain groups run per
+                    drain point (0 = every due tenant drains); deferred
+                    tenants stay queued — this is what makes the
+                    scheduling policy bite under burst load.
+    """
+    tenants: Tuple[TenantSpec, ...] = ()
+    serve: ServeSpec = ServeSpec()
+    scheduling: str = "fair"
+    max_groups_per_drain: int = 0
+
+    def __post_init__(self):
+        tenants = self.tenants
+        _require(isinstance(tenants, (tuple, list)) and len(tenants) >= 1,
+                 "FleetSpec.tenants must be a non-empty sequence of "
+                 "TenantSpec (a fleet with no tenants serves nothing)")
+        coerced = []
+        for i, t in enumerate(tenants):
+            if isinstance(t, dict):
+                t = TenantSpec.from_dict(t)
+            _require(isinstance(t, TenantSpec),
+                     f"FleetSpec.tenants[{i}] must be a TenantSpec (or a "
+                     f"mapping of its fields), got {type(t).__name__}")
+            coerced.append(t)
+        object.__setattr__(self, "tenants", tuple(coerced))
+        names = [t.name for t in self.tenants]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        _require(not dupes,
+                 f"FleetSpec tenant names must be unique (they key queues "
+                 f"and routing); duplicated: {dupes}")
+        if isinstance(self.serve, dict):
+            object.__setattr__(self, "serve",
+                               ServeSpec.from_dict(self.serve))
+        _require(isinstance(self.serve, ServeSpec),
+                 f"FleetSpec.serve must be a ServeSpec (or a mapping of its "
+                 f"fields), got {type(self.serve).__name__}")
+        _require(self.scheduling in SCHEDULING_POLICIES,
+                 f"FleetSpec.scheduling must be one of "
+                 f"{SCHEDULING_POLICIES}, got {self.scheduling!r}")
+        _require(isinstance(self.max_groups_per_drain, int)
+                 and not isinstance(self.max_groups_per_drain, bool)
+                 and self.max_groups_per_drain >= 0,
+                 f"FleetSpec.max_groups_per_drain must be an int >= 0 "
+                 f"(0 = drain every due tenant), "
+                 f"got {self.max_groups_per_drain!r}")
+        # the XLA compilation cache is PROCESS-global: per-tenant dirs
+        # cannot coexist in one fleet (enable_compilation_cache would raise
+        # at the second tenant's first compile — fail here, actionably)
+        for t in self.tenants:
+            if t.spec is not None and t.spec.exec.cache_dir is not None \
+                    and t.spec.exec.cache_dir != self.serve.cache_dir:
+                raise ValueError(
+                    f"tenant {t.name!r} sets exec.cache_dir="
+                    f"{t.spec.exec.cache_dir!r} but the XLA compilation "
+                    f"cache is process-global (fleet cache_dir: "
+                    f"{self.serve.cache_dir!r}) — set it once on "
+                    f"FleetSpec.serve.cache_dir and drop it from the "
+                    f"tenant spec")
+
+    def tenant(self, name: str) -> TenantSpec:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise ValueError(f"no tenant {name!r} in this fleet; declared: "
+                         f"{[t.name for t in self.tenants]}")
+
+    def tenant_unlearn_spec(self, name: str) -> UnlearnSpec:
+        """The tenant's effective ``UnlearnSpec``: its own if declared,
+        otherwise derived from the fleet's ``ServeSpec``."""
+        t = self.tenant(name)
+        return t.spec if t.spec is not None else self.serve.to_unlearn_spec()
+
+    # -- JSON round trip ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {"tenants": [t.to_dict() for t in self.tenants],
+                "serve": self.serve.to_dict(),
+                "scheduling": self.scheduling,
+                "max_groups_per_drain": self.max_groups_per_drain}
+
+    @classmethod
+    def from_dict(cls, d: Any) -> "FleetSpec":
+        _require(isinstance(d, dict),
+                 f"FleetSpec.from_dict expects a mapping, "
+                 f"got {type(d).__name__}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        _require(not unknown,
+                 f"unknown FleetSpec field(s) {sorted(unknown)}; expected "
+                 f"a subset of {sorted(fields)}")
+        kw = dict(d)
+        if "tenants" in kw:
+            _require(isinstance(kw["tenants"], (list, tuple)),
+                     f"FleetSpec.tenants must be a sequence, "
+                     f"got {type(kw['tenants']).__name__}")
+            kw["tenants"] = tuple(
+                t if isinstance(t, TenantSpec) else TenantSpec.from_dict(t)
+                for t in kw["tenants"])
+        if isinstance(kw.get("serve"), dict):
+            kw["serve"] = ServeSpec.from_dict(kw["serve"])
+        return cls(**kw)
+
+    def to_json(self, **json_kw) -> str:
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FleetSpec":
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"FleetSpec.from_json: not valid JSON: {e}") \
+                from e
+        return cls.from_dict(d)
+
+    @classmethod
+    def from_file(cls, path: str) -> "FleetSpec":
+        try:
+            with open(path) as f:
+                s = f.read()
+        except OSError as e:
+            raise ValueError(f"FleetSpec.from_file: cannot read {path!r}: "
+                             f"{e}") from e
+        return cls.from_json(s)

@@ -57,12 +57,26 @@ staleness oracle).
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --requests 8 \
         --forget-domains 1,2 --fisher-refresh 1 --check
+
+``--fleet fleet.json`` serves a MULTI-TENANT fleet (``repro.fleet``,
+DESIGN.md §13): each declared tenant gets its own weights, domain data,
+forget queue and tenant-scoped Fisher, while ONE ``DrainScheduler``
+multiplexes drains across tenants (fair-share or deadline ordering from
+the ``FleetSpec``) and ONE shared ``ProgramCache`` hosts every compiled
+engine program — same-family tenants compile each program family exactly
+once, however many of them the fleet serves.  With ``--check`` the fleet
+run additionally gates: a drain whose (family, signature) was already
+seen on ANY tenant must report zero compiles; a same-family tenant
+replayed ALONE against a fresh program cache must (a) compile exactly the
+programs the whole fleet compiled for that family and (b) end with
+bit-identical weights and Fisher (tenant isolation).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -71,10 +85,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.api import (ForgetRequest, RefreshSpec, UnlearnSpec, Unlearner,
+from repro.api import (ServeSpec, UnlearnSpec, Unlearner,
                        compilation_cache_entries, enable_compilation_cache)
-from repro.core import adapters
-from repro.data import LMDataConfig, lm_split_forget_retain, make_lm_domains
+from repro.data import LMDataConfig, make_lm_domains
+from repro.fleet import Fleet, FleetSpec, TenantSpec
 from repro.models import lm as LM
 
 
@@ -103,236 +117,424 @@ def default_serve_spec(chunk_size: int = 4,
                        refresh_every: int = 0,
                        sweep_mode: str = "scanned",
                        precision: str = "fp32") -> UnlearnSpec:
-    """The serving deployment's unlearning configuration as ONE auditable
-    spec (logged verbatim into the result JSON).  ``refresh_every > 0``
-    arms the streamed Fisher refresh every N drains (2 microbatches per
-    refresh, EMA decay 0.5 — cheap enough for the smoke lane, fresh enough
-    for the staleness gate).  ``sweep_mode`` defaults to the scanned
-    whole-sweep megaprogram: a warm drain is ONE program launch with
-    on-device halting; heterogeneous stacks fall back to the layerwise
-    driver automatically.  ``precision="int8"`` routes every drain through
-    the quantised program family (DESIGN.md §12)."""
-    refresh = (RefreshSpec(every_drains=refresh_every, max_batches=2,
-                           decay=0.5) if refresh_every > 0 else None)
-    return UnlearnSpec.for_mode(
-        "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
-        chunk_size=chunk_size, cache_dir=cache_dir, sweep_mode=sweep_mode,
-        precision=precision, refresh=refresh)
+    """Deprecated alias: build a ``ServeSpec`` and lower it.  The serving
+    deployment's configuration now lives in the frozen, JSON-round-trippable
+    ``repro.api.ServeSpec``; this shim keeps the historical helper working
+    bit-identically."""
+    return ServeSpec(chunk_size=chunk_size, cache_dir=cache_dir,
+                     refresh_every=refresh_every, sweep_mode=sweep_mode,
+                     precision=precision).to_unlearn_spec()
+
+
+def _serve_spec_from_unlearn(spec: UnlearnSpec) -> ServeSpec:
+    """Best-effort lift of a legacy engine-facing ``UnlearnSpec`` back to
+    the serving-facing ``ServeSpec`` (for the deprecation shim's audit
+    trail)."""
+    return ServeSpec(
+        chunk_size=spec.exec.chunk_size,
+        refresh_every=(spec.refresh.every_drains
+                       if spec.refresh is not None else 0),
+        sweep_mode=spec.exec.sweep_mode,
+        precision=spec.exec.precision,
+        cache_dir=spec.exec.cache_dir)
 
 
 class ForgetService:
-    """Queue of forget requests + the warm ``Unlearner`` facade.
+    """Queue of forget requests + the warm ``Unlearner`` facade — now a
+    thin single-tenant adapter over ``repro.fleet.Fleet``.
 
     ``submit`` enqueues; ``drain`` coalesces every request due at the drain
     point into ONE engine sweep over the unioned forget sets and returns the
-    edited weights. The facade's session (and with it every compiled
-    per-layer program) persists across drains."""
+    edited weights.  The drain mechanics (coalescing, pad-never-trim CHUNK
+    alignment, drain-width equalization, streamed Fisher refresh, audit
+    logs) live in ``repro.fleet.TenantRuntime``; this class routes the
+    legacy single-tenant API through a one-tenant fleet bit-identically.
 
-    CHUNK = 4  # Fisher/engine chunk size; forget batches are padded to it
+    Configure with a frozen ``repro.api.ServeSpec`` (``serve=``).  The old
+    ``spec=UnlearnSpec`` signature (positional or keyword) still works but
+    emits a ``DeprecationWarning``.
+    """
+
+    # deprecated: Fisher/engine chunk size now lives on ServeSpec.chunk_size
+    CHUNK = 4
 
     def __init__(self, cfg, tokens, domains, seq_len: int,
+                 serve: Optional[ServeSpec] = None, *,
                  spec: Optional[UnlearnSpec] = None):
+        if isinstance(serve, UnlearnSpec):
+            # legacy 5th positional arg: ForgetService(..., unlearn_spec)
+            warnings.warn(
+                "passing an UnlearnSpec to ForgetService is deprecated; "
+                "pass serve=ServeSpec(...) (repro.api.ServeSpec) instead",
+                DeprecationWarning, stacklevel=2)
+            spec, serve = serve, None
+        elif spec is not None:
+            warnings.warn(
+                "ForgetService(spec=UnlearnSpec) is deprecated; pass "
+                "serve=ServeSpec(...) (repro.api.ServeSpec) instead",
+                DeprecationWarning, stacklevel=2)
+        if serve is not None and not isinstance(serve, ServeSpec):
+            raise ValueError(
+                f"ForgetService serve= must be a repro.api.ServeSpec, "
+                f"got {type(serve).__name__}")
+        if serve is None:
+            serve = (_serve_spec_from_unlearn(spec) if spec is not None
+                     else ServeSpec(chunk_size=self.CHUNK))
+        self.serve_spec = serve
+        unlearn_spec = spec if spec is not None else serve.to_unlearn_spec()
         self.cfg = cfg
         self.tokens = tokens
         self.domains = domains
-        self.queue: Deque[Dict] = deque()
-        self.adapter = adapters.lm_adapter(cfg, seq_len - 1)
-        self.spec = spec if spec is not None else \
-            default_serve_spec(chunk_size=self.CHUNK)
-        self.unlearner: Optional[Unlearner] = None
-        self.log: List[Dict] = []        # one entry per domain request
-        self.group_log: List[Dict] = []  # one entry per coalesced sweep
-        self.refresh_log: List[Dict] = []  # one entry per Fisher refresh
-        self.sweeps = 0
-        self.groups = 0
-        self.stale_fisher = None   # host snapshot of the one-shot I_D
-        self.retain_batches: List = []
+        self._fleet = Fleet()
+        self._rt = self._fleet.add_tenant(
+            "default", cfg, tokens, domains, seq_len, spec=unlearn_spec,
+            tag="serve", coalesce=serve.coalesce,
+            max_forget_samples=serve.max_forget_samples)
+
+    # -- the legacy surface, delegated to the tenant runtime ---------------
+    @property
+    def queue(self) -> Deque[Dict]:
+        """Read-only view of the pending forget queue (legacy shape)."""
+        return deque({"domain": p.payload, "due_batch": p.due_batch}
+                     for p in self._fleet.scheduler._queues["default"])
+
+    @property
+    def adapter(self):
+        return self._rt.adapter
+
+    @property
+    def spec(self) -> UnlearnSpec:
+        return self._rt.spec
+
+    @property
+    def unlearner(self) -> Optional[Unlearner]:
+        return self._rt.unlearner
+
+    @property
+    def log(self) -> List[Dict]:
+        return self._rt.log
+
+    @property
+    def group_log(self) -> List[Dict]:
+        return self._rt.group_log
+
+    @property
+    def refresh_log(self) -> List[Dict]:
+        return self._rt.refresh_log
+
+    @property
+    def sweeps(self) -> int:
+        return self._rt.sweeps
+
+    @property
+    def groups(self) -> int:
+        return self._rt.groups
+
+    @property
+    def stale_fisher(self):
+        return self._rt.stale_fisher
+
+    @property
+    def retain_batches(self) -> List:
+        return self._rt.retain_batches
 
     def submit(self, domain: int, due_batch: int) -> None:
-        self.queue.append({"domain": domain, "due_batch": due_batch})
-
-    def _loss_fn(self, p, b):
-        return LM.lm_loss(p, self.cfg, b[0], b[1], aux_weight=0.0)
+        self._fleet.submit("default", domain, due_batch)
 
     def _warm(self, params) -> Unlearner:
-        if self.unlearner is None:
-            self.unlearner = Unlearner(self.adapter, spec=self.spec)
-            if self.spec.refresh is not None:
-                # with refresh armed, the one-shot I_D, the refresh folds
-                # AND the --check reference recompute all use the SAME
-                # retain stream: the staleness oracle then isolates what
-                # the refresh claims to fix — I_D drifting off the EDITED
-                # weights — instead of being satisfied by mere data shift
-                # (an EMA pulled onto different data looks "closer" even
-                # if a regression folded at the stale weights)
-                from repro.core import fisher as fisher_mod
-                rest = self.tokens[32:]
-                step = max(len(rest) // 2, 1)
-                self.retain_batches = [
-                    (rb[:, :-1], rb[:, 1:])
-                    for rb in (rest[:step], rest[step:step * 2]) if len(rb)]
-                self.unlearner.set_fisher(fisher_mod.diag_fisher_streaming(
-                    self._loss_fn, params, self.retain_batches,
-                    chunk_size=self.spec.exec.chunk_size))
-                self.unlearner.enable_fisher_refresh(
-                    None, self.retain_batches, self._loss_fn)
-                # host snapshot of the pre-refresh I_D for the staleness
-                # oracle (the live tree is replaced by refreshes)
-                self.stale_fisher = jax.tree_util.tree_map(
-                    np.asarray, self.unlearner.fisher_global)
-            else:
-                sample = self.tokens[:32]
-                self.unlearner.ensure_fisher(
-                    self._loss_fn, params, (sample[:, :-1], sample[:, 1:]))
-        return self.unlearner
+        return self._rt._warm(params)
 
     def maybe_refresh(self, params, batch_idx: int) -> bool:
         """Streamed I_D refresh between drains (policy-scheduled)."""
-        if self.unlearner is None or self.unlearner.fisher_stream is None:
-            return False
-        t0 = time.time()
-        entry = self.unlearner.refresh_if_due(params)
-        if entry is None:
-            return False
-        entry = dict(entry, batch=batch_idx,
-                     latency_s=round(time.time() - t0, 3))
-        self.refresh_log.append(entry)
-        print(f"[serve] fisher refresh {len(self.refresh_log) - 1}: folded "
-              f"{entry['batches']} retain microbatch(es) at the edited "
-              f"weights (ema_count={entry['ema_count']}, "
-              f"compiles={entry['engine']['refresh_compiles']}, "
-              f"hits={entry['engine']['refresh_hits']})", flush=True)
-        return True
+        return self._rt.maybe_refresh(params, batch_idx)
 
     def staleness_report(self, params) -> Optional[Dict]:
         """The --check oracle: is the refreshed I_D closer than the stale
         one-shot snapshot to a from-scratch recompute at the CURRENT
         (edited) weights?"""
-        from repro.core import fisher as fisher_mod
-        from repro.engine import tree_rel_err
-        if self.stale_fisher is None or not self.refresh_log:
-            return None
-        recompute = fisher_mod.diag_fisher_streaming(
-            self._loss_fn, params, self.retain_batches,
-            chunk_size=self.spec.exec.chunk_size)
-        stale = tree_rel_err(self.stale_fisher, recompute)
-        refreshed = tree_rel_err(self.unlearner.fisher_global, recompute)
-        return {"stale_rel_err": stale, "refreshed_rel_err": refreshed,
-                "improved": refreshed < stale}
+        return self._rt.staleness_report(params)
 
-    @staticmethod
-    def _wrap_pad(fb, extra: int):
-        """The pad-never-trim policy: grow ``fb`` by ``extra`` wrap-repeated
-        samples (used for CHUNK alignment and drain-width equalization —
-        one idiom, one place)."""
-        if not extra:
-            return fb
-        reps = np.concatenate([fb] * (extra // len(fb) + 1))[:extra]
-        return np.concatenate([fb, reps])
-
-    def _forget_batch(self, domain: int):
-        """Forget samples for one domain, PADDED (never trimmed) to a CHUNK
-        multiple — trimming could silently drop a whole domain's samples
-        when fewer than CHUNK exist. Returns (batch | None, n_padded)."""
-        splits = lm_split_forget_retain(self.tokens, self.domains, domain)
-        fb = splits["forget"][:8]
-        if len(fb) == 0:
-            return None, 0
-        pad = (-len(fb)) % self.CHUNK
-        return self._wrap_pad(fb, pad), pad
-
-    def drain(self, params, batch_idx: int):
+    def drain(self, params, batch_idx):
         """Coalesce all requests due at ``batch_idx`` into one sweep;
         returns (params, ran_any)."""
-        due: List[Dict] = []
-        while self.queue and self.queue[0]["due_batch"] <= batch_idx:
-            due.append(self.queue.popleft())
-        if not due:
-            return params, False
+        self._rt.params = params
+        entries = self._fleet.drain(batch_idx)
+        return self._rt.params, any(e["ran"] for e in entries)
 
-        group: List[Dict] = []
-        seen = set()
-        n_merged = 0
-        for req in due:
-            dom = req["domain"]
-            if dom in seen:
-                # same-domain duplicates union trivially, but every submitted
-                # deletion request must leave an audit-log trace
-                self.log.append({"domain": dom, "batch": batch_idx,
-                                 "merged_into_group": self.groups})
-                n_merged += 1
-                continue
-            fb, pad = self._forget_batch(dom)
-            if fb is None:
-                self.log.append({"domain": dom, "batch": batch_idx,
-                                 "skipped": "no forget samples"})
-                print(f"[serve] forget request for domain {dom} skipped: "
-                      "no samples in that domain", flush=True)
-                continue
-            if pad:
-                print(f"[serve] forget batch for domain {dom} padded by "
-                      f"{pad} repeated samples to a multiple of "
-                      f"{self.CHUNK}", flush=True)
-            seen.add(dom)
-            group.append({"domain": dom, "fb": fb, "padded": pad})
-        if not group:
-            return params, False
-        # equalize set sizes within the drain (same wrap-repeat policy as
-        # the CHUNK padding): the scanned megaprogram stacks the group's
-        # forget sets, so a small domain must not force the whole drain
-        # onto the layerwise fallback path.  The layerwise driver handles
-        # ragged groups natively — don't perturb its statistics.
-        widest = max(len(g["fb"]) for g in group)
-        if self.spec.exec.sweep_mode == "scanned":
-            for g in group:
-                extra = widest - len(g["fb"])
-                if extra:
-                    g["fb"] = self._wrap_pad(g["fb"], extra)
-                    g["padded"] += extra
-                    print(f"[serve] forget batch for domain {g['domain']} "
-                          f"padded by {extra} repeated samples to the "
-                          f"drain's widest set ({widest})", flush=True)
 
-        unl = self._warm(params)
-        t0 = time.time()
-        params, stats_k, gstats = unl.forget_group(
-            [ForgetRequest(g["fb"][:, :-1], g["fb"][:, 1:], tag=g["domain"])
-             for g in group],
-            params=params)
-        latency = round(time.time() - t0, 3)
-        self.sweeps += gstats["sweeps"]
-        self.groups += 1
-        gi = self.groups - 1
-        self.group_log.append({
-            "group": gi, "batch": batch_idx,
-            "domains": [g["domain"] for g in group],
-            "requests": len(group) + n_merged,
-            # the drain's program signature: set count + per-set batch.
-            # Compiled programs are keyed by it, so the --check recompile
-            # gate flags warm drains of a SEEN signature only — the first
-            # drain of a new group size/width legitimately compiles.
-            "sweep_sig": [len(group), widest],
-            "sweeps": gstats["sweeps"], "latency_s": latency,
-            "engine": gstats["engine"],
-        })
-        for g, st in zip(group, stats_k):
-            self.log.append({
-                "domain": g["domain"], "batch": batch_idx, "group": gi,
-                "latency_s": latency, "padded": g["padded"],
-                "stopped_at_l": st["stopped_at_l"],
-                "macs_vs_ssd_pct": st["macs_vs_ssd_pct"],
-                "engine": gstats["engine"],
-            })
-        print(f"[serve] coalesced sweep {gi}: unlearned domains "
-              f"{[g['domain'] for g in group]} in place "
-              f"(sweeps={gstats['sweeps']}, "
-              f"stop_l={[st['stopped_at_l'] for st in stats_k]}, "
-              f"compiles={gstats['engine']['compiles']}, "
-              f"hits={gstats['engine']['cache_hits']})", flush=True)
-        # streamed I_D refresh between drains: fold retain microbatches at
-        # the freshly edited weights when the RefreshSpec policy says so
-        self.maybe_refresh(params, batch_idx)
-        return params, True
+def _build_lm_tenant(tspec: TenantSpec, args) -> Dict:
+    """Model + synthetic domain data for one tenant, deterministic in the
+    tenant's seed (the --check isolation replay rebuilds from this)."""
+    arch = configs.get(tspec.arch)
+    if arch.kind != "lm":
+        raise ValueError(
+            f"serve.py --fleet drives LM decode loops; tenant "
+            f"{tspec.name!r} declares arch {tspec.arch!r}, a "
+            f"{arch.kind!r} architecture — pick LM entries from "
+            f"repro.configs")
+    cfg = arch.smoke if args.smoke else arch.full
+    params = LM.init_lm(jax.random.PRNGKey(tspec.seed), cfg)
+    dcfg = LMDataConfig(vocab=cfg.vocab, n_domains=4,
+                        seq_len=args.prompt_len + args.gen_len,
+                        n_per_domain=16, seed=tspec.seed)
+    tokens, domains = make_lm_domains(dcfg)
+    return {"cfg": cfg, "tokens": tokens, "domains": domains,
+            "seq_len": dcfg.seq_len, "params": params}
+
+
+def _trees_bitwise_equal(a, b) -> bool:
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.dtype != y.dtype or x.shape != y.shape \
+                or not np.array_equal(x, y):
+            return False
+    return True
+
+
+def _family_program_count(fleet: Fleet, adapter_name: str) -> int:
+    """Compiled-program count attributable to one adapter family in the
+    fleet's shared cache (every cached program compiled exactly once)."""
+    return sum(n for ns, n in fleet.family_program_counts().items()
+               if ns[0] == adapter_name)
+
+
+def _solo_replay(fleet: Fleet, fspec: FleetSpec, name: str, args):
+    """Replay ONE tenant's drains alone against a fresh program cache.
+
+    Rebuilds the tenant's weights/data from its spec (deterministic in the
+    seed) and re-runs exactly the drain groups the fleet ran for it, in
+    order.  Generation is skipped — it never mutates params — so the solo
+    endpoint must be bit-identical to the tenant's in-fleet state, and the
+    fresh cache's compile count for the family is the N=1 baseline the
+    shared cache is gated against."""
+    tspec = fspec.tenant(name)
+    built = _build_lm_tenant(tspec, args)
+    solo = Fleet(scheduling=fspec.scheduling,
+                 max_groups_per_drain=fspec.max_groups_per_drain)
+    rt = solo.add_tenant(tspec, built["cfg"], built["tokens"],
+                         built["domains"], built["seq_len"],
+                         params=built["params"],
+                         spec=fspec.tenant_unlearn_spec(name),
+                         coalesce=fspec.serve.coalesce,
+                         max_forget_samples=fspec.serve.max_forget_samples)
+    for e in fleet.drain_log:
+        if e["tenant"] == name:
+            rt.params, _ = rt.run_due(rt.params, e["payloads"], e["batch"])
+    return solo, rt
+
+
+def _shared_family_tenant(fleet: Fleet, fspec: FleetSpec) -> Optional[str]:
+    """A tenant that BENEFITED from cross-tenant sharing: drained at least
+    once, and some other tenant has the same arch + identical effective
+    UnlearnSpec (so their program families coincide exactly)."""
+    by_family: Dict = {}
+    for name, rt in fleet.tenants.items():
+        key = (rt.arch, json.dumps(fspec.tenant_unlearn_spec(name)
+                                   .to_dict(), sort_keys=True))
+        by_family.setdefault(key, []).append(name)
+    for names in by_family.values():
+        drained = [n for n in names if fleet.tenants[n].groups > 0]
+        if len(names) >= 2 and drained:
+            return drained[-1]  # the latest-drained: warmed by its siblings
+    return None
+
+
+def _main_fleet(args) -> dict:
+    fspec = FleetSpec.from_file(args.fleet)
+    cache_dir = fspec.serve.cache_dir or args.cache_dir
+    cache_entries0 = enable_compilation_cache(cache_dir) if cache_dir else 0
+
+    fleet = Fleet.from_spec(fspec, lambda t: _build_lm_tenant(t, args))
+
+    # decode programs are shared per family too: one decode_jit per arch
+    decode_jits: Dict[str, object] = {}
+    for rt in fleet.tenants.values():
+        if rt.arch not in decode_jits:
+            cfg = rt.cfg
+            decode_jits[rt.arch] = jax.jit(
+                lambda p, c, t, pos, _cfg=cfg:
+                LM.decode_step(p, _cfg, t, c, pos))
+
+    # the burst schedule applies to EVERY tenant — simultaneous deadlines
+    # are exactly the contention the scheduler policy has to arbitrate
+    if args.unlearn_after >= 0:
+        for i, burst in enumerate(_parse_bursts(args)):
+            for name in fleet.tenants:
+                for d in burst:
+                    fleet.submit(name, d, due_batch=args.unlearn_after + i)
+
+    served: Dict[str, List[dict]] = {name: [] for name in fleet.tenants}
+    tenant_batches = {
+        name: [rt.tokens[i:i + args.requests, :args.prompt_len]
+               for i in range(0, len(rt.tokens) - args.requests,
+                              args.requests)][:3]
+        for name, rt in fleet.tenants.items()}
+    n_batches = min(len(b) for b in tenant_batches.values())
+    for bi in range(n_batches):
+        for name, rt in fleet.tenants.items():
+            t0 = time.time()
+            gen = generate(rt.params, rt.cfg,
+                           jnp.asarray(tenant_batches[name][bi]),
+                           args.gen_len, decode_jits[rt.arch],
+                           prefill_block=args.prefill_block)
+            served[name].append({"batch": bi,
+                                 "latency_s": round(time.time() - t0, 3),
+                                 "tokens": int(gen.size)})
+        fleet.drain(bi + 1)
+    # flush requests still queued past the last served batch — a forget
+    # request must never be silently dropped at shutdown (the per-drain
+    # group budget may need several flush rounds)
+    while fleet.scheduler.pending():
+        fleet.drain(float("inf"))
+
+    cache_info = None
+    if cache_dir:
+        cache_info = {"dir": cache_dir,
+                      "entries_before": cache_entries0,
+                      "entries_new": (compilation_cache_entries(cache_dir)
+                                      - cache_entries0)}
+    result = {
+        "fleet": fspec.to_dict(),
+        "served": served,
+        "tenants": {
+            name: {"unlearn_requests": rt.log, "group_log": rt.group_log,
+                   "coalesced_groups": rt.groups, "sweeps": rt.sweeps,
+                   "refresh_log": rt.refresh_log,
+                   "engine_stats": (dict(rt.unlearner.stats)
+                                    if rt.unlearner is not None else {})}
+            for name, rt in fleet.tenants.items()},
+        "drain_log": [{k: e[k] for k in ("tenant", "batch", "payloads",
+                                         "ran")}
+                      for e in fleet.drain_log],
+        "fleet_stats": fleet.stats(),
+        "compilation_cache": cache_info,
+    }
+    print(f"[serve] fleet done: {json.dumps(result)}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+
+    if args.check:
+        problems = []
+        # per-tenant coalescing gate: ONE engine sweep per drain point
+        if fspec.serve.coalesce:
+            for name, rt in fleet.tenants.items():
+                sweeps_by_batch: Dict = {}
+                for g in rt.group_log:
+                    sweeps_by_batch[g["batch"]] = \
+                        sweeps_by_batch.get(g["batch"], 0) + g["sweeps"]
+                for b, n in sorted(sweeps_by_batch.items()):
+                    if n > 1:
+                        problems.append(
+                            f"tenant {name!r}: drain at batch {b} ran {n} "
+                            "engine sweeps — due requests were not "
+                            "coalesced into one group")
+        # cross-tenant recompile gate: once ANY tenant has drained a
+        # (family, precision, sweep-mode, signature), every later drain of
+        # it — on ANY tenant — must replay the shared cache, zero compiles.
+        # This is the sharing contract made observable: tenant B's first
+        # drain after same-family tenant A is already warm.
+        seen_sigs = set()
+        for e in fleet.drain_log:
+            g = e["group"]
+            if g is None:
+                continue
+            rt = fleet.tenants[e["tenant"]]
+            sig = (rt.adapter.name, rt.spec.exec.precision,
+                   rt.spec.exec.sweep_mode, tuple(g["sweep_sig"]))
+            if sig in seen_sigs and g["engine"]["compiles"] > 0:
+                problems.append(
+                    f"tenant {e['tenant']!r} drain {g['group']} recompiled "
+                    f"{g['engine']['compiles']} program(s) for an "
+                    "already-seen family signature (cross-tenant program "
+                    "sharing regressed)")
+            seen_sigs.add(sig)
+        # per-tenant scanned-dispatch and precision gates (same contracts
+        # as the single-tenant path)
+        for name, rt in fleet.tenants.items():
+            want_prec = rt.spec.exec.precision
+            for g in rt.group_log:
+                eng = g["engine"]
+                if rt.spec.exec.sweep_mode == "scanned":
+                    if eng.get("sweep_mode") != "scanned":
+                        problems.append(
+                            f"tenant {name!r} drain {g['group']} fell back "
+                            f"to the {eng.get('sweep_mode')!r} drive loop "
+                            "although the deployment requested the scanned "
+                            "megaprogram")
+                    elif eng.get("sweep_launches") != 1:
+                        problems.append(
+                            f"tenant {name!r} drain {g['group']} ran "
+                            f"{eng.get('sweep_launches')} sweep-program "
+                            "launches — a coalesced drain must be exactly "
+                            "one")
+                if eng.get("precision") != want_prec:
+                    problems.append(
+                        f"tenant {name!r} drain {g['group']} ran the "
+                        f"{eng.get('precision')!r} path although the tenant "
+                        f"requested precision={want_prec!r} (silent "
+                        "fallback)")
+        # tenant-isolation + compile-once gate: replay a tenant that was
+        # warmed by a same-family sibling ALONE on a fresh cache — it must
+        # end bit-identical (no cross-tenant state bleed) and its fresh
+        # cache must compile exactly the programs the WHOLE fleet compiled
+        # for that family (N same-family tenants == the N=1 compile set)
+        pick = _shared_family_tenant(fleet, fspec)
+        if pick is None:
+            problems.append(
+                "--check on a fleet needs at least two same-family tenants "
+                "with at least one drain (cross-tenant sharing and "
+                "isolation are otherwise unobservable) — add a same-arch "
+                "tenant to the fleet spec")
+        else:
+            solo, rt_solo = _solo_replay(fleet, fspec, pick, args)
+            rt_fleet = fleet.tenants[pick]
+            n_fleet = _family_program_count(fleet, rt_fleet.adapter.name)
+            n_solo = _family_program_count(solo, rt_solo.adapter.name)
+            if n_fleet != n_solo:
+                problems.append(
+                    f"family {rt_fleet.adapter.name!r}: the fleet's shared "
+                    f"cache holds {n_fleet} compiled program(s) but a "
+                    f"single-tenant replay compiles {n_solo} — the "
+                    "same-family compile count is NOT independent of "
+                    "tenant count")
+            if not _trees_bitwise_equal(rt_fleet.params, rt_solo.params):
+                problems.append(
+                    f"tenant {pick!r}: params after interleaved fleet "
+                    "drains differ bitwise from a solo replay — tenant "
+                    "isolation broken")
+            if rt_fleet.unlearner is not None \
+                    and rt_solo.unlearner is not None \
+                    and not _trees_bitwise_equal(
+                        rt_fleet.unlearner.fisher_global,
+                        rt_solo.unlearner.fisher_global):
+                problems.append(
+                    f"tenant {pick!r}: global Fisher after interleaved "
+                    "fleet drains differs bitwise from a solo replay — "
+                    "tenant isolation broken")
+        # cold-start gate (process-global cache, same as single-tenant)
+        if cache_info and cache_info["entries_before"] > 0 \
+                and cache_info["entries_new"] > 0:
+            problems.append(
+                f"cold start with a warm compilation cache "
+                f"({cache_info['entries_before']} entries) still compiled "
+                f"{cache_info['entries_new']} new program(s)")
+        if problems:
+            print("[serve] FLEET CHECK FAILED: " + "; ".join(problems),
+                  flush=True)
+            raise SystemExit(1)
+        cache_stats = fleet.programs.stats()
+        print(f"[serve] fleet check ok: {len(fleet.tenants)} tenant(s), "
+              f"{sum(rt.groups for rt in fleet.tenants.values())} drain "
+              f"group(s), {cache_stats['compiles']} program compiles / "
+              f"{cache_stats['hits']} shared-cache hits across "
+              f"{cache_stats['sessions']} engine session(s); tenant "
+              f"{pick!r} solo replay bit-identical", flush=True)
+    return result
 
 
 def _parse_bursts(args) -> List[List[int]]:
@@ -392,9 +594,18 @@ def main(argv=None) -> dict:
                          "(int8 weight codes + per-channel scale tables, "
                          "dequant-free dampening, quantization-aware "
                          "halting); 'fp32' is the oracle default")
+    ap.add_argument("--fleet", default=None,
+                    help="serve a multi-tenant fleet from this FleetSpec "
+                         "JSON file (repro.fleet): per-tenant weights, "
+                         "queues and Fisher, ONE drain scheduler, ONE "
+                         "shared compiled-program cache; the burst/check "
+                         "flags apply to every tenant")
     ap.add_argument("--out", default=None,
                     help="write the result JSON to this path")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        return _main_fleet(args)
 
     # the cache must be live BEFORE the first compile (prefill/decode too,
     # not just the engine) for a cold start to be replayable from disk
@@ -420,8 +631,7 @@ def main(argv=None) -> dict:
         lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))
 
     svc = ForgetService(cfg, tokens, domains, dcfg.seq_len,
-                        spec=default_serve_spec(
-                            chunk_size=ForgetService.CHUNK,
+                        serve=ServeSpec(
                             cache_dir=args.cache_dir,
                             refresh_every=args.fisher_refresh,
                             sweep_mode=args.sweep_mode,
@@ -468,6 +678,7 @@ def main(argv=None) -> dict:
                                 ("stopped_at_l", "macs_vs_ssd_pct")},
               "engine_stats": svc.unlearner.stats if svc.unlearner else {},
               "unlearn_spec": svc.spec.to_dict(),
+              "serve_spec": svc.serve_spec.to_dict(),
               "compilation_cache": cache_info,
               "fisher_refresh": refresh_info}
     print(f"[serve] done: {json.dumps(result)}", flush=True)

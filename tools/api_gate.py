@@ -1,14 +1,20 @@
 #!/usr/bin/env python
 """api-gate: the ``repro.api.Unlearner`` facade is the only way into the
-unlearning engine.
+unlearning engine, and the serving entry points stay behind their facades.
 
 Fails (exit 1) if any scanned module outside the whitelisted facade/shim
 files
 
   * references the deprecated ``ficabu._mode_config`` (the mode mapping now
-    lives in ``UnlearnSpec.for_mode(...).to_config()``), or
+    lives in ``UnlearnSpec.for_mode(...).to_config()``),
   * constructs ``UnlearnSession(...)`` directly (sessions belong to the
-    facade, which owns the Fisher lifecycle and cross-request warmth).
+    facade, which owns the Fisher lifecycle and cross-request warmth),
+  * constructs ``ForgetService(...)`` directly (single-tenant serving is a
+    shim over ``repro.fleet.Fleet`` — multi-tenant code must go through
+    the fleet so queues share ONE scheduler and ONE program cache), or
+  * adds a bare ``assert`` statement under ``src/repro`` (user-facing
+    validation raises ``ValueError`` with an actionable message; asserts
+    vanish under ``python -O`` — the PR-6 sweep must stay converged).
 
 Scanned trees: src/repro, benchmarks, examples.  tests/ are exempt — they
 exercise the engine layer itself by design (tests/test_engine.py).
@@ -17,6 +23,7 @@ exercise the engine layer itself by design (tests/test_engine.py).
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -29,6 +36,15 @@ ALLOW = {
     "src/repro/engine/session.py",  # the class definition itself
     "src/repro/core/ficabu.py",     # the deprecation shim being gated
 }
+# files allowed to construct ForgetService (the legacy single-tenant shim):
+# its own definition, and the fleet package it delegates to
+ALLOW_FORGET_SERVICE = {
+    "src/repro/launch/serve.py",
+    "src/repro/fleet/fleet.py",
+}
+# the assert-free discipline applies to the library tree only — benchmarks
+# and examples are harnesses, and tests assert by design
+ASSERT_SCAN = "src/repro"
 RULES = (
     (re.compile(r"\b_mode_config\b"),
      "references deprecated ficabu._mode_config "
@@ -37,6 +53,23 @@ RULES = (
      "constructs UnlearnSession directly "
      "(drive it through repro.api.Unlearner)"),
 )
+FORGET_SERVICE_RULE = (
+    re.compile(r"\bForgetService\("),
+    "constructs ForgetService directly (route serving through "
+    "repro.fleet.Fleet, or the serve.py CLI for the single-tenant shim)")
+
+
+def _bare_asserts(path: Path, rp: str):
+    """``assert`` statements in library code, via the AST (comments and
+    strings can't false-positive)."""
+    try:
+        tree = ast.parse(path.read_text(), filename=rp)
+    except SyntaxError as e:
+        return [f"{rp}:{e.lineno}: does not parse ({e.msg})"]
+    return [f"{rp}:{node.lineno}: bare assert in library code "
+            "(raise ValueError with an actionable message — asserts "
+            "vanish under python -O)"
+            for node in ast.walk(tree) if isinstance(node, ast.Assert)]
 
 
 def main(argv=None) -> int:
@@ -44,11 +77,15 @@ def main(argv=None) -> int:
     for rel in SCAN:
         for path in sorted((ROOT / rel).rglob("*.py")):
             rp = path.relative_to(ROOT).as_posix()
+            if rp.startswith(ASSERT_SCAN) and rp not in ALLOW:
+                problems.extend(_bare_asserts(path, rp))
             if rp in ALLOW:
                 continue
+            rules = RULES if rp in ALLOW_FORGET_SERVICE \
+                else RULES + (FORGET_SERVICE_RULE,)
             for ln, line in enumerate(path.read_text().splitlines(), 1):
                 code = line.split("#", 1)[0]
-                for rx, why in RULES:
+                for rx, why in rules:
                     if rx.search(code):
                         problems.append(f"{rp}:{ln}: {why}\n"
                                         f"    {line.strip()}")
@@ -58,9 +95,9 @@ def main(argv=None) -> int:
         for p in problems:
             print("  " + p)
         return 1
-    print("[api-gate] ok: no _mode_config use or direct UnlearnSession "
-          "construction outside the facade/shim "
-          f"(scanned {', '.join(SCAN)})")
+    print("[api-gate] ok: no _mode_config use, direct UnlearnSession/"
+          "ForgetService construction, or bare asserts outside the "
+          f"facade/shim (scanned {', '.join(SCAN)})")
     return 0
 
 
