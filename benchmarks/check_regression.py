@@ -47,6 +47,10 @@ GATED = {
         ("coalesced_warm_per_domain_s", "sequential_warm_per_domain_s"),
         ("prefill_chunked_s", "prefill_tokenwise_s"),
     ),
+    # no normalised pairs (every load gate is machine-independent, see
+    # ABS_GATES) — the empty entry still makes a MISSING fresh
+    # BENCH_load.json fail, so the load bench cannot silently not run
+    "BENCH_load.json": (),
 }
 
 # The int8 path's declared tolerance contract, hardcoded HERE on purpose so a
@@ -74,6 +78,20 @@ ABS_GATES = {
     "BENCH_serve.json": (
         ("fleet_shared_compile_ratio", 1.0, 1.0),
         ("fleet_warm_drain_compiles", 0, 0),
+    ),
+    # the load/observability SLO contract (repro.load + repro.obs): every
+    # declared objective met, zero program compiles in steady state (warm
+    # fleet under load replays only), the bounded queue held at every
+    # observed depth, two seeded runs fingerprint-identical, and the
+    # reject-policy accounting consistent across submits/counters/events.
+    # queue-age p99 is virtual-clock batches — machine independent.
+    "BENCH_load.json": (
+        ("load_slo_attainment", 1.0, 1.0),
+        ("load_steady_state_compiles", 0, 0),
+        ("load_queue_bound_ok", 1, 1),
+        ("load_deterministic", 1, 1),
+        ("load_reject_accounting_ok", 1, 1),
+        ("load_queue_age_p99", 0.0, 6.0),
     ),
 }
 

@@ -1,0 +1,187 @@
+"""Load-and-observability bench: seeded synthetic traffic, SLO gates.
+
+Drives the ``repro.load`` harness against a 3-tenant fleet (shared program
+cache, bounded queues, bursty overload) and records the SLO-facing numbers
+in ``BENCH_load.json``:
+
+  * ``load_slo_attainment``       fraction of declared SLO objectives met
+                                  (gated to exactly 1.0);
+  * ``load_queue_age_p99``        p99 forget-queue age in virtual batches,
+                                  under deliberate burst overload;
+  * ``load_steady_state_compiles``  program compiles after the warmup
+                                  phase — the zero-warm-compile pin under
+                                  load (every program family is compiled
+                                  during warmup; steady state replays);
+  * ``load_queue_bound_ok``       the bounded-queue invariant held at every
+                                  observed depth (admission control works);
+  * ``load_deterministic``        two runs of the seeded scenario produced
+                                  identical event streams modulo wall-clock
+                                  fields (the reproducibility contract);
+  * ``load_reject_accounting_ok`` under ``admission="reject"`` the refused
+                                  submits, the scheduler counters and the
+                                  structured ``queue.reject`` events agree;
+  * ``load_drains_per_sec``       wall-clock drain throughput
+                                  (informational — machine dependent);
+  * ``load_drain_throughput``     drained forget requests per virtual tick
+                                  (deterministic).
+
+Also writes the telemetry stream (``load_events.jsonl``) and the rendered
+markdown report (``LOAD_REPORT.md``) — the artifacts CI uploads.
+
+``benchmarks/check_regression.py`` ABS-gates the deterministic keys; the
+wall-clock key is recorded but never gated.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.fleet import Fleet, FleetSpec, TenantSpec
+from repro.load import ArrivalSpec, LoadHarness, LoadScenario, SLOSpec
+from repro.load.harness import build_lm_tenant
+from repro.obs import render, telemetry
+
+# The scenario under test: bursty overload against bounded queues.  Queue
+# bound 2 with a burst factor of 6 guarantees overflow (defer-with-aging
+# folds) while max_groups=2 forces cross-tenant deferrals — both
+# backpressure paths exercise every drain point.
+MAX_QUEUE = 2
+SCENARIO = LoadScenario(
+    ticks=10, warmup_ticks=6, deadline_slack=1,
+    forget=ArrivalSpec(kind="bursty", rate=0.8, burst_factor=6.0,
+                       duty=0.25, period=4, seed=3),
+    generate=ArrivalSpec(kind="diurnal", rate=1.5, period=8, seed=5),
+    domains=3, serve_generate=False, seed=11)
+
+# Declared SLOs for the smoke deployment.  queue-age p99 bound: the burst
+# period is 4 ticks and the group budget defers at most one round, so a
+# healthy scheduler keeps even merged overflow work under ~6 batches old;
+# sustained aging past that means starvation.
+SLO = SLOSpec(max_queue_age_p99=6.0, max_queue_depth=MAX_QUEUE,
+              min_drain_throughput=0.5, max_reject_fraction=0.0,
+              max_steady_compiles=0)
+
+EVENTS_PATH = "load_events.jsonl"
+REPORT_PATH = "LOAD_REPORT.md"
+
+
+def _fleet_spec() -> FleetSpec:
+    return FleetSpec(
+        tenants=(TenantSpec(name="acme", arch="gemma3-1b", seed=0),
+                 TenantSpec(name="globex", arch="gemma3-1b", seed=1,
+                            weight=2.0),
+                 TenantSpec(name="initech", arch="gemma3-1b", seed=2)),
+        scheduling="fair", max_groups_per_drain=2,
+        max_queue_per_tenant=MAX_QUEUE, admission="defer")
+
+
+def _build_fleet(fspec: FleetSpec) -> Fleet:
+    sc = SCENARIO
+    return Fleet.from_spec(
+        fspec, lambda t: build_lm_tenant(t, prompt_len=sc.prompt_len,
+                                         gen_len=sc.gen_len))
+
+
+def _run_once(path=None):
+    fleet = _build_fleet(_fleet_spec())
+    tel = telemetry.Telemetry(path=path,
+                              clock=telemetry.VirtualClock(), keep=True)
+    try:
+        result = LoadHarness(fleet, SCENARIO).run(tel)
+    finally:
+        tel.close()
+    return result, tel.events
+
+
+def _queue_bound_ok(events, max_queue: int) -> bool:
+    """The invariant: every observed queue depth respects the bound."""
+    for ev in events:
+        if ev.get("kind") in ("queue.enqueue", "queue.merge",
+                              "queue.depth", "queue.reject"):
+            d = ev.get("depth")
+            if isinstance(d, int) and d > max_queue:
+                return False
+    return True
+
+
+def _reject_scenario_ok() -> bool:
+    """A short ``admission="reject"`` run: refused submits, scheduler
+    counters and structured ``queue.reject`` events must all agree."""
+    fspec = FleetSpec(
+        tenants=(TenantSpec(name="solo", arch="gemma3-1b", seed=0),),
+        scheduling="deadline", max_queue_per_tenant=1, admission="reject")
+    fleet = _build_fleet(fspec)
+    sc = LoadScenario(ticks=4, warmup_ticks=0, deadline_slack=2,
+                      forget=ArrivalSpec(kind="poisson", rate=3.0, seed=9),
+                      generate=ArrivalSpec(rate=0.0, seed=1),
+                      domains=3, seed=13)
+    res = LoadHarness(fleet, sc).run()
+    snap = res["scheduler"]
+    rejected_events = res["event_counts"].get("queue.reject", 0)
+    total_rejects = sum(snap["rejects"].values())
+    ok = (res["rejected_submits"] == total_rejects == rejected_events
+          and total_rejects > 0
+          and res["fleet"]["rejected"] == total_rejects)
+    print(f"[load_bench] reject accounting: submits refused="
+          f"{res['rejected_submits']} scheduler={total_rejects} "
+          f"events={rejected_events} -> {'ok' if ok else 'MISMATCH'}")
+    return ok
+
+
+def main() -> None:
+    import time
+    print("[load_bench] run 1/2 (writes the telemetry artifacts)")
+    t0 = time.time()
+    res1, events1 = _run_once(path=EVENTS_PATH)
+    wall1 = time.time() - t0
+    print("[load_bench] run 2/2 (determinism replay)")
+    res2, events2 = _run_once()
+    deterministic = (res1["fingerprint"] == res2["fingerprint"]
+                     and telemetry.fingerprint(events1)
+                     == telemetry.fingerprint(events2))
+
+    fleet_sum = res1["fleet"]
+    evaluation = SLO.evaluate(res1)
+    bound_ok = _queue_bound_ok(events1, MAX_QUEUE)
+    reject_ok = _reject_scenario_ok()
+
+    with open(REPORT_PATH, "w") as f:
+        f.write(render(res1, evaluation) + "\n")
+
+    rec = {
+        "load_slo_attainment": evaluation["attained"],
+        "load_queue_age_p99": fleet_sum["queue_age"]["p99"],
+        "load_queue_age_mean": fleet_sum["queue_age"]["mean"],
+        "load_queue_depth_max": fleet_sum["queue_depth_max"],
+        "load_steady_state_compiles": fleet_sum["steady_state_compiles"],
+        "load_compiles": fleet_sum["compiles"],
+        "load_program_hits": fleet_sum["program_hits"],
+        "load_submitted": fleet_sum["submitted"],
+        "load_merged": fleet_sum["merged"],
+        "load_deferrals": fleet_sum["deferrals"],
+        "load_drained_requests": fleet_sum["drained_requests"],
+        "load_drain_throughput": fleet_sum["drain_throughput"],
+        "load_drains_per_sec": (fleet_sum["drains"] / wall1
+                                if wall1 > 0 else 0.0),
+        "load_queue_bound_ok": int(bound_ok),
+        "load_deterministic": int(deterministic),
+        "load_reject_accounting_ok": int(reject_ok),
+        "load_n_events": res1["n_events"],
+        "slo": SLO.to_dict(),
+        "scenario": SCENARIO.to_dict(),
+        "objectives": evaluation["objectives"],
+    }
+    with open("BENCH_load.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    for r in evaluation["objectives"]:
+        print(f"[load_bench] SLO {r['objective']}: actual={r['actual']} "
+              f"target={r['target']} -> {'ok' if r['ok'] else 'FAIL'}")
+    print(f"[load_bench] attainment={evaluation['attained']:.2f} "
+          f"deterministic={deterministic} queue_bound_ok={bound_ok} "
+          f"steady_compiles={fleet_sum['steady_state_compiles']} "
+          f"queue_age_p99={fleet_sum['queue_age']['p99']} "
+          f"events={res1['n_events']} -> BENCH_load.json, "
+          f"{EVENTS_PATH}, {REPORT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

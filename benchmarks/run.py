@@ -13,14 +13,15 @@ import sys
 import time
 
 # jobs quick enough for the CI smoke lane (no model training required)
-SMOKE_JOBS = ("kernels", "compression")
+SMOKE_JOBS = ("kernels", "compression", "load")
 
 
 def main() -> None:
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     t0 = time.time()
     from . import (compression_bench, fig3_selection, kernels_bench,
-                   roofline_report, table1_cau, table2_bd, table4_e2e)
+                   load_bench, roofline_report, table1_cau, table2_bd,
+                   table4_e2e)
 
     jobs = {
         "table1": table1_cau.main,
@@ -29,6 +30,7 @@ def main() -> None:
         "fig3": fig3_selection.main,
         "kernels": kernels_bench.main,
         "compression": compression_bench.main,
+        "load": load_bench.main,
         "roofline": roofline_report.main,
     }
     if which == "--smoke":

@@ -24,6 +24,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from repro.core.cau import ModelAdapter, UnlearnConfig
+from repro.obs import telemetry as _t
 from repro.engine import (FisherStream, ProgramCache, RefreshPolicy,
                           UnlearnSession, shape_signature)
 
@@ -365,6 +366,10 @@ class Unlearner:
         new_total = self._stream.blend(self._fisher, fresh_mean)
         self.set_fisher(new_total)      # structure-locked; may raise
         self._stream.commit(self._fisher, folded)
+        # staleness at the refresh DECISION — captured before the trigger
+        # counters reset, or telemetry would always report a fresh state
+        drains_stale = self._drains_since_refresh
+        edited_stale = self.edited_fraction
         self._drains_since_refresh = 0
         self._edited_since_refresh = 0
         entry = {
@@ -377,6 +382,12 @@ class Unlearner:
             },
         }
         self.refresh_log.append(entry)
+        _t.emit("fisher.refresh", name=self.name, batches=folded,
+                ema_count=self._stream.count,
+                drains_since_refresh=drains_stale,
+                edited_fraction=round(edited_stale, 6),
+                compiles=entry["engine"]["refresh_compiles"],
+                hits=entry["engine"]["refresh_hits"])
         return entry
 
     # -- session ------------------------------------------------------------

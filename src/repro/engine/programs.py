@@ -33,7 +33,23 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Hashable, Tuple
 
+from repro.obs import telemetry as _t
+
 Builder = Callable[[], Callable]
+
+
+def _key_fields(key: Hashable) -> Dict[str, str]:
+    """Human-legible telemetry fields for a fully-qualified program key:
+    the namespace (family) tuple and the session key's leading kind tag
+    ("fused", "sweep", "refresh", ...)."""
+    ns = fam = ""
+    if isinstance(key, tuple) and key:
+        ns = "/".join(map(str, key[0])) if isinstance(key[0], tuple) \
+            else str(key[0])
+        if len(key) > 1:
+            sk = key[1]
+            fam = str(sk[0]) if isinstance(sk, tuple) and sk else str(sk)
+    return {"namespace": ns, "family": fam}
 
 
 class ProgramCache:
@@ -60,11 +76,16 @@ class ProgramCache:
         session (this tenant's or another's) already built it."""
         prog = self._progs.get(key)
         if prog is None:
+            t0 = _t.wall_time()
             prog = builder()
             self._progs[key] = prog
             self.compiles += 1
+            _t.emit("program.compile", compiles=self.compiles,
+                    wall_s=round(_t.wall_time() - t0, 3),
+                    **_key_fields(key))
             return prog, True
         self.hits += 1
+        _t.emit("program.hit", hits=self.hits, **_key_fields(key))
         return prog, False
 
     def evict_where(self, pred: Callable[[Hashable], bool]) -> int:

@@ -27,6 +27,7 @@ from repro.core.cau import (ModelAdapter, UnlearnConfig, _chunk,
                             _layer_param_counts, _logit_cotangents)
 from repro.core.metrics import MacCounter
 from repro.core.schedule import checkpoint_set, sigmoid_profile
+from repro.obs import telemetry as _t
 from repro.optim.compression import (q8_dequantize_tree, q8_fakequant_tree,
                                      q8_quantize_tree)
 
@@ -108,6 +109,17 @@ class UnlearnSession:
     def _layer_key(self, j: int) -> Hashable:
         lk = getattr(self.adapter, "layer_key", None)
         return ("j", j) if lk is None else lk(j)
+
+    def _emit_sweep(self, engine: Dict, stops: List[int]) -> None:
+        """One ``engine.sweep`` telemetry event per sweep launch — the halt
+        depths are the paper's context-adaptivity signal, the compile/hit
+        deltas are the warmth signal the load gates watch."""
+        _t.emit("engine.sweep", adapter=str(self.adapter.name),
+                sets=len(stops), stopped_at_l=list(stops),
+                sweep_mode=engine["sweep_mode"],
+                precision=engine["precision"],
+                compiles=engine["compiles"],
+                cache_hits=engine["cache_hits"])
 
     def _layer_ctx(self, params: Params, j: int) -> Params:
         """Traced context the layer forward needs beyond its own params.
@@ -411,6 +423,7 @@ class UnlearnSession:
                     "precision": cfg.precision,
                     "sweep_launches": self.stats["sweep_launches"] - launch0,
                 }
+                self._emit_sweep(st["engine"], [st["stopped_at_l"]])
                 return new_params, st
 
         L = adapter.n_layers
@@ -506,6 +519,7 @@ class UnlearnSession:
             "sweep_mode": "layerwise",
             "precision": cfg.precision,
         }
+        self._emit_sweep(stats["engine"], [stats["stopped_at_l"]])
         return params, stats
 
     # -- coalesced multi-set sweep ------------------------------------------
@@ -569,6 +583,8 @@ class UnlearnSession:
                             self.stats["sweep_launches"] - launch0,
                     },
                 }
+                self._emit_sweep(group_stats["engine"],
+                                 group_stats["stopped_at_l"])
                 return new_params, stats_k, group_stats
 
         L = adapter.n_layers
@@ -690,4 +706,5 @@ class UnlearnSession:
                 "precision": cfg.precision,
             },
         }
+        self._emit_sweep(group_stats["engine"], group_stats["stopped_at_l"])
         return params, stats_k, group_stats

@@ -27,7 +27,6 @@ tests/test_fleet.py.
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -36,6 +35,8 @@ import numpy as np
 from repro.api import ForgetRequest, Unlearner, UnlearnSpec
 from repro.core import adapters
 from repro.engine import ProgramCache
+from repro.obs import telemetry as _t
+from repro.obs.telemetry import wall_time
 
 from .scheduler import DrainGroup, DrainScheduler
 from .specs import FleetSpec, TenantSpec
@@ -122,18 +123,19 @@ class TenantRuntime:
         """Streamed I_D refresh between drains (policy-scheduled)."""
         if self.unlearner is None or self.unlearner.fisher_stream is None:
             return False
-        t0 = time.time()
+        t0 = wall_time()
         entry = self.unlearner.refresh_if_due(params)
         if entry is None:
             return False
         entry = dict(entry, batch=batch_idx,
-                     latency_s=round(time.time() - t0, 3))
+                     latency_s=round(wall_time() - t0, 3))
         self.refresh_log.append(entry)
-        print(f"[{self.tag}] fisher refresh {len(self.refresh_log) - 1}: "
-              f"folded {entry['batches']} retain microbatch(es) at the "
-              f"edited weights (ema_count={entry['ema_count']}, "
-              f"compiles={entry['engine']['refresh_compiles']}, "
-              f"hits={entry['engine']['refresh_hits']})", flush=True)
+        _t.log(self.tag,
+               f"fisher refresh {len(self.refresh_log) - 1}: "
+               f"folded {entry['batches']} retain microbatch(es) at the "
+               f"edited weights (ema_count={entry['ema_count']}, "
+               f"compiles={entry['engine']['refresh_compiles']}, "
+               f"hits={entry['engine']['refresh_hits']})")
         return True
 
     def staleness_report(self, params) -> Optional[Dict]:
@@ -201,13 +203,13 @@ class TenantRuntime:
             if fb is None:
                 self.log.append({"domain": dom, "batch": batch_idx,
                                  "skipped": "no forget samples"})
-                print(f"[{self.tag}] forget request for domain {dom} "
-                      "skipped: no samples in that domain", flush=True)
+                _t.log(self.tag, f"forget request for domain {dom} "
+                       "skipped: no samples in that domain")
                 continue
             if pad:
-                print(f"[{self.tag}] forget batch for domain {dom} padded "
-                      f"by {pad} repeated samples to a multiple of "
-                      f"{self.chunk}", flush=True)
+                _t.log(self.tag, f"forget batch for domain {dom} padded "
+                       f"by {pad} repeated samples to a multiple of "
+                       f"{self.chunk}")
             seen.add(dom)
             group.append({"domain": dom, "fb": fb, "padded": pad})
         if not group:
@@ -224,18 +226,17 @@ class TenantRuntime:
                 if extra:
                     g["fb"] = self._wrap_pad(g["fb"], extra)
                     g["padded"] += extra
-                    print(f"[{self.tag}] forget batch for domain "
-                          f"{g['domain']} padded by {extra} repeated "
-                          f"samples to the drain's widest set ({widest})",
-                          flush=True)
+                    _t.log(self.tag, f"forget batch for domain "
+                           f"{g['domain']} padded by {extra} repeated "
+                           f"samples to the drain's widest set ({widest})")
 
         unl = self._warm(params)
-        t0 = time.time()
+        t0 = wall_time()
         params, stats_k, gstats = unl.forget_group(
             [ForgetRequest(g["fb"][:, :-1], g["fb"][:, 1:], tag=g["domain"])
              for g in group],
             params=params)
-        latency = round(time.time() - t0, 3)
+        latency = round(wall_time() - t0, 3)
         self.sweeps += gstats["sweeps"]
         self.groups += 1
         gi = self.groups - 1
@@ -259,12 +260,12 @@ class TenantRuntime:
                 "macs_vs_ssd_pct": st["macs_vs_ssd_pct"],
                 "engine": gstats["engine"],
             })
-        print(f"[{self.tag}] coalesced sweep {gi}: unlearned domains "
-              f"{[g['domain'] for g in group]} in place "
-              f"(sweeps={gstats['sweeps']}, "
-              f"stop_l={[st['stopped_at_l'] for st in stats_k]}, "
-              f"compiles={gstats['engine']['compiles']}, "
-              f"hits={gstats['engine']['cache_hits']})", flush=True)
+        _t.log(self.tag, f"coalesced sweep {gi}: unlearned domains "
+               f"{[g['domain'] for g in group]} in place "
+               f"(sweeps={gstats['sweeps']}, "
+               f"stop_l={[st['stopped_at_l'] for st in stats_k]}, "
+               f"compiles={gstats['engine']['compiles']}, "
+               f"hits={gstats['engine']['cache_hits']})")
         # streamed I_D refresh between drains: fold retain microbatches at
         # the freshly edited weights when the RefreshSpec policy says so
         self.maybe_refresh(params, batch_idx)
@@ -276,6 +277,8 @@ class Fleet:
 
     def __init__(self, *, scheduling: str = "fair",
                  max_groups_per_drain: int = 0,
+                 max_queue_per_tenant: int = 0,
+                 admission: str = "defer",
                  programs: Optional[ProgramCache] = None,
                  spec: Optional[FleetSpec] = None):
         if programs is not None and not isinstance(programs, ProgramCache):
@@ -285,7 +288,9 @@ class Fleet:
         self.spec = spec
         self.programs = programs if programs is not None else ProgramCache()
         self.scheduler = DrainScheduler(scheduling,
-                                        max_groups=max_groups_per_drain)
+                                        max_groups=max_groups_per_drain,
+                                        max_queue=max_queue_per_tenant,
+                                        admission=admission)
         self.tenants: Dict[str, TenantRuntime] = {}
         self.drain_log: List[Dict] = []  # one entry per (tenant, drain)
 
@@ -300,6 +305,8 @@ class Fleet:
                              f"got {type(fspec).__name__}")
         fleet = cls(scheduling=fspec.scheduling,
                     max_groups_per_drain=fspec.max_groups_per_drain,
+                    max_queue_per_tenant=fspec.max_queue_per_tenant,
+                    admission=fspec.admission,
                     spec=fspec)
         for t in fspec.tenants:
             built = build_tenant(t)
@@ -356,9 +363,13 @@ class Fleet:
                              f"{sorted(self.tenants)}")
         return self.tenants[name]
 
-    def submit(self, tenant: str, domain: int, due_batch: int) -> None:
+    def submit(self, tenant: str, domain: int, due_batch: int,
+               *, now: Optional[int] = None) -> bool:
+        """Enqueue one forget request; returns False when admission
+        control rejected it (``admission="reject"`` on a full queue)."""
         self.tenant(tenant)  # actionable unknown-tenant error
-        self.scheduler.submit(tenant, int(domain), due_batch)
+        return self.scheduler.submit(tenant, int(domain), due_batch,
+                                     now=now)
 
     def drain(self, batch_idx) -> List[Dict]:
         """Run every drain group the scheduler selects at ``batch_idx``.
@@ -370,6 +381,7 @@ class Fleet:
         for g in self.scheduler.due_groups(batch_idx):
             rt = self.tenants[g.tenant]
             groups_before = rt.groups
+            t0 = wall_time()
             rt.params, ran = rt.run_due(rt.params, list(g.payloads),
                                         batch_idx)
             entry = {"tenant": g.tenant, "batch": batch_idx,
@@ -378,6 +390,15 @@ class Fleet:
                      if ran and rt.groups > groups_before else None}
             self.drain_log.append(entry)
             entries.append(entry)
+            glog = entry["group"]
+            _t.emit("drain.group", tenant=g.tenant, batch=batch_idx,
+                    n_requests=len(g.payloads), ages=list(g.ages),
+                    due_batch=g.due_batch, ran=ran,
+                    sweeps=glog["sweeps"] if glog else 0,
+                    stop_l=[st.get("stopped_at_l") for st in rt.log
+                            if st.get("group") == rt.groups - 1]
+                    if glog else [],
+                    latency_s=round(wall_time() - t0, 3))
         return entries
 
     def refresh_if_due(self, batch_idx) -> List[str]:

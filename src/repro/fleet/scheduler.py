@@ -8,7 +8,7 @@ group into a single back-end-first sweep), then orders the groups across
 tenants and — when ``max_groups`` caps how many groups one drain point may
 run — decides who drains now and who stays queued.
 
-Two policies:
+Two ordering policies:
 
 ``deadline``  earliest due batch first (FIFO across tenants on ties).
               Simple, but a bursty tenant that keeps the oldest deadlines
@@ -21,22 +21,51 @@ Two policies:
               interleave instead of starving — the classic start-time
               fair-queueing argument, discretized to drain points.
 
-The scheduler is pure bookkeeping: no JAX, no model state.  The ``Fleet``
-facade owns the engines and feeds selected groups to them.
+ADMISSION CONTROL (backpressure): when the forget queue outruns drain
+throughput, unbounded growth is the failure mode a serving process cannot
+afford.  ``max_queue`` bounds each tenant's pending ENTRY count; on
+overflow the declared ``admission`` policy decides:
+
+``defer``   (default) the overflow request is still admitted, folded into
+            the tenant's OLDEST pending entry: the entry keeps its original
+            (oldest) deadline and submission time, so the merged work AGES
+            rather than starves — under ``deadline`` the old due batch
+            outranks fresh traffic, under ``fair`` the untouched virtual
+            time does the same.  No request is ever dropped; the queue
+            never exceeds the bound.
+``reject``  the request is refused outright (``submit`` returns False) and
+            a structured ``queue.reject`` telemetry event carries the
+            accounting — the caller surfaces the rejection to the client.
+
+Deferral past a drain point (the ``max_groups`` budget) likewise only ever
+ages work: deferred entries keep their deadlines and virtual time, so both
+policies pick them up at the next drain — asserted by
+tests/test_scheduler_backpressure.py.
+
+The scheduler is pure bookkeeping: no JAX, no model state, no wall-clock
+reads (the api-gate AST guard enforces the virtual-clock contract for this
+package).  The ``Fleet`` facade owns the engines and feeds selected groups
+to them; every queue transition is mirrored onto the process telemetry
+stream (``repro.obs.telemetry``) when a capture is active.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.obs import telemetry as _t
+
 POLICIES = ("fair", "deadline")
+ADMISSION_POLICIES = ("defer", "reject")
 
 
 @dataclasses.dataclass(frozen=True)
 class _Pending:
     due_batch: int
-    seq: int          # global admission order — deterministic tie-break
-    payload: Any
+    seq: int                    # global admission order — deterministic tie-break
+    payloads: Tuple[Any, ...]   # >1 when overflow requests were folded in
+    submitted: Optional[int] = None   # batch index at submission (queue age)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,13 +74,15 @@ class DrainGroup:
     tenant: str
     payloads: Tuple[Any, ...]
     due_batch: int    # earliest deadline in the group
+    ages: Tuple[Optional[int], ...] = ()   # per-request queue age at drain
 
     def __len__(self) -> int:
         return len(self.payloads)
 
 
 class DrainScheduler:
-    def __init__(self, policy: str = "fair", *, max_groups: int = 0):
+    def __init__(self, policy: str = "fair", *, max_groups: int = 0,
+                 max_queue: int = 0, admission: str = "defer"):
         if policy not in POLICIES:
             raise ValueError(f"DrainScheduler policy must be one of "
                              f"{POLICIES}, got {policy!r}")
@@ -59,13 +90,26 @@ class DrainScheduler:
                 or max_groups < 0:
             raise ValueError(f"DrainScheduler max_groups must be an int >= 0"
                              f" (0 = no cap), got {max_groups!r}")
+        if not isinstance(max_queue, int) or isinstance(max_queue, bool) \
+                or max_queue < 0:
+            raise ValueError(f"DrainScheduler max_queue must be an int >= 0 "
+                             f"(0 = unbounded; N bounds each tenant's "
+                             f"pending entries), got {max_queue!r}")
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(f"DrainScheduler admission must be one of "
+                             f"{ADMISSION_POLICIES}, got {admission!r}")
         self.policy = policy
         self.max_groups = max_groups
+        self.max_queue = max_queue
+        self.admission = admission
         self._queues: Dict[str, List[_Pending]] = {}
         self._weights: Dict[str, float] = {}
         self._vtime: Dict[str, float] = {}
         self._seq = 0
         self.deferrals = 0   # groups that were due but pushed past a drain
+        self.deferred_by: Dict[str, int] = {}
+        self.rejects: Dict[str, int] = {}   # admission="reject" refusals
+        self.merges: Dict[str, int] = {}    # admission="defer" aging folds
 
     # -- tenant registry ----------------------------------------------------
     def register(self, tenant: str, weight: float = 1.0) -> None:
@@ -81,6 +125,9 @@ class DrainScheduler:
                              f"got {weight!r}")
         self._queues[tenant] = []
         self._weights[tenant] = float(weight)
+        self.deferred_by[tenant] = 0
+        self.rejects[tenant] = 0
+        self.merges[tenant] = 0
         # a newcomer starts at the floor of live virtual times so it cannot
         # claim an unbounded "catch-up" backlog against long-running tenants
         self._vtime[tenant] = min(self._vtime.values(), default=0.0)
@@ -89,27 +136,79 @@ class DrainScheduler:
         return tuple(self._queues)
 
     # -- queue --------------------------------------------------------------
-    def submit(self, tenant: str, payload: Any, due_batch: int) -> None:
+    def submit(self, tenant: str, payload: Any, due_batch: int,
+               *, now: Optional[int] = None) -> bool:
+        """Enqueue one forget request; returns True when admitted.
+
+        ``now`` is the submission batch index on the virtual clock (None
+        when the caller doesn't track one) — it feeds the queue-age
+        telemetry and SLO accounting.  Under a full bounded queue the
+        admission policy decides: ``defer`` folds the request into the
+        oldest pending entry (admitted, aged), ``reject`` refuses it
+        (returns False, emits a structured ``queue.reject`` event).
+        """
         if tenant not in self._queues:
             raise ValueError(f"unknown tenant {tenant!r}; registered: "
                              f"{sorted(self._queues)}")
         if not isinstance(due_batch, int) or isinstance(due_batch, bool):
             raise ValueError(f"due_batch must be an int batch index, "
                              f"got {due_batch!r}")
-        self._queues[tenant].append(_Pending(due_batch, self._seq, payload))
+        if now is not None and (not isinstance(now, int)
+                                or isinstance(now, bool)):
+            raise ValueError(f"submit now= must be None or an int batch "
+                             f"index, got {now!r}")
+        q = self._queues[tenant]
+        if self.max_queue and len(q) >= self.max_queue:
+            if self.admission == "reject":
+                self.rejects[tenant] += 1
+                _t.emit("queue.reject", tenant=tenant, payload=payload,
+                        due_batch=due_batch, depth=len(q), submitted=now)
+                return False
+            # defer-with-aging: fold into the OLDEST entry — the merged
+            # request inherits that entry's due batch and submission time,
+            # so backpressure makes work OLDER, never invisible
+            idx = min(range(len(q)), key=lambda i: q[i].seq)
+            old = q[idx]
+            q[idx] = _Pending(
+                due_batch=min(old.due_batch, due_batch), seq=old.seq,
+                payloads=old.payloads + (payload,),
+                submitted=old.submitted if old.submitted is not None
+                else now)
+            self.merges[tenant] += 1
+            self._seq += 1
+            _t.emit("queue.merge", tenant=tenant, payload=payload,
+                    due_batch=due_batch, merged_due=q[idx].due_batch,
+                    depth=len(q), submitted=now)
+            return True
+        q.append(_Pending(due_batch, self._seq, (payload,), now))
         self._seq += 1
+        _t.emit("queue.enqueue", tenant=tenant, payload=payload,
+                due_batch=due_batch, depth=len(q), submitted=now)
+        return True
 
     def pending(self, tenant: Optional[str] = None) -> int:
+        """Queued REQUEST count (folded entries count every payload)."""
         if tenant is not None:
-            return len(self._queues.get(tenant, ()))
-        return sum(len(q) for q in self._queues.values())
+            return sum(len(p.payloads) for p in self._queues.get(tenant, ()))
+        return sum(len(p.payloads)
+                   for q in self._queues.values() for p in q)
+
+    def queue_depth(self, tenant: str) -> int:
+        """Pending ENTRY count — the quantity ``max_queue`` bounds."""
+        return len(self._queues.get(tenant, ()))
 
     def next_due(self) -> Optional[int]:
         dues = [p.due_batch for q in self._queues.values() for p in q]
         return min(dues) if dues else None
 
+    def oldest_age(self, tenant: str, batch_idx: int) -> Optional[int]:
+        """Age (in batches) of the tenant's oldest tracked submission."""
+        subs = [p.submitted for p in self._queues.get(tenant, ())
+                if p.submitted is not None]
+        return (batch_idx - min(subs)) if subs else None
+
     # -- the drain decision -------------------------------------------------
-    def due_groups(self, batch_idx: int) -> List[DrainGroup]:
+    def due_groups(self, batch_idx) -> List[DrainGroup]:
         """Pop and return the drain groups to run at ``batch_idx``.
 
         Coalesces each tenant's due requests (due_batch <= batch_idx) into
@@ -136,24 +235,48 @@ class DrainScheduler:
                                            min(p.seq for p in c[1])))
 
         if self.max_groups > 0 and len(candidates) > self.max_groups:
-            self.deferrals += len(candidates) - self.max_groups
+            deferred = candidates[self.max_groups:]
+            self.deferrals += len(deferred)
+            for tenant, due in deferred:
+                self.deferred_by[tenant] += 1
+                _t.emit("queue.defer", tenant=tenant,
+                        pending=sum(len(p.payloads) for p in due),
+                        oldest_due=min(p.due_batch for p in due))
             candidates = candidates[:self.max_groups]
 
+        finite = isinstance(batch_idx, int) and not isinstance(batch_idx,
+                                                               bool) \
+            or (isinstance(batch_idx, float) and math.isfinite(batch_idx))
         groups: List[DrainGroup] = []
         for tenant, due in candidates:
             taken = set(id(p) for p in due)
             self._queues[tenant] = [p for p in self._queues[tenant]
                                     if id(p) not in taken]
-            self._vtime[tenant] += len(due) / self._weights[tenant]
             due.sort(key=lambda p: p.seq)
+            payloads: List[Any] = []
+            ages: List[Optional[int]] = []
+            for p in due:
+                age = (int(batch_idx) - p.submitted
+                       if finite and p.submitted is not None else None)
+                for x in p.payloads:
+                    payloads.append(x)
+                    ages.append(age)
+            self._vtime[tenant] += len(payloads) / self._weights[tenant]
             groups.append(DrainGroup(
                 tenant=tenant,
-                payloads=tuple(p.payload for p in due),
-                due_batch=min(p.due_batch for p in due)))
+                payloads=tuple(payloads),
+                due_batch=min(p.due_batch for p in due),
+                ages=tuple(ages)))
         return groups
 
     def snapshot(self) -> Dict[str, Any]:
         return {"policy": self.policy, "max_groups": self.max_groups,
+                "max_queue": self.max_queue, "admission": self.admission,
                 "deferrals": self.deferrals,
-                "pending": {t: len(q) for t, q in self._queues.items()},
+                "deferred_by": dict(self.deferred_by),
+                "rejects": dict(self.rejects),
+                "merges": dict(self.merges),
+                "pending": {t: self.pending(t) for t in self._queues},
+                "queue_depth": {t: len(q)
+                                for t, q in self._queues.items()},
                 "vtime": dict(self._vtime)}

@@ -27,6 +27,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.api.specs import ServeSpec, UnlearnSpec, _require
 
 SCHEDULING_POLICIES = ("fair", "deadline")
+ADMISSION_POLICIES = ("defer", "reject")
 
 
 def _known_arch(arch: str) -> None:
@@ -123,11 +124,22 @@ class FleetSpec:
                     drain point (0 = every due tenant drains); deferred
                     tenants stay queued — this is what makes the
                     scheduling policy bite under burst load.
+    ``max_queue_per_tenant``  admission control: bound on each tenant's
+                    pending forget-queue entries (0 = unbounded).  The
+                    bound is what keeps a serving process's memory and
+                    queue age finite under overload.
+    ``admission``   what happens to a submit that would overflow the bound:
+                    ``"defer"`` folds it into the tenant's oldest pending
+                    entry (admitted, ages with it — never starves),
+                    ``"reject"`` refuses it with a structured telemetry
+                    event (the caller surfaces the refusal).
     """
     tenants: Tuple[TenantSpec, ...] = ()
     serve: ServeSpec = ServeSpec()
     scheduling: str = "fair"
     max_groups_per_drain: int = 0
+    max_queue_per_tenant: int = 0
+    admission: str = "defer"
 
     def __post_init__(self):
         tenants = self.tenants
@@ -163,6 +175,15 @@ class FleetSpec:
                  f"FleetSpec.max_groups_per_drain must be an int >= 0 "
                  f"(0 = drain every due tenant), "
                  f"got {self.max_groups_per_drain!r}")
+        _require(isinstance(self.max_queue_per_tenant, int)
+                 and not isinstance(self.max_queue_per_tenant, bool)
+                 and self.max_queue_per_tenant >= 0,
+                 f"FleetSpec.max_queue_per_tenant must be an int >= 0 "
+                 f"(0 = unbounded queue), "
+                 f"got {self.max_queue_per_tenant!r}")
+        _require(self.admission in ADMISSION_POLICIES,
+                 f"FleetSpec.admission must be one of {ADMISSION_POLICIES},"
+                 f" got {self.admission!r}")
         # the XLA compilation cache is PROCESS-global: per-tenant dirs
         # cannot coexist in one fleet (enable_compilation_cache would raise
         # at the second tenant's first compile — fail here, actionably)
@@ -195,7 +216,9 @@ class FleetSpec:
         return {"tenants": [t.to_dict() for t in self.tenants],
                 "serve": self.serve.to_dict(),
                 "scheduling": self.scheduling,
-                "max_groups_per_drain": self.max_groups_per_drain}
+                "max_groups_per_drain": self.max_groups_per_drain,
+                "max_queue_per_tenant": self.max_queue_per_tenant,
+                "admission": self.admission}
 
     @classmethod
     def from_dict(cls, d: Any) -> "FleetSpec":

@@ -90,6 +90,7 @@ from repro.api import (ServeSpec, UnlearnSpec, Unlearner,
 from repro.data import LMDataConfig, make_lm_domains
 from repro.fleet import Fleet, FleetSpec, TenantSpec
 from repro.models import lm as LM
+from repro.obs import telemetry as _t
 
 
 def generate(params, cfg, prompts: jax.Array, gen_len: int,
@@ -194,9 +195,11 @@ class ForgetService:
     # -- the legacy surface, delegated to the tenant runtime ---------------
     @property
     def queue(self) -> Deque[Dict]:
-        """Read-only view of the pending forget queue (legacy shape)."""
-        return deque({"domain": p.payload, "due_batch": p.due_batch}
-                     for p in self._fleet.scheduler._queues["default"])
+        """Read-only view of the pending forget queue (legacy shape — one
+        entry per REQUEST, so admission-deferred folds are expanded)."""
+        return deque({"domain": d, "due_batch": p.due_batch}
+                     for p in self._fleet.scheduler._queues["default"]
+                     for d in p.payloads)
 
     @property
     def adapter(self):
@@ -381,9 +384,11 @@ def _main_fleet(args) -> dict:
                            jnp.asarray(tenant_batches[name][bi]),
                            args.gen_len, decode_jits[rt.arch],
                            prefill_block=args.prefill_block)
-            served[name].append({"batch": bi,
-                                 "latency_s": round(time.time() - t0, 3),
-                                 "tokens": int(gen.size)})
+            entry = {"batch": bi,
+                     "latency_s": round(time.time() - t0, 3),
+                     "tokens": int(gen.size)}
+            served[name].append(entry)
+            _t.emit("request.generate", tenant=name, **entry)
         fleet.drain(bi + 1)
     # flush requests still queued past the last served batch — a forget
     # request must never be silently dropped at shutdown (the per-drain
@@ -413,7 +418,7 @@ def _main_fleet(args) -> dict:
         "fleet_stats": fleet.stats(),
         "compilation_cache": cache_info,
     }
-    print(f"[serve] fleet done: {json.dumps(result)}", flush=True)
+    _t.log("serve", f"fleet done: {json.dumps(result)}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
@@ -524,16 +529,16 @@ def _main_fleet(args) -> dict:
                 f"({cache_info['entries_before']} entries) still compiled "
                 f"{cache_info['entries_new']} new program(s)")
         if problems:
-            print("[serve] FLEET CHECK FAILED: " + "; ".join(problems),
-                  flush=True)
+            _t.log("serve", "FLEET CHECK FAILED: " + "; ".join(problems))
             raise SystemExit(1)
         cache_stats = fleet.programs.stats()
-        print(f"[serve] fleet check ok: {len(fleet.tenants)} tenant(s), "
-              f"{sum(rt.groups for rt in fleet.tenants.values())} drain "
-              f"group(s), {cache_stats['compiles']} program compiles / "
-              f"{cache_stats['hits']} shared-cache hits across "
-              f"{cache_stats['sessions']} engine session(s); tenant "
-              f"{pick!r} solo replay bit-identical", flush=True)
+        _t.log("serve",
+               f"fleet check ok: {len(fleet.tenants)} tenant(s), "
+               f"{sum(rt.groups for rt in fleet.tenants.values())} drain "
+               f"group(s), {cache_stats['compiles']} program compiles / "
+               f"{cache_stats['hits']} shared-cache hits across "
+               f"{cache_stats['sessions']} engine session(s); tenant "
+               f"{pick!r} solo replay bit-identical")
     return result
 
 
@@ -649,8 +654,10 @@ def main(argv=None) -> dict:
         t0 = time.time()
         gen = generate(params, cfg, jnp.asarray(prompts), args.gen_len,
                        decode_jit, prefill_block=args.prefill_block)
-        served.append({"batch": bi, "latency_s": round(time.time() - t0, 3),
-                       "tokens": int(gen.size)})
+        entry = {"batch": bi, "latency_s": round(time.time() - t0, 3),
+                 "tokens": int(gen.size)}
+        served.append(entry)
+        _t.emit("request.generate", tenant="default", **entry)
         params, _ = svc.drain(params, bi + 1)
     # flush requests still queued past the last served batch — a forget
     # request must never be silently dropped at shutdown
@@ -681,7 +688,7 @@ def main(argv=None) -> dict:
               "serve_spec": svc.serve_spec.to_dict(),
               "compilation_cache": cache_info,
               "fisher_refresh": refresh_info}
-    print(f"[serve] done: {json.dumps(result)}", flush=True)
+    _t.log("serve", f"done: {json.dumps(result)}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
@@ -775,7 +782,7 @@ def main(argv=None) -> dict:
                     f"{stale['refreshed_rel_err']:.4f}) — the streamed "
                     "refresh failed its staleness oracle")
         if problems:
-            print("[serve] CHECK FAILED: " + "; ".join(problems), flush=True)
+            _t.log("serve", "CHECK FAILED: " + "; ".join(problems))
             raise SystemExit(1)
         n_req = sum(g["requests"] for g in svc.group_log)
         extra = ""
@@ -786,9 +793,10 @@ def main(argv=None) -> dict:
                      f"{stale.get('stale_rel_err', float('nan')):.4f}"
                      f" -> {stale.get('refreshed_rel_err', float('nan')):.4f}")
         mode = svc.spec.exec.sweep_mode
-        print(f"[serve] check ok: {n_req} request(s) in {svc.groups} "
-              f"group(s), one {mode} sweep per drain, zero recompiles "
-              f"after the first drain{extra}", flush=True)
+        _t.log("serve",
+               f"check ok: {n_req} request(s) in {svc.groups} "
+               f"group(s), one {mode} sweep per drain, zero recompiles "
+               f"after the first drain{extra}")
     return result
 
 

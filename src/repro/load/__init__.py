@@ -1,0 +1,14 @@
+"""Synthetic load harness: seeded arrival processes over a virtual clock
+driving the multi-tenant fleet, with declarative SLO specs (DESIGN.md §14).
+
+    from repro.load import ArrivalSpec, LoadScenario, LoadHarness, SLOSpec
+
+Everything here is deterministic by construction — no wall-clock reads
+(``tools/api_gate.py`` AST-enforces that for this package), all randomness
+threaded through seeded generators — so two runs of the same scenario
+produce identical telemetry streams modulo wall-clock latency fields.
+"""
+from .arrivals import ARRIVAL_KINDS, ArrivalProcess, ArrivalSpec  # noqa: F401
+from .harness import (LoadHarness, LoadScenario,  # noqa: F401
+                      build_lm_tenant)
+from .slo import SLOSpec  # noqa: F401

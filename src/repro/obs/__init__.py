@@ -1,0 +1,22 @@
+"""Observability subsystem: structured telemetry stream + streaming
+metrics + the SLO report renderer (DESIGN.md §14).
+
+    from repro.obs import telemetry
+
+    with telemetry.capture(path="events.jsonl") as t:
+        ... drive the fleet ...
+    print(telemetry.fingerprint(t.events))
+
+``telemetry`` is the process-wide structured event emitter (JSONL
+time-series on a monotonic virtual clock) the fleet scheduler, engine
+session, program cache, Fisher refresh and serving loop all hook into;
+``metrics`` holds counters/gauges and the streaming P² quantile sketch;
+``report`` renders a captured event stream into a markdown SLO report.
+"""
+from .metrics import (Counter, Gauge, MetricsRegistry,  # noqa: F401
+                      P2Quantile, Summary)
+from .report import render, summarize  # noqa: F401
+from .telemetry import (NONDETERMINISTIC_KEYS, Telemetry,  # noqa: F401
+                        VirtualClock, canonical_events, capture, emit,
+                        emitter, fingerprint, install, log, read_jsonl,
+                        wall_time)

@@ -1,0 +1,338 @@
+"""Load-and-observability subsystem (repro.obs + repro.load) tests:
+
+  * telemetry: virtual-clock monotonicity, structured emit + JSONL round
+    trip, the canonical (wall-clock-stripped) determinism view and its
+    fingerprint, the process-wide emitter install/capture discipline, and
+    the BIT-IDENTICAL stdout contract of ``telemetry.log``;
+  * metrics: the P² streaming quantile sketch against numpy's exact
+    percentiles, exactness below five samples, Summary/MetricsRegistry
+    rollups;
+  * arrivals: seeded determinism (same spec -> identical trace, different
+    seed -> different trace), the bursty/diurnal rate modulation shapes,
+    spec validation + JSON round trip;
+  * SLO specs: evaluation semantics (missing metric FAILS its objective;
+    unset objectives don't participate) + round trip;
+  * the harness: two seeded runs over a stub fleet produce fingerprint-
+    identical event streams, the summary rollup agrees with the scheduler
+    accounting, and the report renderer produces the expected sections.
+
+The stub fleet exercises the real DrainScheduler and telemetry plumbing
+without JAX; the engine-integrated path is covered by
+benchmarks/load_bench.py and tests/test_fleet.py.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.fleet import DrainScheduler
+from repro.load import ArrivalSpec, LoadHarness, LoadScenario, SLOSpec
+from repro.obs import (P2Quantile, Summary, render, summarize, telemetry)
+
+
+# -- telemetry ---------------------------------------------------------------
+
+def test_virtual_clock_monotonic():
+    c = telemetry.VirtualClock()
+    assert c.now() == 0
+    assert c.advance_to(3) == 3
+    assert c.advance(2) == 5
+    with pytest.raises(ValueError, match="monotonic"):
+        c.advance_to(4)
+    with pytest.raises(ValueError):
+        c.advance(-1)
+    with pytest.raises(ValueError):
+        telemetry.VirtualClock(start=1.5)
+
+
+def test_emit_jsonl_round_trip(tmp_path):
+    p = str(tmp_path / "ev.jsonl")
+    with telemetry.Telemetry(path=p) as tel:
+        tel.clock.advance_to(2)
+        tel.emit("queue.enqueue", tenant="a", depth=np.int64(3),
+                 payloads=(1, 2))
+        tel.emit("drain.group", tenant="a", ages=[0, None])
+    back = telemetry.read_jsonl(p)
+    assert back == tel.events
+    assert back[0] == {"seq": 0, "t": 2, "kind": "queue.enqueue",
+                       "tenant": "a", "depth": 3, "payloads": [1, 2]}
+    assert back[1]["ages"] == [0, None]
+    assert tel.counts == {"queue.enqueue": 1, "drain.group": 1}
+
+
+def test_canonical_events_and_fingerprint():
+    a = [{"seq": 0, "t": 1, "kind": "drain.group", "latency_s": 0.123,
+          "nested": {"wall_s": 9.0, "keep": 1}, "ages": [1, 2]}]
+    b = [{"seq": 0, "t": 1, "kind": "drain.group", "latency_s": 7.777,
+          "nested": {"wall_s": 0.1, "keep": 1}, "ages": [1, 2]}]
+    ca = telemetry.canonical_events(a)
+    assert "latency_s" not in ca[0]
+    assert ca[0]["nested"] == {"keep": 1}          # recursive strip
+    assert telemetry.fingerprint(a) == telemetry.fingerprint(b)
+    c = [{**a[0], "ages": [1, 3]}]                 # deterministic field
+    assert telemetry.fingerprint(a) != telemetry.fingerprint(c)
+
+
+def test_log_stdout_bit_identical(capsys):
+    telemetry.log("serve", "batch 3: done")
+    no_emitter = capsys.readouterr().out
+    with telemetry.capture() as tel:
+        telemetry.log("serve", "batch 3: done", batch=3)
+    with_emitter = capsys.readouterr().out
+    assert no_emitter == with_emitter == "[serve] batch 3: done\n"
+    (ev,) = tel.events
+    assert ev["kind"] == "log" and ev["tag"] == "serve" \
+        and ev["msg"] == "batch 3: done" and ev["batch"] == 3
+
+
+def test_capture_restores_previous_emitter():
+    assert telemetry.emitter() is None
+    with telemetry.capture() as outer:
+        assert telemetry.emitter() is outer
+        with telemetry.capture() as inner:
+            assert telemetry.emitter() is inner
+            telemetry.emit("x")
+        assert telemetry.emitter() is outer
+    assert telemetry.emitter() is None
+    assert telemetry.emit("dropped") is None       # no-op uninstalled
+    assert inner.counts == {"x": 1} and outer.counts == {}
+
+
+# -- metrics -----------------------------------------------------------------
+
+def test_p2_quantile_tracks_numpy():
+    rng = np.random.Generator(np.random.PCG64(7))
+    data = rng.exponential(scale=3.0, size=4000)
+    for q in (0.5, 0.9, 0.99):
+        sk = P2Quantile(q)
+        for x in data:
+            sk.update(x)
+        exact = float(np.percentile(data, q * 100))
+        spread = float(data.max() - data.min())
+        assert abs(sk.value - exact) / spread < 0.05, \
+            f"q={q}: sketch {sk.value} vs exact {exact}"
+
+
+def test_p2_quantile_exact_small_and_validation():
+    sk = P2Quantile(0.5)
+    assert sk.value is None
+    for x in (5.0, 1.0, 3.0):
+        sk.update(x)
+    assert sk.value == 3.0                          # exact below 5 samples
+    with pytest.raises(ValueError, match="in \\(0, 1\\)"):
+        P2Quantile(1.0)
+
+
+def test_summary_rollup():
+    s = Summary()
+    for x in range(1, 101):
+        s.observe(float(x))
+    d = s.to_dict()
+    assert d["count"] == 100 and d["min"] == 1.0 and d["max"] == 100.0
+    assert d["mean"] == pytest.approx(50.5)
+    assert d["p50"] == pytest.approx(50.0, abs=3.0)
+    assert d["p99"] == pytest.approx(99.0, abs=3.0)
+    with pytest.raises(ValueError, match="no q="):
+        s.quantile(0.75)
+
+
+# -- arrivals ----------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ("poisson", "bursty", "diurnal"))
+def test_arrivals_seeded_determinism(kind):
+    spec = ArrivalSpec(kind=kind, rate=2.0, seed=4)
+    p1, p2 = spec.build(), spec.build()
+    t1 = [p1.counts(t) for t in range(40)]
+    t2 = [p2.counts(t) for t in range(40)]
+    assert t1 == t2
+    p3 = ArrivalSpec(kind=kind, rate=2.0, seed=5).build()
+    t3 = [p3.counts(t) for t in range(40)]
+    assert t1 != t3
+    assert sum(t1) > 0
+
+
+def test_arrival_rate_shapes():
+    bursty = ArrivalSpec(kind="bursty", rate=1.0, burst_factor=2.0,
+                         duty=0.25, period=4).build()
+    # one on-tick per period at 2x, off ticks compensate to keep the mean
+    rates = [bursty.rate_at(t) for t in range(4)]
+    assert rates[0] == 2.0 and all(r < 1.0 for r in rates[1:])
+    assert sum(rates) / 4 == pytest.approx(1.0)
+    # an over-budget burst clips the off phase at zero instead of going
+    # negative (the long-run mean is then dominated by the burst)
+    hot = ArrivalSpec(kind="bursty", rate=1.0, burst_factor=8.0,
+                      duty=0.25, period=4).build()
+    assert [hot.rate_at(t) for t in range(4)] == [8.0, 0.0, 0.0, 0.0]
+    diurnal = ArrivalSpec(kind="diurnal", rate=2.0, period=8,
+                          amplitude=0.5).build()
+    rs = [diurnal.rate_at(t) for t in range(8)]
+    assert min(rs) >= 0 and max(rs) <= 3.0 + 1e-9
+    assert rs == [diurnal.rate_at(t + 8) for t in range(8)]  # periodic
+
+
+def test_arrival_spec_validation_and_round_trip():
+    spec = ArrivalSpec(kind="bursty", rate=0.5, seed=2, burst_factor=4.0)
+    assert ArrivalSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) \
+        == spec
+    with pytest.raises(ValueError, match="kind"):
+        ArrivalSpec(kind="weibull", rate=1.0)
+    with pytest.raises(ValueError, match="rate"):
+        ArrivalSpec(kind="poisson", rate=-1.0)
+    with pytest.raises(ValueError, match="unknown"):
+        ArrivalSpec.from_dict({"kind": "poisson", "rate": 1.0, "nope": 1})
+
+
+# -- scenario + SLO specs ----------------------------------------------------
+
+def test_load_scenario_round_trip_and_validation():
+    sc = LoadScenario(ticks=8, warmup_ticks=2,
+                      forget=ArrivalSpec(kind="bursty", rate=1.0))
+    again = LoadScenario.from_json(sc.to_json())
+    assert again == sc
+    assert isinstance(again.forget, ArrivalSpec)   # dict coerced back
+    with pytest.raises(ValueError, match="ticks"):
+        LoadScenario(ticks=0)
+    with pytest.raises(ValueError, match="forget"):
+        LoadScenario(forget="lots")
+
+
+def test_slo_spec_evaluation_semantics():
+    spec = SLOSpec(max_queue_age_p99=5.0, max_queue_depth=2,
+                   min_drain_throughput=1.0)
+    summary = {"fleet": {"queue_age": {"p99": 4.0}, "queue_depth_max": 2,
+                         "drain_throughput": 1.5}}
+    ev = spec.evaluate(summary)
+    assert ev["ok"] and ev["attained"] == 1.0 and len(ev["objectives"]) == 3
+    # a missing metric FAILS its objective — absence must not pass
+    ev2 = spec.evaluate({"fleet": {"queue_age": {}, "queue_depth_max": 2,
+                                   "drain_throughput": 1.5}})
+    assert not ev2["ok"] and ev2["attained"] == pytest.approx(2 / 3)
+    # unset objectives don't participate at all
+    assert SLOSpec().evaluate({"fleet": {}})["ok"]
+    assert SLOSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="max_reject_fraction"):
+        SLOSpec(max_reject_fraction=1.5)
+
+
+# -- harness over a stub fleet ----------------------------------------------
+
+class _StubFleet:
+    """The Fleet surface LoadHarness drives, minus JAX: the REAL scheduler
+    and telemetry, a drain loop that emits the same ``drain.group`` shape."""
+
+    def __init__(self, names=("a", "b"), **sched_kw):
+        self.scheduler = DrainScheduler("fair", **sched_kw)
+        self.tenants = {}
+        for n in names:
+            self.scheduler.register(n)
+            self.tenants[n] = object()
+
+    def submit(self, tenant, payload, due_batch, *, now=None):
+        return self.scheduler.submit(tenant, payload, due_batch, now=now)
+
+    def drain(self, batch_idx):
+        groups = self.scheduler.due_groups(batch_idx)
+        for g in groups:
+            telemetry.emit("drain.group", tenant=g.tenant,
+                           n_requests=len(g.payloads), ages=list(g.ages),
+                           due_batch=g.due_batch,
+                           latency_s=telemetry.wall_time() % 1.0)
+        return groups
+
+
+def _scenario(**kw):
+    base = dict(ticks=12, warmup_ticks=2, deadline_slack=1,
+                forget=ArrivalSpec(kind="bursty", rate=1.0, seed=3,
+                                   period=4, burst_factor=6.0),
+                generate=ArrivalSpec(kind="poisson", rate=0.5, seed=5),
+                domains=3, seed=7)
+    base.update(kw)
+    return LoadScenario(**base)
+
+
+def _run(sc, **fleet_kw):
+    kw = dict(max_queue=2, admission="defer", max_groups=1)
+    kw.update(fleet_kw)
+    return LoadHarness(_StubFleet(**kw), sc).run()
+
+
+def test_harness_seeded_determinism():
+    sc = _scenario()
+    r1, r2 = _run(sc), _run(sc)
+    assert r1["fingerprint"] == r2["fingerprint"]
+    assert r1["event_counts"] == r2["event_counts"]
+    assert r1["fleet"]["submitted"] == r2["fleet"]["submitted"] > 0
+    # a different scenario seed is a different stream
+    assert _run(_scenario(seed=8))["fingerprint"] != r1["fingerprint"]
+
+
+def test_harness_summary_matches_scheduler_accounting():
+    res = _run(_scenario())
+    fleet, snap = res["fleet"], res["scheduler"]
+    assert fleet["submitted"] == res["admitted"] > 0
+    assert fleet["merged"] == sum(snap["merges"].values()) > 0
+    assert fleet["deferrals"] == snap["deferrals"]
+    assert fleet["drained_requests"] == res["admitted"]   # flush conserves
+    assert fleet["queue_depth_max"] <= 2
+    assert all(v == 0 for v in snap["pending"].values())
+    assert fleet["queue_age"]["count"] == fleet["drained_requests"]
+    assert fleet["queue_age"]["p99"] is not None
+    # wall-clock latency never enters the fingerprinted view
+    assert "latency_s" not in json.dumps(
+        telemetry.canonical_events(
+            [{"kind": "drain.group", "latency_s": 1.0}]))
+
+
+def test_harness_reject_admission_accounting():
+    res = _run(_scenario(forget=ArrivalSpec(kind="poisson", rate=4.0,
+                                            seed=3)),
+               admission="reject", max_queue=1)
+    assert res["rejected_submits"] > 0
+    assert res["rejected_submits"] == res["fleet"]["rejected"] \
+        == sum(res["scheduler"]["rejects"].values()) \
+        == res["event_counts"]["queue.reject"]
+    assert res["fleet"]["drained_requests"] == res["admitted"]
+
+
+def test_harness_validation():
+    with pytest.raises(ValueError, match="LoadScenario"):
+        LoadHarness(_StubFleet(), scenario="fast")
+    with pytest.raises(ValueError, match="at least one"):
+        LoadHarness(_StubFleet(names=()), _scenario())
+
+
+# -- report ------------------------------------------------------------------
+
+def test_report_render_sections():
+    res = _run(_scenario())
+    md = render(res, SLOSpec(max_queue_depth=2).evaluate(res))
+    for section in ("# Unlearning fleet SLO report", "## SLO attainment",
+                    "## Fleet", "## Queue age and drain latency",
+                    "## Per-tenant drains", "## Compile economics"):
+        assert section in md
+    assert "| queue_depth_max <= max | 2 |" in md
+
+
+def test_report_cli_round_trip(tmp_path):
+    ev_path = str(tmp_path / "events.jsonl")
+    sc = _scenario()
+    fleet = _StubFleet(max_queue=2, admission="defer", max_groups=1)
+    tel = telemetry.Telemetry(path=ev_path,
+                              clock=telemetry.VirtualClock())
+    try:
+        LoadHarness(fleet, sc).run(tel)
+    finally:
+        tel.close()
+    from repro.obs import report as report_mod
+    out = str(tmp_path / "report.md")
+    slo_ok = str(tmp_path / "slo_ok.json")
+    with open(slo_ok, "w") as f:
+        f.write(SLOSpec(max_queue_depth=2).to_json())
+    assert report_mod.main([ev_path, "-o", out, "--slo", slo_ok,
+                            "--warmup-t", "2"]) == 0
+    md = open(out).read()
+    assert "PASS" in md
+    slo_bad = str(tmp_path / "slo_bad.json")
+    with open(slo_bad, "w") as f:
+        f.write(SLOSpec(max_queue_depth=1).to_json())   # depth hit 2
+    assert report_mod.main([ev_path, "-o", out, "--slo", slo_bad]) == 1

@@ -14,7 +14,13 @@ files
     the fleet so queues share ONE scheduler and ONE program cache), or
   * adds a bare ``assert`` statement under ``src/repro`` (user-facing
     validation raises ``ValueError`` with an actionable message; asserts
-    vanish under ``python -O`` — the PR-6 sweep must stay converged).
+    vanish under ``python -O`` — the PR-6 sweep must stay converged), or
+  * reads the wall clock inside ``src/repro/load`` or ``src/repro/fleet``
+    (``import time`` / ``from time import ...`` / ``datetime.now`` etc.).
+    Those packages run on the virtual clock — determinism of the load
+    harness's event fingerprint depends on it — and the ONE sanctioned
+    wall-clock read is ``repro.obs.telemetry.wall_time`` (whose outputs
+    land only in fields ``canonical_events`` strips).
 
 Scanned trees: src/repro, benchmarks, examples.  tests/ are exempt — they
 exercise the engine layer itself by design (tests/test_engine.py).
@@ -57,6 +63,12 @@ FORGET_SERVICE_RULE = (
     re.compile(r"\bForgetService\("),
     "constructs ForgetService directly (route serving through "
     "repro.fleet.Fleet, or the serve.py CLI for the single-tenant shim)")
+# virtual-clock trees: no wall-clock reads; latency measurement goes
+# through repro.obs.telemetry.wall_time (stripped by canonical_events)
+WALL_CLOCK_SCAN = ("src/repro/load", "src/repro/fleet")
+_WALL_CLOCK_MODULES = {"time", "datetime"}
+_WALL_CLOCK_ATTRS = {"time", "monotonic", "perf_counter", "process_time",
+                     "now", "utcnow", "today"}
 
 
 def _bare_asserts(path: Path, rp: str):
@@ -72,6 +84,42 @@ def _bare_asserts(path: Path, rp: str):
             for node in ast.walk(tree) if isinstance(node, ast.Assert)]
 
 
+def _wall_clock_reads(path: Path, rp: str):
+    """Wall-clock access in the virtual-clock trees, via the AST: any
+    import of the ``time``/``datetime`` modules, and any
+    ``time.time()``/``datetime.now()``-style attribute read.  The load
+    harness's determinism fingerprint depends on these packages never
+    touching real time except through the sanctioned
+    ``repro.obs.telemetry.wall_time``."""
+    try:
+        tree = ast.parse(path.read_text(), filename=rp)
+    except SyntaxError as e:
+        return [f"{rp}:{e.lineno}: does not parse ({e.msg})"]
+    fix = ("virtual-clock package — measure latency via "
+           "repro.obs.telemetry.wall_time and keep scheduling on the "
+           "batch index")
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".", 1)[0]
+                if root in _WALL_CLOCK_MODULES:
+                    out.append(f"{rp}:{node.lineno}: imports "
+                               f"{alias.name!r} in a {fix}")
+        elif isinstance(node, ast.ImportFrom):
+            root = (node.module or "").split(".", 1)[0]
+            if root in _WALL_CLOCK_MODULES:
+                out.append(f"{rp}:{node.lineno}: imports from "
+                           f"{node.module!r} in a {fix}")
+        elif (isinstance(node, ast.Attribute)
+              and node.attr in _WALL_CLOCK_ATTRS
+              and isinstance(node.value, ast.Name)
+              and node.value.id in _WALL_CLOCK_MODULES):
+            out.append(f"{rp}:{node.lineno}: reads "
+                       f"{node.value.id}.{node.attr} in a {fix}")
+    return out
+
+
 def main(argv=None) -> int:
     problems = []
     for rel in SCAN:
@@ -79,6 +127,8 @@ def main(argv=None) -> int:
             rp = path.relative_to(ROOT).as_posix()
             if rp.startswith(ASSERT_SCAN) and rp not in ALLOW:
                 problems.extend(_bare_asserts(path, rp))
+            if rp.startswith(WALL_CLOCK_SCAN):
+                problems.extend(_wall_clock_reads(path, rp))
             if rp in ALLOW:
                 continue
             rules = RULES if rp in ALLOW_FORGET_SERVICE \
@@ -96,8 +146,9 @@ def main(argv=None) -> int:
             print("  " + p)
         return 1
     print("[api-gate] ok: no _mode_config use, direct UnlearnSession/"
-          "ForgetService construction, or bare asserts outside the "
-          f"facade/shim (scanned {', '.join(SCAN)})")
+          "ForgetService construction, bare asserts outside the "
+          "facade/shim, or wall-clock reads in "
+          f"{', '.join(WALL_CLOCK_SCAN)} (scanned {', '.join(SCAN)})")
     return 0
 
 
