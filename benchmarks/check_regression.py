@@ -74,10 +74,20 @@ ABS_GATES = {
     # the fleet's shared-program-cache contract (repro.fleet): N
     # same-family tenants compile exactly the N=1 program set (ratio
     # pinned to 1.0 — tenant count must not multiply compiles), and a
-    # warm drain round across every tenant replays with zero compiles
+    # warm drain round across every tenant replays with zero compiles.
+    # The serve_stream_* keys are the zero-downtime contract (DESIGN.md
+    # §15, benchmarks/serve_latency_bench.py): decode-step p99 with two
+    # mid-stream shadow drains within 20% of drain-free — both measured
+    # in the SAME run, so machine speed cancels — plus every fired drain
+    # published atomically, ONE decode program signature across
+    # publications, and a run-to-run identical engine event stream.
     "BENCH_serve.json": (
         ("fleet_shared_compile_ratio", 1.0, 1.0),
         ("fleet_warm_drain_compiles", 0, 0),
+        ("serve_stream_p99_ratio", 0.0, 1.2),
+        ("serve_stream_publications", 2, 2),
+        ("serve_stream_decode_signatures", 1, 1),
+        ("serve_stream_deterministic", 1, 1),
     ),
     # the load/observability SLO contract (repro.load + repro.obs): every
     # declared objective met, zero program compiles in steady state (warm

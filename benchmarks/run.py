@@ -12,16 +12,18 @@ from __future__ import annotations
 import sys
 import time
 
-# jobs quick enough for the CI smoke lane (no model training required)
-SMOKE_JOBS = ("kernels", "compression", "load")
+# jobs quick enough for the CI smoke lane (no model training required).
+# serve_latency MERGES into BENCH_serve.json, which kernels_bench's
+# serve_bench overwrites — keep it after "kernels" in the order.
+SMOKE_JOBS = ("kernels", "compression", "load", "serve_latency")
 
 
 def main() -> None:
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     t0 = time.time()
     from . import (compression_bench, fig3_selection, kernels_bench,
-                   load_bench, roofline_report, table1_cau, table2_bd,
-                   table4_e2e)
+                   load_bench, roofline_report, serve_latency_bench,
+                   table1_cau, table2_bd, table4_e2e)
 
     jobs = {
         "table1": table1_cau.main,
@@ -31,6 +33,7 @@ def main() -> None:
         "kernels": kernels_bench.main,
         "compression": compression_bench.main,
         "load": load_bench.main,
+        "serve_latency": serve_latency_bench.main,
         "roofline": roofline_report.main,
     }
     if which == "--smoke":

@@ -165,6 +165,7 @@ class RefreshSpec:
 _SHARDING_MODES = ("tp", "fsdp")
 _SWEEP_MODES = ("layerwise", "scanned")
 _PRECISIONS = ("fp32", "int8")
+_PUBLISH_MODES = ("immediate", "step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,6 +319,28 @@ class ServeSpec:
                         a fleet shares ONE dir, see ``FleetSpec``).
     ``max_forget_samples``  per-request forget-batch cap (the serving
                         harness slices each domain's forget split to this).
+    ``publish``         how a drain's edits reach the served weights:
+                        ``"immediate"`` (the historical in-place semantics —
+                        ``Fleet.drain`` installs the swept tree before
+                        returning, bit-identical to every pre-existing
+                        caller) or ``"step"`` — the sweep runs against a
+                        SHADOW copy of the live tree and the result is
+                        STAGED; publication is an atomic pointer swap the
+                        serving engine performs only between decode steps
+                        (``TenantRuntime.publish_staged``), so a decode
+                        step can never observe a half-edited tree.
+    ``max_batch``       continuous-batching decode slot-pool width (the
+                        stream engine's fixed [B] decode batch).
+    ``admit_chunk``     max sequences admitted per engine step; admission
+                        prefills a fixed-width sub-batch of this size (one
+                        compiled prefill/scatter program for every
+                        admission, padding rows dropped).
+    ``publish_lag``     steps between firing a drain and its deadline
+                        publication: the engine joins the background sweep
+                        and swaps pointers exactly ``publish_lag`` steps
+                        after the drain fired, making the publication step
+                        — and with it the telemetry event stream —
+                        deterministic regardless of sweep-thread timing.
 
     JSON round-trip via ``to_json``/``from_json``; validation raises
     ``ValueError`` with actionable messages, never ``assert`` — the same
@@ -332,6 +355,10 @@ class ServeSpec:
     precision: str = "fp32"
     cache_dir: Optional[str] = None
     max_forget_samples: int = 8
+    publish: str = "immediate"
+    max_batch: int = 8
+    admit_chunk: int = 4
+    publish_lag: int = 16
 
     def __post_init__(self):
         _require(isinstance(self.chunk_size, int)
@@ -361,6 +388,31 @@ class ServeSpec:
                  and self.max_forget_samples >= 1,
                  f"ServeSpec.max_forget_samples must be an int >= 1, "
                  f"got {self.max_forget_samples!r}")
+        _require(self.publish in _PUBLISH_MODES,
+                 f"ServeSpec.publish must be one of {_PUBLISH_MODES} "
+                 f'("immediate" installs a drain\'s edits in place, "step" '
+                 f"stages them for an atomic between-steps pointer swap), "
+                 f"got {self.publish!r}")
+        _require(isinstance(self.max_batch, int)
+                 and not isinstance(self.max_batch, bool)
+                 and self.max_batch >= 1,
+                 f"ServeSpec.max_batch must be an int >= 1 (the decode "
+                 f"slot-pool width), got {self.max_batch!r}")
+        _require(isinstance(self.admit_chunk, int)
+                 and not isinstance(self.admit_chunk, bool)
+                 and 1 <= self.admit_chunk,
+                 f"ServeSpec.admit_chunk must be an int >= 1, "
+                 f"got {self.admit_chunk!r}")
+        _require(self.admit_chunk <= self.max_batch,
+                 f"ServeSpec.admit_chunk ({self.admit_chunk}) cannot exceed "
+                 f"max_batch ({self.max_batch}) — an admission sub-batch "
+                 f"scatters into free pool slots")
+        _require(isinstance(self.publish_lag, int)
+                 and not isinstance(self.publish_lag, bool)
+                 and self.publish_lag >= 1,
+                 f"ServeSpec.publish_lag must be an int >= 1 step "
+                 f"(publication is always between decode steps), "
+                 f"got {self.publish_lag!r}")
 
     def to_unlearn_spec(self) -> "UnlearnSpec":
         """Lower to the deployment's engine-facing ``UnlearnSpec`` — the

@@ -73,6 +73,16 @@ class TenantRuntime:
         self.unlearner: Optional[Unlearner] = None
         self._programs = programs
         self.params = None               # installed by the fleet / adapter
+        # -- double-buffered publication state (DESIGN.md §15) --
+        # ``params`` is the LIVE tree decode reads; a shadow sweep edits a
+        # functional copy and the result waits in ``_staged`` until
+        # ``publish_staged`` swaps the pointer between decode steps.
+        # ``_shadow_chain`` threads successive shadow sweeps: drain k+1
+        # starts from drain k's OUTPUT even before k is published, so the
+        # published content is deterministic regardless of publish timing.
+        self.params_version = 0
+        self._staged = None
+        self._shadow_chain = None
         self.log: List[Dict] = []        # one entry per domain request
         self.group_log: List[Dict] = []  # one entry per coalesced sweep
         self.refresh_log: List[Dict] = []  # one entry per Fisher refresh
@@ -271,6 +281,54 @@ class TenantRuntime:
         self.maybe_refresh(params, batch_idx)
         return params, True
 
+    # -- double-buffered publication (DESIGN.md §15) -------------------------
+    def run_due_shadow(self, due_domains, batch_idx):
+        """Drain body against the SHADOW tree: the live ``params`` pointer
+        is never touched.  Returns ``(tree, ran)`` — the caller decides
+        when to stage/publish the result (the serving engine publishes at
+        a deterministic step deadline).
+
+        The sweep itself is functional (``run_due`` returns a new tree),
+        so "shadow" costs nothing beyond not assigning ``self.params``:
+        bit-exactness vs the in-place path is asserted by
+        tests/test_stream.py.
+        """
+        base = self._shadow_chain if self._shadow_chain is not None \
+            else self.params
+        tree, ran = self.run_due(base, list(due_domains), batch_idx)
+        if ran:
+            self._shadow_chain = tree
+        return tree, ran
+
+    def stage(self, tree) -> None:
+        """Park a shadow-sweep result for the next ``publish_staged``."""
+        self._staged = tree
+
+    def discard_shadow(self) -> None:
+        """Drop unpublished shadow state — the next shadow sweep starts
+        from the live tree again (bench warmup hygiene)."""
+        self._staged = None
+        self._shadow_chain = None
+
+    def publish_staged(self, step=None) -> bool:
+        """Atomically swap the staged tree into ``params``.
+
+        A pointer assignment is atomic under the GIL, and the serving
+        engine only calls this BETWEEN decode steps — so a decode step
+        observes either the old tree or the new one, never a mix.
+        Returns True when a publication happened.
+        """
+        if self._staged is None:
+            return False
+        self.params = self._staged
+        self._staged = None
+        self.params_version += 1
+        _t.emit("params.publish", tenant=self.name, step=step,
+                version=self.params_version)
+        _t.log(self.tag, f"published params v{self.params_version}"
+               + (f" at step {step}" if step is not None else ""))
+        return True
+
 
 class Fleet:
     """N tenant runtimes + ONE scheduler + ONE shared program cache."""
@@ -371,19 +429,38 @@ class Fleet:
         return self.scheduler.submit(tenant, int(domain), due_batch,
                                      now=now)
 
-    def drain(self, batch_idx) -> List[Dict]:
+    def drain(self, batch_idx, *, publish: str = "immediate") -> List[Dict]:
         """Run every drain group the scheduler selects at ``batch_idx``.
 
         Each group is one tenant's coalesced due requests → one engine
         sweep over that tenant's weights.  Returns the new drain-log
-        entries (also appended to ``self.drain_log``)."""
+        entries (also appended to ``self.drain_log``).
+
+        ``publish`` mirrors ``ServeSpec.publish``: ``"immediate"`` installs
+        each sweep's result in place (the legacy path — bit-identical);
+        ``"step"`` runs the sweep against the tenant's shadow tree and
+        STAGES the result — the live ``params`` is untouched until the
+        caller invokes ``TenantRuntime.publish_staged`` between decode
+        steps (the serving engine's deterministic step deadline).
+        """
+        if publish not in ("immediate", "step"):
+            raise ValueError(f"Fleet.drain publish must be 'immediate' or "
+                             f"'step', got {publish!r}")
         entries: List[Dict] = []
         for g in self.scheduler.due_groups(batch_idx):
             rt = self.tenants[g.tenant]
             groups_before = rt.groups
             t0 = wall_time()
-            rt.params, ran = rt.run_due(rt.params, list(g.payloads),
-                                        batch_idx)
+            if publish == "step":
+                tree, ran = rt.run_due_shadow(list(g.payloads), batch_idx)
+                if ran:
+                    rt.stage(tree)
+            else:
+                rt.params, ran = rt.run_due(rt.params, list(g.payloads),
+                                            batch_idx)
+                # an in-place drain advances the live tree past any shadow
+                # chain — reset so a later shadow sweep starts from it
+                rt._shadow_chain = None
             entry = {"tenant": g.tenant, "batch": batch_idx,
                      "payloads": list(g.payloads), "ran": ran,
                      "group": rt.group_log[-1]

@@ -154,9 +154,9 @@ class DrainScheduler:
             raise ValueError(f"due_batch must be an int batch index, "
                              f"got {due_batch!r}")
         if now is not None and (not isinstance(now, int)
-                                or isinstance(now, bool)):
+                                or isinstance(now, bool) or now < 0):
             raise ValueError(f"submit now= must be None or an int batch "
-                             f"index, got {now!r}")
+                             f"index >= 0, got {now!r}")
         q = self._queues[tenant]
         if self.max_queue and len(q) >= self.max_queue:
             if self.admission == "reject":
@@ -201,11 +201,40 @@ class DrainScheduler:
         dues = [p.due_batch for q in self._queues.values() for p in q]
         return min(dues) if dues else None
 
+    def pending_entries(self, tenant: str) -> List[Dict[str, Any]]:
+        """Public read-only view of one tenant's queue, in admission order.
+
+        Each queued REQUEST becomes one dict (folded defer-with-aging
+        entries are expanded, so the list length matches ``pending``):
+        ``{"payload", "due_batch", "submitted"}``.  This is the sanctioned
+        way to inspect queue contents — ``_queues`` is private and the
+        api-gate forbids reaching into it from outside this module.
+        """
+        entries: List[Dict[str, Any]] = []
+        for p in sorted(self._queues.get(tenant, ()), key=lambda p: p.seq):
+            for x in p.payloads:
+                entries.append({"payload": x, "due_batch": p.due_batch,
+                                "submitted": p.submitted})
+        return entries
+
     def oldest_age(self, tenant: str, batch_idx: int) -> Optional[int]:
-        """Age (in batches) of the tenant's oldest tracked submission."""
+        """Age (in batches) of the tenant's oldest tracked submission.
+
+        Clamped at 0: a request submitted with ``now > batch_idx`` (clock
+        skew between the submitting caller and the drain point) would
+        otherwise report a NEGATIVE age and corrupt downstream SLO
+        accounting.  Skew is surfaced as a ``queue.age_skew`` event rather
+        than propagated.
+        """
         subs = [p.submitted for p in self._queues.get(tenant, ())
                 if p.submitted is not None]
-        return (batch_idx - min(subs)) if subs else None
+        if not subs:
+            return None
+        raw = batch_idx - min(subs)
+        if raw < 0:
+            _t.emit("queue.age_skew", tenant=tenant, batch_idx=batch_idx,
+                    submitted=min(subs), raw_age=raw)
+        return max(raw, 0)
 
     # -- the drain decision -------------------------------------------------
     def due_groups(self, batch_idx) -> List[DrainGroup]:
@@ -258,6 +287,13 @@ class DrainScheduler:
             for p in due:
                 age = (int(batch_idx) - p.submitted
                        if finite and p.submitted is not None else None)
+                if age is not None and age < 0:
+                    # clock skew: submitted "in the future" relative to the
+                    # drain point — clamp so SLO math never sees a negative
+                    _t.emit("queue.age_skew", tenant=tenant,
+                            batch_idx=int(batch_idx),
+                            submitted=p.submitted, raw_age=age)
+                    age = 0
                 for x in p.payloads:
                     payloads.append(x)
                     ages.append(age)

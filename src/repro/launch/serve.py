@@ -104,13 +104,17 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
     # see tests/test_models_smoke.py::test_chunked_prefill_bit_exact).
     logits, cache = LM.prefill(params, cfg, prompts, cache,
                                block=prefill_block)
+    # tokens accumulate ON DEVICE and cross to the host ONCE at the end:
+    # an np.asarray inside the loop would force a blocking device->host
+    # sync every decode step, serializing the whole pipeline (bit-exact vs
+    # the per-step-sync loop, see tests/test_stream.py).
     out = []
     tok = jnp.argmax(logits[:, -1:], axis=-1)
     for j in range(gen_len):
-        out.append(np.asarray(tok)[:, 0])
+        out.append(tok)
         logits, cache = decode_jit(params, cache, tok, jnp.int32(Plen + j))
         tok = jnp.argmax(logits[:, -1:], axis=-1)
-    return np.stack(out, axis=1)
+    return np.asarray(jnp.concatenate(out, axis=1))
 
 
 def default_serve_spec(chunk_size: int = 4,
@@ -161,7 +165,7 @@ class ForgetService:
 
     def __init__(self, cfg, tokens, domains, seq_len: int,
                  serve: Optional[ServeSpec] = None, *,
-                 spec: Optional[UnlearnSpec] = None):
+                 spec: Optional[UnlearnSpec] = None, programs=None):
         if isinstance(serve, UnlearnSpec):
             # legacy 5th positional arg: ForgetService(..., unlearn_spec)
             warnings.warn(
@@ -186,7 +190,7 @@ class ForgetService:
         self.cfg = cfg
         self.tokens = tokens
         self.domains = domains
-        self._fleet = Fleet()
+        self._fleet = Fleet(programs=programs)
         self._rt = self._fleet.add_tenant(
             "default", cfg, tokens, domains, seq_len, spec=unlearn_spec,
             tag="serve", coalesce=serve.coalesce,
@@ -197,9 +201,14 @@ class ForgetService:
     def queue(self) -> Deque[Dict]:
         """Read-only view of the pending forget queue (legacy shape — one
         entry per REQUEST, so admission-deferred folds are expanded)."""
-        return deque({"domain": d, "due_batch": p.due_batch}
-                     for p in self._fleet.scheduler._queues["default"]
-                     for d in p.payloads)
+        return deque({"domain": e["payload"], "due_batch": e["due_batch"]}
+                     for e in self._fleet.scheduler.pending_entries(
+                         self._rt.name))
+
+    @property
+    def scheduler(self):
+        """The fleet's drain scheduler (one tenant here)."""
+        return self._fleet.scheduler
 
     @property
     def adapter(self):
@@ -263,6 +272,293 @@ class ForgetService:
         self._rt.params = params
         entries = self._fleet.drain(batch_idx)
         return self._rt.params, any(e["ran"] for e in entries)
+
+    # -- double-buffered stream-mode surface (DESIGN.md §15) ---------------
+    @property
+    def params(self):
+        """The LIVE served tree (stream mode: the runtime's pointer IS the
+        tree decode reads; it only moves via ``publish_staged``)."""
+        return self._rt.params
+
+    @property
+    def params_version(self) -> int:
+        return self._rt.params_version
+
+    def install_params(self, params) -> None:
+        """Install the live tree on the tenant runtime (stream mode)."""
+        self._rt.params = params
+
+    def run_shadow(self, payloads, batch_idx):
+        """Drain body against the shadow tree — safe to call from the
+        engine's worker thread; the live tree is untouched.  Returns
+        ``(tree, ran)`` for the engine to stage/publish at its deadline."""
+        return self._rt.run_due_shadow(list(payloads), batch_idx)
+
+    def stage(self, tree) -> None:
+        self._rt.stage(tree)
+
+    def publish_staged(self, step=None) -> bool:
+        """Atomic between-steps pointer swap of the staged tree."""
+        return self._rt.publish_staged(step=step)
+
+    def discard_shadow(self) -> None:
+        """Drop unpublished shadow state (bench warmup hygiene)."""
+        self._rt.discard_shadow()
+
+
+# event kinds emitted on the ENGINE thread (deterministic order); sweep
+# worker threads emit their own events at scheduler-dependent points
+ENGINE_EVENT_KINDS = frozenset({"batch.admit", "batch.evict", "drain.fire",
+                                "params.publish"})
+
+
+def engine_fingerprint(events) -> str:
+    """Determinism fingerprint of the engine-side event stream.
+
+    Keeps only ``ENGINE_EVENT_KINDS`` and drops the global ``seq``
+    counter: seq numbers are allocated process-wide across threads, so a
+    sweep worker finishing a GIL slice earlier or later shifts the seq
+    values on engine events even though the engine-side ORDER (what the
+    fingerprint must pin) is fully deterministic.
+    """
+    evs = [{k: v for k, v in e.items() if k != "seq"}
+           for e in events if e.get("kind") in ENGINE_EVENT_KINDS]
+    return _t.fingerprint(evs)
+
+
+class StreamEngine:
+    """Continuous-batching decode engine with zero-downtime drains.
+
+    A fixed pool of ``max_batch`` decode slots steps in lockstep through
+    ONE jitted decode program (per-row positions, see
+    ``models.layers.attention_decode``).  Per engine step the loop:
+
+      1. PUBLISHES any shadow-drain result whose step deadline arrived —
+         an atomic pointer swap BETWEEN decode steps, so a step can never
+         observe a half-edited tree;
+      2. fires newly due drains: the scheduler group is popped on the
+         ENGINE thread (deterministic order) and the sweep runs on a
+         single worker thread against the tenant's SHADOW tree
+         (``ForgetService.run_shadow``) — serving never stalls for it;
+      3. admits pending sequences into free slots via a fixed-width
+         chunked prefill (``models.lm.prefill``) scattered into the pool
+         caches (``models.lm.scatter_cache_rows``);
+      4. evicts finished sequences (host-side length bookkeeping — no
+         device sync) and starts an async device->host copy of their
+         output row;
+      5. dispatches the decode step WITHOUT syncing — JAX's in-flight
+         queue provides natural back-pressure.
+
+    Every engine-side transition emits a deterministic telemetry event
+    (``batch.admit`` / ``batch.evict`` / ``drain.fire`` /
+    ``params.publish``); worker-thread events interleave freely and are
+    excluded from determinism fingerprints.  Publication happens at the
+    deterministic deadline ``fire_step + publish_lag`` regardless of how
+    fast the worker finishes, so two runs of the same scenario publish at
+    identical steps with identical content (drain k+1 chains off drain
+    k's output via the runtime's shadow chain).
+    """
+
+    def __init__(self, params, cfg, *, gen_len: int, prompt_len: int,
+                 max_batch: int = 8, admit_chunk: int = 4,
+                 prefill_block: int = 8, publish_lag: int = 16,
+                 service: Optional[ForgetService] = None):
+        if gen_len < 1 or prompt_len < 1:
+            raise ValueError(f"StreamEngine needs gen_len/prompt_len >= 1, "
+                             f"got {gen_len}/{prompt_len}")
+        self.cfg = cfg
+        self.params = params
+        self.G = int(gen_len)
+        self.P = int(prompt_len)
+        self.B = int(max_batch)
+        self.admit_chunk = min(int(admit_chunk), self.B)
+        self.prefill_block = prefill_block
+        self.publish_lag = int(publish_lag)
+        self.svc = service
+        if service is not None:
+            service.install_params(params)
+        self.S_max = self.P + self.G
+        B, G = self.B, self.G
+        self.cache = LM.init_cache(cfg, B, self.S_max)
+        self.tok = jnp.zeros((B, 1), dtype=jnp.int32)
+        self.pos = jnp.zeros((B,), dtype=jnp.int32)
+        # gidx starts at G so an unoccupied slot's writes DROP out of the
+        # output buffer (mode="drop" scatter) instead of clobbering it
+        self.gidx = jnp.full((B,), G, dtype=jnp.int32)
+        self.outbuf = jnp.zeros((B, G), dtype=jnp.int32)
+        # host-side slot bookkeeping — never syncs the device
+        self.slot_seq: List[Optional[int]] = [None] * B
+        self.slot_written = [0] * B
+        self.pending: Deque = deque()
+        self.results: Dict[int, object] = {}
+        self.step = 0
+        self.publications = 0
+        self.step_wall: List[float] = []   # per-step loop wall seconds
+        self._pending_pubs: List[List] = []   # [deadline_step, future]
+        self._executor = None
+
+        def _step(params, cache, tok, pos, gidx, outbuf):
+            logits, cache = LM.decode_step(params, cfg, tok, cache, pos)
+            ntok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            outbuf = outbuf.at[jnp.arange(B), gidx].set(ntok[:, 0],
+                                                        mode="drop")
+            return cache, ntok, pos + 1, gidx + 1, outbuf
+
+        self._step_fn = jax.jit(_step)
+
+        P = self.P
+
+        def _admit(cache, sub_cache, tok, pos, gidx, outbuf, rows, first):
+            cache = LM.scatter_cache_rows(cache, sub_cache, rows)
+            tok = tok.at[rows].set(first, mode="drop")
+            pos = pos.at[rows].set(P, mode="drop")
+            # token 0 is the prefill argmax, already written at index 0
+            gidx = gidx.at[rows].set(1, mode="drop")
+            outbuf = outbuf.at[rows].set(0, mode="drop")
+            outbuf = outbuf.at[rows, 0].set(first[:, 0], mode="drop")
+            return cache, tok, pos, gidx, outbuf
+
+        self._admit_fn = jax.jit(_admit)
+
+    # -- traffic -----------------------------------------------------------
+    def enqueue(self, seq_id: int, prompt) -> None:
+        """Queue one sequence (prompt [P] tokens) for admission."""
+        prompt = np.asarray(prompt)
+        if prompt.shape != (self.P,):
+            raise ValueError(f"StreamEngine prompts are fixed-length "
+                            f"[{self.P}], got shape {prompt.shape}")
+        if seq_id in self.results or seq_id in [s for s in self.slot_seq
+                                                if s is not None]:
+            raise ValueError(f"duplicate seq_id {seq_id}")
+        self.pending.append((int(seq_id), prompt))
+
+    def _admit_due(self) -> None:
+        free = [i for i in range(self.B) if self.slot_seq[i] is None]
+        while self.pending and free:
+            take = min(len(free), len(self.pending), self.admit_chunk)
+            chunk = [self.pending.popleft() for _ in range(take)]
+            rows, free = free[:take], free[take:]
+            width = self.admit_chunk
+            # fixed-width sub-batch: ONE prefill/admit program signature.
+            # Padding rows repeat the last prompt and scatter to row index
+            # B — out of bounds, dropped by the mode="drop" scatters.
+            prompts = np.stack([p for _, p in chunk]
+                               + [chunk[-1][1]] * (width - take))
+            rows_arr = jnp.asarray(rows + [self.B] * (width - take),
+                                   dtype=jnp.int32)
+            sub_cache = LM.init_cache(self.cfg, width, self.S_max)
+            logits, sub_cache = LM.prefill(self.params, self.cfg,
+                                           jnp.asarray(prompts), sub_cache,
+                                           block=self.prefill_block)
+            first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            (self.cache, self.tok, self.pos, self.gidx, self.outbuf) = \
+                self._admit_fn(self.cache, sub_cache, self.tok, self.pos,
+                               self.gidx, self.outbuf, rows_arr, first)
+            for r, (sid, _) in zip(rows, chunk):
+                self.slot_seq[r] = sid
+                self.slot_written[r] = 1
+            _t.emit("batch.admit", step=self.step, rows=rows,
+                    seqs=[sid for sid, _ in chunk], width=width,
+                    padded=width - take)
+
+    def _evict_done(self) -> None:
+        for r in range(self.B):
+            if self.slot_seq[r] is not None \
+                    and self.slot_written[r] >= self.G:
+                sid = self.slot_seq[r]
+                row = self.outbuf[r]          # device gather, lazy
+                try:
+                    row.copy_to_host_async()  # overlap with decode
+                except AttributeError:
+                    pass
+                self.results[sid] = row
+                _t.emit("batch.evict", step=self.step, row=r, seq=sid)
+                self.slot_seq[r] = None
+                self.slot_written[r] = 0
+
+    # -- drains ------------------------------------------------------------
+    def _fire_drains(self, step) -> None:
+        svc = self.svc
+        if svc is None:
+            return
+        nd = svc.scheduler.next_due()
+        if nd is None or nd > step:
+            return
+        if self._executor is None:
+            import concurrent.futures
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1)   # serializes sweeps: drain k+1 after k
+        for g in svc.scheduler.due_groups(step):
+            fut = self._executor.submit(svc.run_shadow,
+                                        list(g.payloads), step)
+            self._pending_pubs.append([step + self.publish_lag, fut])
+            _t.emit("drain.fire", step=step, n_requests=len(g.payloads),
+                    payloads=list(g.payloads),
+                    publish_at=step + self.publish_lag)
+
+    def _publish_due(self, step) -> None:
+        if not self._pending_pubs:
+            return
+        due = [p for p in self._pending_pubs if p[0] <= step]
+        if not due:
+            return
+        self._pending_pubs = [p for p in self._pending_pubs if p[0] > step]
+        svc = self.svc
+        published = False
+        for _, fut in due:
+            # joining at the DEADLINE keeps the publication step (and the
+            # published content, via the shadow chain) deterministic no
+            # matter how thread timing interleaved the sweep itself
+            tree, ran = fut.result()
+            if ran:
+                svc.stage(tree)
+                if svc.publish_staged(step=self.step):
+                    self.publications += 1
+                    published = True
+        if published:
+            self.params = svc.params
+
+    # -- the loop ----------------------------------------------------------
+    def step_once(self) -> None:
+        t0 = _t.wall_time()
+        self._publish_due(self.step)
+        self._fire_drains(self.step)
+        self._admit_due()
+        self._evict_done()
+        if any(s is not None for s in self.slot_seq):
+            (self.cache, self.tok, self.pos, self.gidx, self.outbuf) = \
+                self._step_fn(self.params, self.cache, self.tok, self.pos,
+                              self.gidx, self.outbuf)
+            for r in range(self.B):
+                if self.slot_seq[r] is not None:
+                    self.slot_written[r] += 1
+            self._evict_done()
+        self.step += 1
+        self.step_wall.append(_t.wall_time() - t0)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Serve until every enqueued sequence completed, then flush any
+        drains still queued/unpublished and materialize the outputs."""
+        while self.pending or any(s is not None for s in self.slot_seq):
+            self.step_once()
+        return self.finish()
+
+    def finish(self) -> Dict[int, np.ndarray]:
+        if self.svc is not None:
+            # a forget request must never be silently dropped at shutdown
+            while self.svc.scheduler.pending():
+                self._fire_drains(float("inf"))
+            self._publish_due(float("inf"))
+            if self._executor is not None:
+                self._executor.shutdown(wait=True)
+                self._executor = None
+        return {sid: np.asarray(row)
+                for sid, row in sorted(self.results.items())}
+
+    def decode_cache_size(self) -> int:
+        """Compiled-signature count of the decode step program — the
+        zero-recompile-across-publications gate reads this."""
+        return self._step_fn._cache_size()
 
 
 def _build_lm_tenant(tspec: TenantSpec, args) -> Dict:
@@ -542,6 +838,100 @@ def _main_fleet(args) -> dict:
     return result
 
 
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile over an ascending list (0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    i = min(int(round(q * (len(sorted_vals) - 1))), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def _main_stream(args, cfg, params, tokens, domains, seq_len: int) -> dict:
+    """--serve-mode stream: the continuous-batching engine with shadow
+    drains and step-deadline publication (DESIGN.md §15)."""
+    serve = ServeSpec(cache_dir=args.cache_dir,
+                      refresh_every=args.fisher_refresh,
+                      sweep_mode=args.sweep_mode,
+                      precision=args.precision,
+                      publish="step",
+                      max_batch=args.max_batch,
+                      admit_chunk=args.admit_chunk,
+                      publish_lag=args.publish_lag)
+    svc = ForgetService(cfg, tokens, domains, seq_len, serve=serve)
+    eng = StreamEngine(params, cfg, gen_len=args.gen_len,
+                       prompt_len=args.prompt_len,
+                       max_batch=serve.max_batch,
+                       admit_chunk=serve.admit_chunk,
+                       prefill_block=args.prefill_block,
+                       publish_lag=serve.publish_lag,
+                       service=svc)
+    # the burst schedule lives on the ENGINE-STEP clock in stream mode:
+    # one legacy "batch" is roughly gen_len decode steps
+    if args.unlearn_after >= 0:
+        for i, burst in enumerate(_parse_bursts(args)):
+            for d in burst:
+                svc.submit(d, due_batch=(args.unlearn_after + i)
+                           * args.gen_len)
+    n_seq = 3 * args.requests   # the batch path's traffic volume
+    prompts = np.asarray(tokens[:, :args.prompt_len])
+    for i in range(n_seq):
+        eng.enqueue(i, prompts[i % len(prompts)])
+    t0 = time.time()
+    results = eng.run()
+    lat = sorted(eng.step_wall)
+    result = {
+        "serve_mode": "stream",
+        "sequences": len(results),
+        "tokens": int(sum(r.size for r in results.values())),
+        "steps": eng.step,
+        "elapsed_s": round(time.time() - t0, 3),
+        "publications": eng.publications,
+        "params_version": svc.params_version,
+        "decode_step_p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
+        "decode_step_p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
+        "decode_compile_signatures": eng.decode_cache_size(),
+        "unlearn_requests": svc.log,
+        "group_log": svc.group_log,
+        "coalesced_groups": svc.groups,
+        "sweeps": svc.sweeps,
+        "engine_stats": (dict(svc.unlearner.stats)
+                         if svc.unlearner is not None else {}),
+        "unlearn_spec": svc.spec.to_dict(),
+        "serve_spec": serve.to_dict(),
+    }
+    _t.log("serve", f"stream done: {json.dumps(result)}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    if args.check:
+        problems = []
+        if len(results) != n_seq:
+            problems.append(f"stream served {len(results)} of {n_seq} "
+                            "enqueued sequences")
+        if eng.decode_cache_size() != 1:
+            problems.append(
+                f"decode step compiled {eng.decode_cache_size()} "
+                "signatures — publications must replay the ONE warm "
+                "decode program")
+        if args.unlearn_after >= 0 and svc.groups != eng.publications:
+            problems.append(
+                f"{svc.groups} drain group(s) ran but {eng.publications} "
+                "publication(s) happened — a shadow sweep's result was "
+                "dropped or double-published")
+        if svc.scheduler.pending():
+            problems.append(f"{svc.scheduler.pending()} forget request(s) "
+                            "still queued at shutdown")
+        if problems:
+            _t.log("serve", "STREAM CHECK FAILED: " + "; ".join(problems))
+            raise SystemExit(1)
+        _t.log("serve",
+               f"stream check ok: {len(results)} sequence(s) in "
+               f"{eng.step} step(s), {svc.groups} shadow drain group(s), "
+               f"{eng.publications} atomic publication(s), one decode "
+               "signature")
+    return result
+
+
 def _parse_bursts(args) -> List[List[int]]:
     """Burst k is due at ``--unlearn-after + k``; domains within a burst
     coalesce into one sweep."""
@@ -563,6 +953,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--prefill-block", type=int, default=8,
                     help="chunked-prefill block size (tokens per dispatch)")
+    ap.add_argument("--serve-mode", choices=("batch", "stream"),
+                    default="batch",
+                    help="'batch': the legacy fixed-batch generate loop "
+                         "with in-place drains between batches; 'stream': "
+                         "the continuous-batching engine — per-step "
+                         "admission/eviction over a fixed slot pool, "
+                         "drains on a shadow tree, atomic between-steps "
+                         "publication (DESIGN.md §15)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="stream mode: decode slot-pool width "
+                         "(ServeSpec.max_batch)")
+    ap.add_argument("--admit-chunk", type=int, default=4,
+                    help="stream mode: fixed admission sub-batch width "
+                         "(ServeSpec.admit_chunk)")
+    ap.add_argument("--publish-lag", type=int, default=16,
+                    help="stream mode: steps between firing a shadow "
+                         "drain and its atomic publication deadline "
+                         "(ServeSpec.publish_lag)")
     ap.add_argument("--unlearn-after", type=int, default=1,
                     help="first forget burst after this many batches "
                          "(-1: off)")
@@ -631,6 +1039,10 @@ def main(argv=None) -> dict:
                         seq_len=args.prompt_len + args.gen_len,
                         n_per_domain=16, seed=0)
     tokens, domains = make_lm_domains(dcfg)
+
+    if args.serve_mode == "stream":
+        return _main_stream(args, cfg, params, tokens, domains,
+                            dcfg.seq_len)
 
     decode_jit = jax.jit(
         lambda p, c, t, pos: LM.decode_step(p, cfg, t, c, pos))

@@ -122,7 +122,8 @@ def _qkv(p: Dict, cfg: AttnConfig, x: jax.Array, kv_src: Optional[jax.Array] = N
 
 def _sdpa_block(q, k, v, dtype, causal, window, q_offset=0, valid=None):
     """One query-block of attention. q [B,Sq,H,Dh]; k,v [B,Sk,KV,Dh].
-    ``valid``: optional [Sk] bool mask (decode ring buffers)."""
+    ``valid``: optional [Sk] bool mask (decode ring buffers), or [B,Sk]
+    when each batch row sits at its own position (continuous batching)."""
     B, Sq, H, Dh = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -138,7 +139,9 @@ def _sdpa_block(q, k, v, dtype, causal, window, q_offset=0, valid=None):
             m = m & (ik[None, :] > iq[:, None] - window)
         scores = jnp.where(m[None, None, None], scores, -1e30)
     if valid is not None:
-        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        vmask = (valid[:, None, None, None, :] if valid.ndim == 2
+                 else valid[None, None, None, None, :])
+        scores = jnp.where(vmask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(F32),
                      preferred_element_type=F32)
@@ -243,22 +246,38 @@ def attention_decode(p: Dict, cfg: AttnConfig, x: jax.Array, cache: Dict,
     """Single-token decode with a KV cache.
 
     x: [B, 1, D]; cache: {"k": [B, S_max, KV, Dh], "v": ..., } (window caches
-    are ring buffers of size ``window``); pos: scalar int32 current position.
+    are ring buffers of size ``window``); pos: scalar int32 current position,
+    or an int32 [B] vector when each row decodes at its own position (the
+    continuous-batching slot pool).  The scalar path is byte-identical to
+    the historical single-position decode.
     """
     B = x.shape[0]
+    per_row = getattr(pos, "ndim", 0) == 1
     q, k_new, v_new = _qkv(p, cfg, x)
     if cfg.use_rope:
-        pvec = jnp.broadcast_to(pos[None, None], (B, 1))
+        pvec = (pos[:, None] if per_row
+                else jnp.broadcast_to(pos[None, None], (B, 1)))
         q = apply_rope(q, pvec, cfg.rope_theta)
         k_new = apply_rope(k_new, pvec, cfg.rope_theta)
     S_max = cache["k"].shape[1]
     slot = jnp.where(cfg.window > 0, pos % S_max, pos)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
+    if per_row:
+        rows = jnp.arange(B)
+        k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
     ik = jnp.arange(S_max)
-    if cfg.window > 0:
+    if per_row:
+        if cfg.window > 0:
+            age = (slot[:, None] - ik[None, :]) % S_max
+            valid = age < jnp.minimum(pos[:, None] + 1, S_max)
+        else:
+            valid = ik[None, :] <= pos[:, None]
+    elif cfg.window > 0:
         # ring buffer: valid slots are the last ``window`` positions
         age = (slot - ik) % S_max
         valid = (age < jnp.minimum(pos + 1, S_max))

@@ -352,7 +352,9 @@ def init_cache(cfg: LMConfig, batch: int, seq_len: int) -> Params:
 
 def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
                 cache: Params, pos: jax.Array) -> Tuple[jax.Array, Params]:
-    """token [B,1]; pos scalar int32 -> (logits [B,1,V], new cache)."""
+    """token [B,1]; pos scalar int32 (all rows at one position) or an int32
+    [B] vector (continuous batching: each slot at its own position) ->
+    (logits [B,1,V], new cache)."""
     x = params["embed"]["w"].astype(cfg.dtype)[token]
     pat = cfg.block_pattern
     new_cache: Params = {}
@@ -385,6 +387,29 @@ def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
             x, new_cache["tail"][str(i)] = block_decode(
                 params["tail"][str(i)], cfg, bt, x, cache["tail"][str(i)], pos)
     return _head(params, cfg, x), new_cache
+
+
+def scatter_cache_rows(pool: Params, sub: Params, rows: jax.Array) -> Params:
+    """Write ``sub``'s batch rows into ``pool`` at row indices ``rows``.
+
+    Both are ``init_cache`` trees for the same config; ``sub`` was built
+    (and prefilled) at a smaller batch.  ``period_stack`` leaves carry the
+    batch on axis 1 ([n_periods, B, ...]); ``tail`` leaves on axis 0.  Row
+    indices >= the pool's batch size are dropped — continuous-batching
+    admission pads its prefill sub-batch to a fixed width and points the
+    padding rows out of bounds, so one compiled scatter serves every
+    admission.  Jit-compatible (``rows`` may be traced).
+    """
+    out: Params = {}
+    if "period_stack" in pool:
+        out["period_stack"] = jax.tree_util.tree_map(
+            lambda c, s: c.at[:, rows].set(s.astype(c.dtype), mode="drop"),
+            pool["period_stack"], sub["period_stack"])
+    if "tail" in pool:
+        out["tail"] = jax.tree_util.tree_map(
+            lambda c, s: c.at[rows].set(s.astype(c.dtype), mode="drop"),
+            pool["tail"], sub["tail"])
+    return out
 
 
 # ---------------------------------------------------------------------------

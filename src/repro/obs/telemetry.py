@@ -34,6 +34,7 @@ from __future__ import annotations
 import contextlib
 import hashlib
 import json
+import threading
 import time as _time
 from typing import Any, Dict, Iterable, List, Optional
 
@@ -125,22 +126,27 @@ class Telemetry:
         self.events: List[Dict[str, Any]] = []
         self.counts: Dict[str, int] = {}
         self._seq = 0
+        # the serving engine runs shadow sweeps on a worker thread whose
+        # drain-path events interleave with the engine's own — the seq
+        # counter, counts, events list and JSONL sink all need one lock
+        self._lock = threading.Lock()
 
     def emit(self, kind: str, **fields: Any) -> Dict[str, Any]:
         if not isinstance(kind, str) or not kind:
             raise ValueError(f"telemetry event kind must be a non-empty "
                              f"string, got {kind!r}")
-        event: Dict[str, Any] = {"seq": self._seq, "t": self.clock.now(),
-                                 "kind": kind}
-        for k, v in fields.items():
-            event[k] = _jsonable(v)
-        self._seq += 1
-        self.counts[kind] = self.counts.get(kind, 0) + 1
-        if self.keep:
-            self.events.append(event)
-        if self._fh is not None:
-            self._fh.write(json.dumps(event) + "\n")
-            self._fh.flush()
+        jfields = {k: _jsonable(v) for k, v in fields.items()}
+        with self._lock:
+            event: Dict[str, Any] = {"seq": self._seq, "t": self.clock.now(),
+                                     "kind": kind}
+            event.update(jfields)
+            self._seq += 1
+            self.counts[kind] = self.counts.get(kind, 0) + 1
+            if self.keep:
+                self.events.append(event)
+            if self._fh is not None:
+                self._fh.write(json.dumps(event) + "\n")
+                self._fh.flush()
         return event
 
     def log(self, tag: str, msg: str, **fields: Any) -> None:

@@ -15,6 +15,9 @@ files
   * adds a bare ``assert`` statement under ``src/repro`` (user-facing
     validation raises ``ValueError`` with an actionable message; asserts
     vanish under ``python -O`` — the PR-6 sweep must stay converged), or
+  * reaches into ``DrainScheduler._queues`` outside
+    ``src/repro/fleet/scheduler.py`` (queue contents are read through the
+    public ``pending_entries``/``pending``/``queue_depth`` accessors), or
   * reads the wall clock inside ``src/repro/load`` or ``src/repro/fleet``
     (``import time`` / ``from time import ...`` / ``datetime.now`` etc.).
     Those packages run on the virtual clock — determinism of the load
@@ -47,6 +50,9 @@ ALLOW = {
 ALLOW_FORGET_SERVICE = {
     "src/repro/launch/serve.py",
     "src/repro/fleet/fleet.py",
+    # the serve-latency bench drives the shim's stream surface
+    # (run_shadow/stage/publish) directly — exactly what it measures
+    "benchmarks/serve_latency_bench.py",
 }
 # the assert-free discipline applies to the library tree only — benchmarks
 # and examples are harnesses, and tests assert by design
@@ -63,6 +69,13 @@ FORGET_SERVICE_RULE = (
     re.compile(r"\bForgetService\("),
     "constructs ForgetService directly (route serving through "
     "repro.fleet.Fleet, or the serve.py CLI for the single-tenant shim)")
+# the scheduler's queue dict is private: read queue contents through
+# DrainScheduler.pending_entries / pending / queue_depth
+QUEUES_RULE = (
+    re.compile(r"\._queues\b"),
+    "reaches into DrainScheduler._queues (use the public "
+    "pending_entries/pending/queue_depth accessors)")
+ALLOW_QUEUES = {"src/repro/fleet/scheduler.py"}
 # virtual-clock trees: no wall-clock reads; latency measurement goes
 # through repro.obs.telemetry.wall_time (stripped by canonical_events)
 WALL_CLOCK_SCAN = ("src/repro/load", "src/repro/fleet")
@@ -133,6 +146,8 @@ def main(argv=None) -> int:
                 continue
             rules = RULES if rp in ALLOW_FORGET_SERVICE \
                 else RULES + (FORGET_SERVICE_RULE,)
+            if rp not in ALLOW_QUEUES:
+                rules = rules + (QUEUES_RULE,)
             for ln, line in enumerate(path.read_text().splitlines(), 1):
                 code = line.split("#", 1)[0]
                 for rx, why in rules:
