@@ -102,6 +102,20 @@ ABS_GATES = {
         ("load_deterministic", 1, 1),
         ("load_reject_accounting_ok", 1, 1),
         ("load_queue_age_p99", 0.0, 6.0),
+        # the chaos contract (DESIGN.md §16): under the seeded fault plan
+        # the non-faulted SLOs still attain, no guard-violating tree is
+        # ever published, the accounting invariant (submitted == applied +
+        # pending + staged + dead) holds for every tenant, at least one
+        # request exhausts its retries into the dead-letter queue (the
+        # plan guarantees it) with at least one drain abort on the way,
+        # and two chaos runs are fingerprint-identical — fault injection
+        # is exactly as repeatable as clean traffic.
+        ("load_chaos_slo_attainment", 1.0, 1.0),
+        ("load_chaos_deterministic", 1, 1),
+        ("load_chaos_accounting_ok", 1, 1),
+        ("load_chaos_guard_violations", 0, 0),
+        ("load_chaos_dead_letters", 1, 1_000_000),
+        ("load_chaos_aborts", 1, 1_000_000),
     ),
 }
 

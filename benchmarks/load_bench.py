@@ -25,6 +25,27 @@ in ``BENCH_load.json``:
   * ``load_drain_throughput``     drained forget requests per virtual tick
                                   (deterministic).
 
+A second, seeded CHAOS run (DESIGN.md §16) replays similar traffic with a
+guarded fleet and a fault-injection plan (NaN forget batch, shadow-sweep
+worker crash, publication-deadline miss) and gates the robustness
+contract:
+
+  * ``load_chaos_slo_attainment``   the chaos SLOs (drain floor, dead-
+                                    letter budget, queue age) all hold on
+                                    the non-faulted traffic (gated 1.0);
+  * ``load_chaos_guard_violations`` tenants whose SERVED params contain a
+                                    non-finite value after the run — a
+                                    guard-violating publication (gated 0);
+  * ``load_chaos_accounting_ok``    ``submitted == applied + pending +
+                                    staged + dead`` for every tenant;
+  * ``load_chaos_dead_letters``     retries-exhausted requests parked with
+                                    full accounting (gated >= 1: the plan
+                                    guarantees one NaN retry exhausts);
+  * ``load_chaos_aborts``           guard/exception drain aborts (>= 2);
+  * ``load_chaos_deterministic``    two chaos runs produce identical event
+                                    fingerprints — faults and recovery are
+                                    exactly as repeatable as clean runs.
+
 Also writes the telemetry stream (``load_events.jsonl``) and the rendered
 markdown report (``LOAD_REPORT.md``) — the artifacts CI uploads.
 
@@ -35,10 +56,14 @@ from __future__ import annotations
 
 import json
 
+import jax
+import numpy as np
+
 from repro.fleet import Fleet, FleetSpec, TenantSpec
 from repro.load import ArrivalSpec, LoadHarness, LoadScenario, SLOSpec
 from repro.load.harness import build_lm_tenant
 from repro.obs import render, telemetry
+from repro.robust import FaultSpec, GuardSpec
 
 # The scenario under test: bursty overload against bounded queues.  Queue
 # bound 2 with a burst factor of 6 guarantees overflow (defer-with-aging
@@ -62,6 +87,32 @@ SLO = SLOSpec(max_queue_age_p99=6.0, max_queue_depth=MAX_QUEUE,
 
 EVENTS_PATH = "load_events.jsonl"
 REPORT_PATH = "LOAD_REPORT.md"
+
+# The chaos plan (DESIGN.md §16): one fault per failure class, each pinned
+# to a tenant so the blast radius is known.  acme's NaN strikes twice —
+# with a retry budget of 1 the second strike exhausts it, guaranteeing the
+# dead-letter path runs; globex's worker crash and initech's deadline miss
+# each recover within the retry/requeue budget.
+CHAOS_GUARD = GuardSpec(finite=True, max_retries=1, backoff_batches=1)
+CHAOS_FAULTS = (
+    FaultSpec(site="nan_batch", tenant="acme", at=0, count=2),
+    FaultSpec(site="worker_exc", tenant="globex", at=0, count=1),
+    FaultSpec(site="deadline_miss", tenant="initech", at=0, count=1),
+)
+CHAOS_SCENARIO = LoadScenario(
+    ticks=10, warmup_ticks=6, deadline_slack=1,
+    forget=ArrivalSpec(kind="bursty", rate=0.8, burst_factor=6.0,
+                       duty=0.25, period=4, seed=3),
+    generate=ArrivalSpec(kind="diurnal", rate=1.5, period=8, seed=5),
+    domains=3, serve_generate=False, seed=11, faults=CHAOS_FAULTS)
+
+# Chaos SLOs bound the NON-faulted traffic: the drain floor and queue-age
+# bound must survive the injected failures, and the dead-letter budget
+# admits only the deliberately exhausted NaN group.  Queue depth and
+# steady-compile pins are off — retries legitimately re-enter past the
+# admission bound and may recompile at a new group width.
+CHAOS_SLO = SLOSpec(max_queue_age_p99=10.0, min_drain_throughput=0.3,
+                    max_dead_letter_fraction=0.5)
 
 
 def _fleet_spec() -> FleetSpec:
@@ -127,6 +178,90 @@ def _reject_scenario_ok() -> bool:
     return ok
 
 
+def _nonfinite_tenants(fleet: Fleet) -> int:
+    """Tenants whose SERVED params hold a non-finite value — each one is a
+    guard-violating publication (the NaN fault reached the live tree)."""
+    bad = 0
+    for name, rt in fleet.tenants.items():
+        leaves = jax.tree_util.tree_leaves(rt.params)
+        if any(not np.isfinite(np.asarray(x)).all() for x in leaves):
+            print(f"[load_bench] CHAOS: tenant {name!r} serves non-finite "
+                  "params — a guard-violating publication escaped")
+            bad += 1
+    return bad
+
+
+def _run_chaos_once():
+    fspec = FleetSpec(
+        tenants=_fleet_spec().tenants,
+        scheduling="fair", max_groups_per_drain=2,
+        max_queue_per_tenant=MAX_QUEUE, admission="defer",
+        guard=CHAOS_GUARD)
+    fleet = _build_fleet(fspec)
+    result = LoadHarness(fleet, CHAOS_SCENARIO).run()
+    return result, fleet
+
+
+def _chaos_record() -> dict:
+    """Run the seeded chaos scenario twice; gate the robustness contract."""
+    print("[load_bench] chaos run 1/2 (seeded fault plan)")
+    res1, fleet1 = _run_chaos_once()
+    print("[load_bench] chaos run 2/2 (determinism replay)")
+    res2, _ = _run_chaos_once()
+    deterministic = res1["fingerprint"] == res2["fingerprint"]
+
+    fleet_sum = res1["fleet"]
+    evaluation = CHAOS_SLO.evaluate(res1)
+    accounting = res1["accounting"]
+    acc_ok = bool(accounting) and all(a["ok"] for a in accounting.values())
+    violations = _nonfinite_tenants(fleet1)
+
+    for r in evaluation["objectives"]:
+        print(f"[load_bench] chaos SLO {r['objective']}: "
+              f"actual={r['actual']} target={r['target']} -> "
+              f"{'ok' if r['ok'] else 'FAIL'}")
+    for name, a in accounting.items():
+        print(f"[load_bench] chaos accounting {name}: {a}")
+    rec = {
+        "load_chaos_slo_attainment": evaluation["attained"],
+        "load_chaos_deterministic": int(deterministic),
+        "load_chaos_accounting_ok": int(acc_ok),
+        "load_chaos_guard_violations": violations,
+        "load_chaos_dead_letters": fleet_sum["dead_letters"],
+        "load_chaos_aborts": fleet_sum["aborts"],
+        "load_chaos_requeues": fleet_sum["requeues"],
+        "load_chaos_faults_fired": fleet_sum["faults"],
+        "load_chaos_submitted": fleet_sum["submitted"],
+        "load_chaos_drained_requests": fleet_sum["drained_requests"],
+        "chaos_slo": CHAOS_SLO.to_dict(),
+        "chaos_scenario": CHAOS_SCENARIO.to_dict(),
+        "chaos_objectives": evaluation["objectives"],
+        "chaos_accounting": accounting,
+    }
+    print(f"[load_bench] chaos attainment={evaluation['attained']:.2f} "
+          f"deterministic={deterministic} accounting_ok={acc_ok} "
+          f"guard_violations={violations} "
+          f"dead_letters={fleet_sum['dead_letters']} "
+          f"aborts={fleet_sum['aborts']}")
+    return rec
+
+
+def _chaos_report_section(rec: dict) -> str:
+    lines = ["", "## Chaos scenario (seeded fault injection)", "",
+             "| metric | value |", "|---|---|"]
+    for k in ("load_chaos_slo_attainment", "load_chaos_deterministic",
+              "load_chaos_accounting_ok", "load_chaos_guard_violations",
+              "load_chaos_dead_letters", "load_chaos_aborts",
+              "load_chaos_requeues", "load_chaos_faults_fired",
+              "load_chaos_submitted", "load_chaos_drained_requests"):
+        lines.append(f"| {k} | {rec[k]} |")
+    lines.append("")
+    lines.append("Fault plan: " + ", ".join(
+        f"`{f.site}`@{f.tenant} (at={f.at}, count={f.count})"
+        for f in CHAOS_FAULTS))
+    return "\n".join(lines) + "\n"
+
+
 def main() -> None:
     import time
     print("[load_bench] run 1/2 (writes the telemetry artifacts)")
@@ -143,9 +278,11 @@ def main() -> None:
     evaluation = SLO.evaluate(res1)
     bound_ok = _queue_bound_ok(events1, MAX_QUEUE)
     reject_ok = _reject_scenario_ok()
+    chaos = _chaos_record()
 
     with open(REPORT_PATH, "w") as f:
         f.write(render(res1, evaluation) + "\n")
+        f.write(_chaos_report_section(chaos))
 
     rec = {
         "load_slo_attainment": evaluation["attained"],
@@ -169,6 +306,7 @@ def main() -> None:
         "slo": SLO.to_dict(),
         "scenario": SCENARIO.to_dict(),
         "objectives": evaluation["objectives"],
+        **chaos,
     }
     with open("BENCH_load.json", "w") as f:
         json.dump(rec, f, indent=1)

@@ -417,6 +417,9 @@ class Unlearner:
             self._session = UnlearnSession(self.adapter, self._fisher,
                                            donate=donate,
                                            programs=self._programs)
+            # fault-injection scoping: tenant-named facades key chaos
+            # FaultSpecs by tenant, not by adapter family
+            self._session.fault_scope = self.name
         # the scanned-sweep program lays its stacked [L, ...] trees out by
         # dist.sharding rules; hand the session the mesh + layout mode
         if self.mesh is not None:

@@ -33,6 +33,7 @@ import math
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.cau import UnlearnConfig
+from repro.robust.guards import GuardSpec
 
 MODES = ("ssd", "cau", "bd", "ficabu")
 
@@ -239,6 +240,10 @@ class ExecSpec:
     sweep_mode: str = "layerwise"     # "layerwise" | "scanned" megaprogram
     precision: str = "fp32"           # "fp32" | "int8" quantised path
     quant: Optional[QuantSpec] = None  # int8 calibration (int8 only)
+    # pre-publication drain guard (repro.robust.GuardSpec): a drain whose
+    # edited tree fails validation is discarded and retried/dead-lettered
+    # by the fleet instead of ever reaching the served weights
+    guard: Optional[GuardSpec] = None
 
     def __post_init__(self):
         _require(isinstance(self.chunk_size, int)
@@ -285,6 +290,12 @@ class ExecSpec:
                  f"a quantisation calibration on an fp32 request is a "
                  f'config contradiction — set precision="int8" or drop '
                  f"quant")
+        if isinstance(self.guard, dict):  # convenience: accept mappings
+            object.__setattr__(self, "guard", GuardSpec.from_dict(self.guard))
+        _require(self.guard is None or isinstance(self.guard, GuardSpec),
+                 f"ExecSpec.guard must be None or a repro.robust.GuardSpec "
+                 f"(or a mapping of its fields), "
+                 f"got {type(self.guard).__name__}")
 
     # -- layout policy -> concrete specs (delegates to repro.dist.sharding) --
     def param_pspecs(self, tree, mesh):
@@ -359,6 +370,10 @@ class ServeSpec:
     max_batch: int = 8
     admit_chunk: int = 4
     publish_lag: int = 16
+    # pre-publication drain guard (repro.robust.GuardSpec), threaded into
+    # the lowered UnlearnSpec's ExecSpec — see ``FleetSpec.guard`` for the
+    # fleet-wide default
+    guard: Optional[GuardSpec] = None
 
     def __post_init__(self):
         _require(isinstance(self.chunk_size, int)
@@ -413,6 +428,12 @@ class ServeSpec:
                  f"ServeSpec.publish_lag must be an int >= 1 step "
                  f"(publication is always between decode steps), "
                  f"got {self.publish_lag!r}")
+        if isinstance(self.guard, dict):
+            object.__setattr__(self, "guard", GuardSpec.from_dict(self.guard))
+        _require(self.guard is None or isinstance(self.guard, GuardSpec),
+                 f"ServeSpec.guard must be None or a repro.robust.GuardSpec "
+                 f"(or a mapping of its fields), "
+                 f"got {type(self.guard).__name__}")
 
     def to_unlearn_spec(self) -> "UnlearnSpec":
         """Lower to the deployment's engine-facing ``UnlearnSpec`` — the
@@ -426,7 +447,7 @@ class ServeSpec:
             "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
             chunk_size=self.chunk_size, cache_dir=self.cache_dir,
             sweep_mode=self.sweep_mode, precision=self.precision,
-            refresh=refresh)
+            guard=self.guard, refresh=refresh)
 
     # -- JSON round trip ----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -503,6 +524,7 @@ class UnlearnSpec:
                  sweep_mode: str = "layerwise",
                  precision: str = "fp32",
                  quant: Optional[QuantSpec] = None,
+                 guard: Optional[GuardSpec] = None,
                  refresh: Optional["RefreshSpec"] = None) -> "UnlearnSpec":
         """Flat-kwargs constructor mirroring the legacy entry points: the
         drop-in replacement for ``ficabu._mode_config`` (which is now a
@@ -516,7 +538,7 @@ class UnlearnSpec:
                           donate=donate, mesh_axes=mesh_axes,
                           sharding=sharding, cache_dir=cache_dir,
                           sweep_mode=sweep_mode, precision=precision,
-                          quant=quant),
+                          quant=quant, guard=guard),
             refresh=refresh)
 
     # -- mode semantics -----------------------------------------------------

@@ -11,8 +11,11 @@ Design (multi-host posture):
   * restore is ELASTIC: leaves are loaded as host arrays and re-placed with
     ``jax.device_put(x, sharding)`` for whatever mesh the restarted job has —
     save on one mesh shape, resume on another (tested in tests/test_ckpt.py);
-  * unlearning requests are journaled (``unlearn_journal.jsonl``) so an
-    interrupted forget request replays deterministically after restart.
+  * the TRAINING loop journals its unlearn events (``unlearn_journal.jsonl``,
+    append + fsync — launch/train.py's restart record).  Serving-stack
+    durability lives elsewhere: forget REQUESTS are WAL'd per tenant by
+    ``repro.robust.wal.ForgetWAL`` and replayed by ``Fleet.recover`` after
+    a crash (DESIGN.md §16).
 """
 from __future__ import annotations
 
@@ -59,6 +62,14 @@ def save(ckpt_dir: str, step: int, tree: Params, *, host_id: int = 0,
         np.savez(f, **arrays)
         tmp = f.name
     os.replace(tmp, shard_path)
+
+    from repro.robust import faults as _faults
+    if _faults.fire("ckpt_crash"):
+        # chaos: die between the shard write and the META commit point —
+        # the step dir is incomplete and latest_step must skip it
+        raise RuntimeError(
+            f"injected ckpt_crash: shard written but META.json withheld "
+            f"for step {step} ({step_dir})")
 
     if host_id == 0:
         meta = {"step": step, "n_hosts": n_hosts, "time": time.time(),
@@ -136,7 +147,9 @@ def gc_old(ckpt_dir: str, keep: int = 3) -> None:
 
 
 # ---------------------------------------------------------------------------
-# Unlearn-request journal (replay determinism across restarts)
+# Train-loop unlearn journal (launch/train.py's restart record).  NOT the
+# serving stack's durability story: forget requests go through the per-tenant
+# ``repro.robust.wal.ForgetWAL`` (accept/apply/dead ops + Fleet.recover).
 # ---------------------------------------------------------------------------
 def journal_append(ckpt_dir: str, record: Dict) -> None:
     os.makedirs(ckpt_dir, exist_ok=True)

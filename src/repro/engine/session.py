@@ -526,6 +526,47 @@ class UnlearnSession:
     def forget_many(self, params: Params, forget_sets: List[Tuple[Any, jax.Array]],
                     cfg: UnlearnConfig, *, reference: Optional[Params] = None
                     ) -> Tuple[Params, List[Dict], Dict]:
+        """Fault-injection shell around the group sweep (DESIGN.md §16).
+
+        ``fault_scope`` (set by the facade to the tenant name; defaults to
+        the adapter family) keys which installed ``FaultSpec``s hit this
+        session.  Both sites corrupt the CANDIDATE tree only — the caller's
+        guard discards it and the live weights never see the damage:
+
+        * ``nan_batch``      a non-finite dampening scale (lam = NaN), the
+                             numeric shape of a poisoned forget batch: every
+                             selected weight goes NaN (finite guard);
+        * ``fisher_corrupt`` the retain Fisher scaled to ~0, so selection
+                             grabs everything and beta ~= 0 zeroes it
+                             (edit-magnitude guard).  Restored in a finally:
+                             the session's Fisher survives the injection.
+        """
+        import dataclasses as _dc
+
+        from repro.robust import faults as _faults
+        scope = getattr(self, "fault_scope", None) or self.adapter.name
+        if _faults.fire("nan_batch", scope):
+            # alpha=0 widens selection to every weight with forget signal:
+            # the NaN scale is guaranteed to land however conservative the
+            # deployment's own alpha made the selection mask
+            cfg = _dc.replace(cfg, lam=float("nan"), alpha=0.0)
+        prev_fisher = None
+        if _faults.fire("fisher_corrupt", scope):
+            prev_fisher = self.fisher_global
+            self.fisher_global = jax.tree_util.tree_map(
+                lambda x: x * 1e-12, prev_fisher)
+        try:
+            return self._forget_many_impl(params, forget_sets, cfg,
+                                          reference=reference)
+        finally:
+            if prev_fisher is not None:
+                self.fisher_global = prev_fisher
+
+    def _forget_many_impl(self, params: Params,
+                          forget_sets: List[Tuple[Any, jax.Array]],
+                          cfg: UnlearnConfig, *,
+                          reference: Optional[Params] = None
+                          ) -> Tuple[Params, List[Dict], Dict]:
         """One back-to-front sweep serving a GROUP of forget sets.
 
         ``forget_sets`` is a list of (inputs, labels) pairs — e.g. every

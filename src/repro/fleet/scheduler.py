@@ -66,6 +66,7 @@ class _Pending:
     seq: int                    # global admission order — deterministic tie-break
     payloads: Tuple[Any, ...]   # >1 when overflow requests were folded in
     submitted: Optional[int] = None   # batch index at submission (queue age)
+    retries: int = 0            # guarded-drain retry attempts so far
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +76,11 @@ class DrainGroup:
     payloads: Tuple[Any, ...]
     due_batch: int    # earliest deadline in the group
     ages: Tuple[Optional[int], ...] = ()   # per-request queue age at drain
+    # per-request submission batch (None when untracked) — a guard-aborted
+    # group is requeued with these so retried work keeps AGING instead of
+    # looking freshly submitted
+    submitted: Tuple[Optional[int], ...] = ()
+    retries: int = 0  # max retry count folded into this group
 
     def __len__(self) -> int:
         return len(self.payloads)
@@ -110,6 +116,9 @@ class DrainScheduler:
         self.deferred_by: Dict[str, int] = {}
         self.rejects: Dict[str, int] = {}   # admission="reject" refusals
         self.merges: Dict[str, int] = {}    # admission="defer" aging folds
+        self.submits: Dict[str, int] = {}   # ADMITTED requests (enq + merge)
+        self.requeues: Dict[str, int] = {}  # guard-abort retry re-entries
+        self._dead: Dict[str, List[Dict[str, Any]]] = {}  # dead-letter queues
 
     # -- tenant registry ----------------------------------------------------
     def register(self, tenant: str, weight: float = 1.0) -> None:
@@ -128,6 +137,9 @@ class DrainScheduler:
         self.deferred_by[tenant] = 0
         self.rejects[tenant] = 0
         self.merges[tenant] = 0
+        self.submits[tenant] = 0
+        self.requeues[tenant] = 0
+        self._dead[tenant] = []
         # a newcomer starts at the floor of live virtual times so it cannot
         # claim an unbounded "catch-up" backlog against long-running tenants
         self._vtime[tenant] = min(self._vtime.values(), default=0.0)
@@ -175,16 +187,96 @@ class DrainScheduler:
                 submitted=old.submitted if old.submitted is not None
                 else now)
             self.merges[tenant] += 1
+            self.submits[tenant] += 1
             self._seq += 1
             _t.emit("queue.merge", tenant=tenant, payload=payload,
                     due_batch=due_batch, merged_due=q[idx].due_batch,
                     depth=len(q), submitted=now)
             return True
         q.append(_Pending(due_batch, self._seq, (payload,), now))
+        self.submits[tenant] += 1
         self._seq += 1
         _t.emit("queue.enqueue", tenant=tenant, payload=payload,
                 due_batch=due_batch, depth=len(q), submitted=now)
         return True
+
+    def requeue(self, tenant: str, payloads, due_batch: int, *,
+                submitted=None, retries: int = 1,
+                reason: str = "guard") -> None:
+        """Re-enter a guard-aborted drain group for retry at ``due_batch``.
+
+        Deliberately BYPASSES admission control and the submit counter:
+        the requests were already admitted (and counted) once, so a full
+        queue must not reject or re-count them — the accounting invariant
+        ``submitted == applied + pending + dead`` depends on it.  Each
+        payload keeps its original submission batch (``submitted``) so a
+        retried request keeps aging; under both policies aged work
+        outranks fresh traffic rather than starving behind it.
+        """
+        if tenant not in self._queues:
+            raise ValueError(f"unknown tenant {tenant!r}; registered: "
+                             f"{sorted(self._queues)}")
+        payloads = tuple(payloads)
+        if not payloads:
+            raise ValueError("requeue needs at least one payload — an "
+                             "empty retry group is a caller bug")
+        if not isinstance(due_batch, int) or isinstance(due_batch, bool):
+            raise ValueError(f"requeue due_batch must be an int batch "
+                             f"index, got {due_batch!r}")
+        if not isinstance(retries, int) or isinstance(retries, bool) \
+                or retries < 0:
+            raise ValueError(f"requeue retries must be an int >= 0 (the "
+                             f"attempt count carried forward; 0 when a "
+                             f"deadline miss requeues without burning a "
+                             f"retry), got {retries!r}")
+        submitted = (tuple(submitted) if submitted is not None
+                     else (None,) * len(payloads))
+        if len(submitted) != len(payloads):
+            raise ValueError(
+                f"requeue submitted= must align with payloads "
+                f"({len(submitted)} vs {len(payloads)})")
+        # one entry per original submission time: age bookkeeping survives
+        # the retry round-trip exactly
+        for sub in sorted({s for s in submitted},
+                          key=lambda s: (s is None, s)):
+            pl = tuple(p for p, s in zip(payloads, submitted) if s == sub)
+            self._queues[tenant].append(
+                _Pending(due_batch, self._seq, pl, sub, retries))
+            self._seq += 1
+        self.requeues[tenant] += 1
+        _t.emit("queue.requeue", tenant=tenant, n=len(payloads),
+                due_batch=due_batch, retries=retries, reason=reason,
+                depth=len(self._queues[tenant]))
+
+    def dead_letter(self, tenant: str, payloads, *, reason: str,
+                    submitted=None, batch=None) -> None:
+        """Terminal parking for retries-exhausted requests: full
+        accounting, no silent loss — ``submitted == applied + pending +
+        dead`` counts these in ``dead``."""
+        if tenant not in self._queues:
+            raise ValueError(f"unknown tenant {tenant!r}; registered: "
+                             f"{sorted(self._queues)}")
+        payloads = list(payloads)
+        if not payloads:
+            raise ValueError("dead_letter needs at least one payload")
+        self._dead[tenant].append({
+            "payloads": payloads, "reason": str(reason),
+            "submitted": list(submitted) if submitted is not None else None,
+            "batch": batch})
+        _t.emit("queue.dead_letter", tenant=tenant, n=len(payloads),
+                payloads=payloads, reason=str(reason), batch=batch)
+
+    def dead(self, tenant: Optional[str] = None) -> int:
+        """Dead-lettered REQUEST count (per tenant or fleet-wide)."""
+        if tenant is not None:
+            return sum(len(e["payloads"])
+                       for e in self._dead.get(tenant, ()))
+        return sum(len(e["payloads"])
+                   for q in self._dead.values() for e in q)
+
+    def dead_entries(self, tenant: str) -> List[Dict[str, Any]]:
+        """Read-only view of one tenant's dead-letter queue."""
+        return [dict(e) for e in self._dead.get(tenant, ())]
 
     def pending(self, tenant: Optional[str] = None) -> int:
         """Queued REQUEST count (folded entries count every payload)."""
@@ -284,6 +376,7 @@ class DrainScheduler:
             due.sort(key=lambda p: p.seq)
             payloads: List[Any] = []
             ages: List[Optional[int]] = []
+            submitted: List[Optional[int]] = []
             for p in due:
                 age = (int(batch_idx) - p.submitted
                        if finite and p.submitted is not None else None)
@@ -297,12 +390,15 @@ class DrainScheduler:
                 for x in p.payloads:
                     payloads.append(x)
                     ages.append(age)
+                    submitted.append(p.submitted)
             self._vtime[tenant] += len(payloads) / self._weights[tenant]
             groups.append(DrainGroup(
                 tenant=tenant,
                 payloads=tuple(payloads),
                 due_batch=min(p.due_batch for p in due),
-                ages=tuple(ages)))
+                ages=tuple(ages),
+                submitted=tuple(submitted),
+                retries=max(p.retries for p in due)))
         return groups
 
     def snapshot(self) -> Dict[str, Any]:
@@ -312,6 +408,9 @@ class DrainScheduler:
                 "deferred_by": dict(self.deferred_by),
                 "rejects": dict(self.rejects),
                 "merges": dict(self.merges),
+                "submits": dict(self.submits),
+                "requeues": dict(self.requeues),
+                "dead": {t: self.dead(t) for t in self._queues},
                 "pending": {t: self.pending(t) for t in self._queues},
                 "queue_depth": {t: len(q)
                                 for t, q in self._queues.items()},

@@ -25,6 +25,7 @@ import math
 from typing import Any, Dict, Optional, Tuple
 
 from repro.api.specs import ServeSpec, UnlearnSpec, _require
+from repro.robust.guards import GuardSpec
 
 SCHEDULING_POLICIES = ("fair", "deadline")
 ADMISSION_POLICIES = ("defer", "reject")
@@ -133,6 +134,17 @@ class FleetSpec:
                     entry (admitted, ages with it — never starves),
                     ``"reject"`` refuses it with a structured telemetry
                     event (the caller surfaces the refusal).
+    ``guard``       fleet-wide default drain guard (``repro.robust.
+                    GuardSpec``): every tenant whose own spec does not set
+                    ``exec.guard`` validates its drained tree against this
+                    one before any publication/commit.  None = unguarded
+                    (the historical behaviour).
+    ``wal_dir``     root directory of the per-tenant durable forget-request
+                    WALs (``<wal_dir>/<tenant>/forget_wal.jsonl``): every
+                    accepted request is journaled before it can drain, and
+                    ``Fleet.recover`` replays unapplied entries after a
+                    crash.  None = no durability (the historical
+                    behaviour).
     """
     tenants: Tuple[TenantSpec, ...] = ()
     serve: ServeSpec = ServeSpec()
@@ -140,6 +152,8 @@ class FleetSpec:
     max_groups_per_drain: int = 0
     max_queue_per_tenant: int = 0
     admission: str = "defer"
+    guard: Optional[GuardSpec] = None
+    wal_dir: Optional[str] = None
 
     def __post_init__(self):
         tenants = self.tenants
@@ -184,6 +198,16 @@ class FleetSpec:
         _require(self.admission in ADMISSION_POLICIES,
                  f"FleetSpec.admission must be one of {ADMISSION_POLICIES},"
                  f" got {self.admission!r}")
+        if isinstance(self.guard, dict):
+            object.__setattr__(self, "guard", GuardSpec.from_dict(self.guard))
+        _require(self.guard is None or isinstance(self.guard, GuardSpec),
+                 f"FleetSpec.guard must be None or a repro.robust.GuardSpec "
+                 f"(or a mapping of its fields), "
+                 f"got {type(self.guard).__name__}")
+        _require(self.wal_dir is None
+                 or (isinstance(self.wal_dir, str) and self.wal_dir),
+                 f"FleetSpec.wal_dir must be None or a non-empty path, "
+                 f"got {self.wal_dir!r}")
         # the XLA compilation cache is PROCESS-global: per-tenant dirs
         # cannot coexist in one fleet (enable_compilation_cache would raise
         # at the second tenant's first compile — fail here, actionably)
@@ -218,7 +242,9 @@ class FleetSpec:
                 "scheduling": self.scheduling,
                 "max_groups_per_drain": self.max_groups_per_drain,
                 "max_queue_per_tenant": self.max_queue_per_tenant,
-                "admission": self.admission}
+                "admission": self.admission,
+                "guard": None if self.guard is None else self.guard.to_dict(),
+                "wal_dir": self.wal_dir}
 
     @classmethod
     def from_dict(cls, d: Any) -> "FleetSpec":
@@ -240,6 +266,8 @@ class FleetSpec:
                 for t in kw["tenants"])
         if isinstance(kw.get("serve"), dict):
             kw["serve"] = ServeSpec.from_dict(kw["serve"])
+        if isinstance(kw.get("guard"), dict):
+            kw["guard"] = GuardSpec.from_dict(kw["guard"])
         return cls(**kw)
 
     def to_json(self, **json_kw) -> str:

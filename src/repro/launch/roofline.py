@@ -94,12 +94,13 @@ def roofline_terms(cost: Dict[str, float], coll_bytes_per_dev: int,
 
 
 def memory_summary(mem) -> Dict[str, float]:
+    """Numeric fields of a compiled-program memory analysis; fields a JAX
+    version doesn't expose (or exposes non-numerically) are simply absent."""
     out = {}
     for k in ("argument_size_in_bytes", "output_size_in_bytes",
               "temp_size_in_bytes", "alias_size_in_bytes",
               "generated_code_size_in_bytes"):
-        try:
-            out[k] = int(getattr(mem, k))
-        except Exception:
-            pass
+        v = getattr(mem, k, None)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[k] = int(v)
     return out

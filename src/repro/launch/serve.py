@@ -294,8 +294,30 @@ class ForgetService:
         ``(tree, ran)`` for the engine to stage/publish at its deadline."""
         return self._rt.run_due_shadow(list(payloads), batch_idx)
 
-    def stage(self, tree) -> None:
-        self._rt.stage(tree)
+    def run_shadow_guarded(self, payloads, batch_idx):
+        """``run_shadow`` + the guard violation captured on the SAME
+        worker thread (reading ``last_violation`` at the publication
+        deadline would race with a LATER sweep overwriting it on the
+        serialized worker).  Returns ``(tree, ran, violation)``.
+        Delegates through ``run_shadow`` so a stubbed shadow runner
+        (tests, bench warmup) stays on the call path."""
+        tree, ran = self.run_shadow(payloads, batch_idx)
+        return tree, ran, self._rt.last_violation
+
+    def abort_group(self, group, violation, step, tree=None) -> str:
+        """Route a failed shadow sweep through the fleet's abort path
+        (retry/backoff via the scheduler, then the dead-letter queue);
+        the live tree keeps serving.  Returns the action taken."""
+        return self._fleet._abort(group, self._rt, violation, step,
+                                  "step", tree=tree)
+
+    def book_skipped(self, payloads, batch) -> None:
+        """Account a clean no-op drain (no forget samples for the due
+        payloads): the requests are served, just with nothing to edit."""
+        self._rt.book_applied(list(payloads), batch=batch)
+
+    def stage(self, tree, *, payloads=None, batch=None) -> None:
+        self._rt.stage(tree, payloads=payloads, batch=batch)
 
     def publish_staged(self, step=None) -> bool:
         """Atomic between-steps pointer swap of the staged tree."""
@@ -309,7 +331,7 @@ class ForgetService:
 # event kinds emitted on the ENGINE thread (deterministic order); sweep
 # worker threads emit their own events at scheduler-dependent points
 ENGINE_EVENT_KINDS = frozenset({"batch.admit", "batch.evict", "drain.fire",
-                                "params.publish"})
+                                "drain.abort", "params.publish"})
 
 
 def engine_fingerprint(events) -> str:
@@ -393,8 +415,11 @@ class StreamEngine:
         self.results: Dict[int, object] = {}
         self.step = 0
         self.publications = 0
+        self.aborts = 0
         self.step_wall: List[float] = []   # per-step loop wall seconds
-        self._pending_pubs: List[List] = []   # [deadline_step, future]
+        # [deadline_step, future, scheduler group] — the group rides along
+        # so a failed sweep can be requeued/dead-lettered at the deadline
+        self._pending_pubs: List[List] = []
         self._executor = None
 
         def _step(params, cache, tok, pos, gidx, outbuf):
@@ -467,10 +492,11 @@ class StreamEngine:
                     and self.slot_written[r] >= self.G:
                 sid = self.slot_seq[r]
                 row = self.outbuf[r]          # device gather, lazy
-                try:
-                    row.copy_to_host_async()  # overlap with decode
-                except AttributeError:
-                    pass
+                # overlap the device->host copy with decode when the array
+                # type supports it (a feature probe, not error handling)
+                copy_async = getattr(row, "copy_to_host_async", None)
+                if copy_async is not None:
+                    copy_async()
                 self.results[sid] = row
                 _t.emit("batch.evict", step=self.step, row=r, seq=sid)
                 self.slot_seq[r] = None
@@ -489,9 +515,9 @@ class StreamEngine:
             self._executor = concurrent.futures.ThreadPoolExecutor(
                 max_workers=1)   # serializes sweeps: drain k+1 after k
         for g in svc.scheduler.due_groups(step):
-            fut = self._executor.submit(svc.run_shadow,
+            fut = self._executor.submit(svc.run_shadow_guarded,
                                         list(g.payloads), step)
-            self._pending_pubs.append([step + self.publish_lag, fut])
+            self._pending_pubs.append([step + self.publish_lag, fut, g])
             _t.emit("drain.fire", step=step, n_requests=len(g.payloads),
                     payloads=list(g.payloads),
                     publish_at=step + self.publish_lag)
@@ -505,16 +531,32 @@ class StreamEngine:
         self._pending_pubs = [p for p in self._pending_pubs if p[0] > step]
         svc = self.svc
         published = False
-        for _, fut in due:
+        for _, fut, g in due:
             # joining at the DEADLINE keeps the publication step (and the
             # published content, via the shadow chain) deterministic no
             # matter how thread timing interleaved the sweep itself
-            tree, ran = fut.result()
+            tree = None
+            violation = None
+            try:
+                tree, ran, violation = fut.result()
+            except Exception as e:   # worker died: nothing staged, abort
+                ran = False
+                violation = {"guard": "exception", "detail": repr(e),
+                             "applied_idx": [], "handled_idx": [],
+                             "requeue_idx": list(range(len(g.payloads)))}
+            if violation is not None:
+                # the live tree keeps serving; the failed group goes back
+                # through the scheduler (retry budget) or dead-letters
+                self.aborts += 1
+                svc.abort_group(g, violation, self.step, tree=tree)
+                continue
             if ran:
-                svc.stage(tree)
+                svc.stage(tree, payloads=list(g.payloads), batch=self.step)
                 if svc.publish_staged(step=self.step):
                     self.publications += 1
                     published = True
+            else:
+                svc.book_skipped(list(g.payloads), batch=self.step)
         if published:
             self.params = svc.params
 
@@ -545,10 +587,16 @@ class StreamEngine:
 
     def finish(self) -> Dict[int, np.ndarray]:
         if self.svc is not None:
-            # a forget request must never be silently dropped at shutdown
-            while self.svc.scheduler.pending():
-                self._fire_drains(float("inf"))
-            self._publish_due(float("inf"))
+            # a forget request must never be silently dropped at shutdown —
+            # and an abort at the publish deadline can REQUEUE work, so the
+            # flush must alternate fire/publish until both the queue and
+            # the in-flight publications are empty (termination: the retry
+            # budget bounds requeues before the dead-letter queue takes
+            # the group)
+            while self.svc.scheduler.pending() or self._pending_pubs:
+                while self.svc.scheduler.pending():
+                    self._fire_drains(float("inf"))
+                self._publish_due(float("inf"))
             if self._executor is not None:
                 self._executor.shutdown(wait=True)
                 self._executor = None
@@ -708,8 +756,8 @@ def _main_fleet(args) -> dict:
                    "engine_stats": (dict(rt.unlearner.stats)
                                     if rt.unlearner is not None else {})}
             for name, rt in fleet.tenants.items()},
-        "drain_log": [{k: e[k] for k in ("tenant", "batch", "payloads",
-                                         "ran")}
+        "drain_log": [{k: e.get(k) for k in ("tenant", "batch", "payloads",
+                                             "ran", "aborted", "missed")}
                       for e in fleet.drain_log],
         "fleet_stats": fleet.stats(),
         "compilation_cache": cache_info,
@@ -721,6 +769,25 @@ def _main_fleet(args) -> dict:
 
     if args.check:
         problems = []
+        # guarded-drain gate: a fault-free fleet serve must never abort a
+        # drain, dead-letter a request, or break the request accounting
+        for name, rt in fleet.tenants.items():
+            if rt.aborts:
+                problems.append(
+                    f"tenant {name!r}: {rt.aborts} drain abort(s) "
+                    f"(last: {rt.abort_log[-1].get('guard')!r}) in a "
+                    "fault-free serve")
+        if fleet.scheduler.dead():
+            problems.append(
+                f"{fleet.scheduler.dead()} forget request(s) dead-lettered "
+                "in a fault-free serve")
+        for name, acct in fleet.accounting().items():
+            if not acct["ok"]:
+                problems.append(
+                    f"tenant {name!r}: request accounting broken — "
+                    f"{acct['submitted']} submitted != {acct['applied']} "
+                    f"applied + {acct['pending']} pending + "
+                    f"{acct['staged']} staged + {acct['dead']} dead")
         # per-tenant coalescing gate: ONE engine sweep per drain point
         if fspec.serve.coalesce:
             for name, rt in fleet.tenants.items():
@@ -886,6 +953,8 @@ def _main_stream(args, cfg, params, tokens, domains, seq_len: int) -> dict:
         "steps": eng.step,
         "elapsed_s": round(time.time() - t0, 3),
         "publications": eng.publications,
+        "drain_aborts": eng.aborts,
+        "dead_letters": svc.scheduler.dead(),
         "params_version": svc.params_version,
         "decode_step_p50_ms": round(_percentile(lat, 0.50) * 1e3, 4),
         "decode_step_p99_ms": round(_percentile(lat, 0.99) * 1e3, 4),
@@ -921,6 +990,15 @@ def _main_stream(args, cfg, params, tokens, domains, seq_len: int) -> dict:
         if svc.scheduler.pending():
             problems.append(f"{svc.scheduler.pending()} forget request(s) "
                             "still queued at shutdown")
+        if eng.aborts:
+            problems.append(
+                f"{eng.aborts} shadow drain(s) aborted (guard violation "
+                "or worker exception) — a fault-free serve must never "
+                "trip the drain guard")
+        if svc.scheduler.dead():
+            problems.append(
+                f"{svc.scheduler.dead()} forget request(s) dead-lettered "
+                "— no request may terminally fail in a fault-free serve")
         if problems:
             _t.log("serve", "STREAM CHECK FAILED: " + "; ".join(problems))
             raise SystemExit(1)

@@ -29,6 +29,7 @@ from repro.api.specs import _require
 from repro.obs import telemetry as _tel
 from repro.obs.report import summarize
 from repro.obs.telemetry import Telemetry, VirtualClock, wall_time
+from repro.robust.faults import FaultInjector, FaultSpec
 
 from .arrivals import ArrivalSpec
 
@@ -60,6 +61,10 @@ class LoadScenario:
     ``gen_batch_cap``/``prompt_len``/``gen_len``  decode batch shape when
                         ``serve_generate`` is on.
     ``seed``            scenario master seed.
+    ``faults``          seeded fault-injection plan (``FaultSpec`` tuple):
+                        a fresh ``FaultInjector`` is installed for every
+                        ``run()`` (and restored after), so a chaos
+                        scenario is exactly as repeatable as a clean one.
     """
     ticks: int = 32
     warmup_ticks: int = 4
@@ -72,6 +77,7 @@ class LoadScenario:
     prompt_len: int = 8
     gen_len: int = 4
     seed: int = 0
+    faults: Tuple[FaultSpec, ...] = ()
 
     def __post_init__(self):
         for name, lo in (("ticks", 1), ("warmup_ticks", 0),
@@ -93,11 +99,22 @@ class LoadScenario:
         _require(isinstance(self.serve_generate, bool),
                  f"LoadScenario.serve_generate must be a bool, "
                  f"got {self.serve_generate!r}")
+        _require(isinstance(self.faults, (tuple, list)),
+                 f"LoadScenario.faults must be a tuple of FaultSpec (or "
+                 f"mappings), got {type(self.faults).__name__}")
+        object.__setattr__(self, "faults", tuple(
+            FaultSpec.from_dict(f) if isinstance(f, dict) else f
+            for f in self.faults))
+        for f in self.faults:
+            _require(isinstance(f, FaultSpec),
+                     f"LoadScenario.faults entries must be FaultSpec (or "
+                     f"mappings), got {type(f).__name__}")
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["forget"] = self.forget.to_dict()
         d["generate"] = self.generate.to_dict()
+        d["faults"] = [f.to_dict() for f in self.faults]
         return d
 
     @classmethod
@@ -222,6 +239,9 @@ class LoadHarness:
             else Telemetry(clock=VirtualClock(), keep=True)
         prev = _tel.install(tel)
         sc = self.scenario
+        from repro.robust import faults as _faults
+        prev_inj = _faults.install(
+            FaultInjector(sc.faults) if sc.faults else None)
         admitted = rejected = 0
         try:
             for t in range(sc.ticks):
@@ -266,6 +286,8 @@ class LoadHarness:
                 "scenario": sc.to_dict(),
                 **summary,
                 "scheduler": self.fleet.scheduler.snapshot(),
+                "accounting": self.fleet.accounting()
+                if hasattr(self.fleet, "accounting") else {},
                 "admitted": admitted,
                 "rejected_submits": rejected,
                 "final_tick": t,
@@ -274,6 +296,7 @@ class LoadHarness:
                 "fingerprint": _tel.fingerprint(events),
             }
         finally:
+            _faults.install(prev_inj)
             _tel.install(prev)
             if own:
                 tel.close()

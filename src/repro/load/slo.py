@@ -47,6 +47,10 @@ class SLOSpec:
                              the zero-warm-compile pin under load).
     ``forget_p99_s``         wall-clock p99 of drain latency (machine
                              dependent; None for deterministic gates).
+    ``max_dead_letter_fraction``  dead-lettered / submitted forget
+                             requests (the guarded-drain terminal-failure
+                             budget; 0 pins "no request permanently
+                             fails" in non-chaos runs).
     """
     max_queue_age_p99: Optional[float] = None
     max_queue_depth: Optional[int] = None
@@ -54,6 +58,7 @@ class SLOSpec:
     max_reject_fraction: Optional[float] = None
     max_steady_compiles: Optional[int] = None
     forget_p99_s: Optional[float] = None
+    max_dead_letter_fraction: Optional[float] = None
 
     def __post_init__(self):
         _opt_num("max_queue_age_p99", self.max_queue_age_p99)
@@ -77,6 +82,12 @@ class SLOSpec:
                  f"SLOSpec.max_steady_compiles must be None or an int >= 0, "
                  f"got {self.max_steady_compiles!r}")
         _opt_num("forget_p99_s", self.forget_p99_s)
+        _require(self.max_dead_letter_fraction is None
+                 or (isinstance(self.max_dead_letter_fraction, (int, float))
+                     and not isinstance(self.max_dead_letter_fraction, bool)
+                     and 0 <= float(self.max_dead_letter_fraction) <= 1),
+                 f"SLOSpec.max_dead_letter_fraction must be None or in "
+                 f"[0, 1], got {self.max_dead_letter_fraction!r}")
 
     # -- JSON round trip ----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -145,6 +156,12 @@ class SLOSpec:
               fleet.get("steady_state_compiles"))
         lat = fleet.get("drain_latency_s", {})
         bound("forget_p99_s <= max", self.forget_p99_s, lat.get("p99"))
+        dead = fleet.get("dead_letters")
+        dfrac = (dead / submitted
+                 if submitted and dead is not None else
+                 (0.0 if dead == 0 else None))
+        bound("dead_letter_fraction <= max", self.max_dead_letter_fraction,
+              dfrac)
 
         attained = (sum(1 for r in rows if r["ok"]) / len(rows)
                     if rows else 1.0)

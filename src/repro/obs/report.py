@@ -54,6 +54,7 @@ def summarize(events: Iterable[Dict[str, Any]],
     gen_lat = Summary()
     n = {"events": 0, "submitted": 0, "rejected": 0, "merged": 0,
          "deferrals": 0, "drains": 0, "drained_requests": 0,
+         "aborts": 0, "requeues": 0, "dead_letters": 0, "faults": 0,
          "compiles": 0, "steady_state_compiles": 0, "program_hits": 0,
          "sweeps": 0, "refreshes": 0, "generates": 0}
     depth_max = 0
@@ -65,6 +66,7 @@ def summarize(events: Iterable[Dict[str, Any]],
             tenants[name] = {"submitted": 0, "rejected": 0, "merged": 0,
                              "deferrals": 0, "drains": 0,
                              "drained_requests": 0, "depth_max": 0,
+                             "aborts": 0, "requeues": 0, "dead_letters": 0,
                              "age": Summary()}
         return tenants[name]
 
@@ -125,6 +127,23 @@ def summarize(events: Iterable[Dict[str, Any]],
             lat = ev.get("latency_s")
             if isinstance(lat, (int, float)):
                 fleet_lat.observe(lat)
+        elif kind == "drain.abort":
+            # the robustness rollup: guard-rejected (or crashed) drains —
+            # the live tree kept serving, the group retried or dead-lettered
+            n["aborts"] += 1
+            if tn:
+                tstats(tn)["aborts"] += 1
+        elif kind == "queue.requeue":
+            n["requeues"] += 1
+            if tn:
+                tstats(tn)["requeues"] += 1
+        elif kind == "queue.dead_letter":
+            cnt = ev.get("n", 0) or 0
+            n["dead_letters"] += cnt
+            if tn:
+                tstats(tn)["dead_letters"] += cnt
+        elif kind == "fault.inject":
+            n["faults"] += 1
         elif kind == "program.compile":
             n["compiles"] += 1
             if isinstance(t, int) and t >= warmup_t:
@@ -212,6 +231,7 @@ def render(summary: Dict[str, Any],
             "| metric | value |", "|---|---:|"]
     for key in ("events", "duration_t", "submitted", "rejected", "merged",
                 "deferrals", "drains", "drained_requests",
+                "aborts", "requeues", "dead_letters", "faults",
                 "drain_throughput", "queue_depth_max", "sweeps",
                 "refreshes", "generates", "generate_tokens"):
         out.append(f"| {key} | {_fmt(fleet.get(key))} |")

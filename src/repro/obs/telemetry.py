@@ -121,8 +121,8 @@ class Telemetry:
                              f"string, got {path!r}")
         self.clock = clock if clock is not None else VirtualClock()
         self.path = path
-        self._fh = open(path, "w") if path else None
         self.keep = bool(keep)
+        self.degraded = False
         self.events: List[Dict[str, Any]] = []
         self.counts: Dict[str, int] = {}
         self._seq = 0
@@ -130,6 +130,41 @@ class Telemetry:
         # drain-path events interleave with the engine's own — the seq
         # counter, counts, events list and JSONL sink all need one lock
         self._lock = threading.Lock()
+        self._fh = None
+        if path:
+            try:
+                self._fh = open(path, "w")
+            except OSError as e:
+                self._degrade_locked(e)
+
+    def _degrade_locked(self, exc: BaseException) -> None:
+        """JSONL sink failure (disk full, unwritable path, closed fd):
+        observability must never take down the serving process.  One
+        stderr warning, the sink is dropped, events are retained in
+        memory from here on (even with ``keep=False``), and a synthetic
+        ``telemetry.degraded`` event marks the spot in the stream.
+        Caller must hold ``self._lock`` (or be in ``__init__``)."""
+        if self.degraded:
+            return
+        self.degraded = True
+        import sys
+        print(f"[telemetry] WARNING: JSONL sink {self.path!r} degraded "
+              f"({exc!r}); events kept in memory only", file=sys.stderr,
+              flush=True)
+        if self._fh is not None:
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+            self._fh = None
+        self.keep = True  # the in-memory stream is now the only record
+        event = {"seq": self._seq, "t": self.clock.now(),
+                 "kind": "telemetry.degraded", "path": self.path,
+                 "error": repr(exc)}
+        self._seq += 1
+        self.counts["telemetry.degraded"] = \
+            self.counts.get("telemetry.degraded", 0) + 1
+        self.events.append(event)
 
     def emit(self, kind: str, **fields: Any) -> Dict[str, Any]:
         if not isinstance(kind, str) or not kind:
@@ -145,8 +180,14 @@ class Telemetry:
             if self.keep:
                 self.events.append(event)
             if self._fh is not None:
-                self._fh.write(json.dumps(event) + "\n")
-                self._fh.flush()
+                try:
+                    self._fh.write(json.dumps(event) + "\n")
+                    self._fh.flush()
+                except (OSError, ValueError) as e:
+                    # ValueError: write on a closed file object
+                    if not self.keep:
+                        self.events.append(event)
+                    self._degrade_locked(e)
         return event
 
     def log(self, tag: str, msg: str, **fields: Any) -> None:
@@ -158,7 +199,11 @@ class Telemetry:
 
     def close(self) -> None:
         if self._fh is not None:
-            self._fh.close()
+            try:
+                self._fh.close()
+            except OSError as e:
+                with self._lock:
+                    self._degrade_locked(e)
             self._fh = None
 
     def __enter__(self) -> "Telemetry":

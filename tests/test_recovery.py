@@ -1,0 +1,209 @@
+"""Crash recovery (DESIGN.md §16) tests:
+
+  * ``latest_step`` skips an incomplete step dir — an injected
+    ``ckpt_crash`` dies between the shard write and the META.json commit
+    point, and restore falls back to the last COMPLETE step;
+  * ``Fleet.checkpoint`` / ``Fleet.recover`` round trip: params + Fisher
+    restore bit-exactly keyed by ``params_version``;
+  * the kill-and-recover proof: a run SIGKILLed mid-drain (after the WAL
+    accepted the request, before any publication) recovers — restore the
+    latest complete checkpoint, replay the unapplied WAL entries — to
+    weights and Fisher BIT-IDENTICAL to an uninterrupted twin run, with
+    no request lost or double-applied;
+  * recovery refuses tenants with a RefreshSpec (streamed-refresh EMA
+    state is not checkpointed, so replay would diverge).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import RefreshSpec, UnlearnSpec
+from repro.ckpt import checkpoint as ckpt
+from repro.data import synthetic as syn
+from repro.fleet import Fleet
+from repro.models import lm as LM
+from repro.robust import FaultInjector, FaultSpec, ForgetWAL, faults
+
+SEQ = 16
+
+
+def _spec(**kw):
+    base = dict(alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
+                chunk_size=4, sweep_mode="scanned")
+    base.update(kw)
+    return UnlearnSpec.for_mode("ficabu", **base)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LM.LMConfig(name="recov-t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=64)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    faults.install(None)
+    yield
+    faults.install(None)
+
+
+def _build_fleet(tiny_cfg, wal_dir=None):
+    dcfg = syn.LMDataConfig(vocab=tiny_cfg.vocab, n_domains=4, seq_len=SEQ,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+    fleet = Fleet()
+    rt = fleet.add_tenant("a", tiny_cfg, toks, doms, SEQ, params=params,
+                          spec=_spec())
+    if wal_dir is not None:
+        rt.wal = ForgetWAL(str(wal_dir), "a")
+    return fleet, rt
+
+
+def _trees_bit_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# latest_step: incomplete step dirs (shard, no META) are never restored
+# ---------------------------------------------------------------------------
+def test_latest_step_skips_incomplete_dir(tmp_path):
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    # chaos: the writer dies between the shard write and the META commit
+    faults.install(FaultInjector([FaultSpec("ckpt_crash")]))
+    with pytest.raises(RuntimeError, match="ckpt_crash"):
+        ckpt.save(str(tmp_path), 2, {"w": tree["w"] * 2})
+    faults.install(None)
+    step2 = tmp_path / "step_00000002"
+    assert (step2 / "host_0.npz").exists()       # the torn artifact
+    assert not (step2 / "META.json").exists()
+    assert ckpt.latest_step(str(tmp_path)) == 1  # incomplete dir skipped
+    restored, meta = ckpt.restore(str(tmp_path), 1, tree)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    assert meta["step"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Fleet.checkpoint / Fleet.recover round trip
+# ---------------------------------------------------------------------------
+def test_fleet_checkpoint_recover_round_trip(tiny_cfg, tmp_path):
+    fleet, rt = _build_fleet(tiny_cfg, wal_dir=tmp_path / "wal")
+    fleet.submit("a", 1, due_batch=1)
+    fleet.drain(1)
+    assert rt.params_version == 1
+    dirs = fleet.checkpoint(str(tmp_path / "ckpt"))
+    assert "a" in dirs
+    p1, f1 = rt.params, rt.unlearner.fisher_global
+
+    fleet2, rt2 = _build_fleet(tiny_cfg, wal_dir=tmp_path / "wal")
+    report = fleet2.recover(str(tmp_path / "ckpt"))
+    assert report["a"] == {"restored_step": 1, "restored_version": 1,
+                           "replayed": []}      # WAL fully absorbed
+    assert rt2.params_version == 1
+    _trees_bit_equal(rt2.params, p1)
+    _trees_bit_equal(rt2.unlearner.fisher_global, f1)
+
+
+def test_recover_refuses_refresh_tenants(tiny_cfg, tmp_path):
+    dcfg = syn.LMDataConfig(vocab=tiny_cfg.vocab, n_domains=4, seq_len=SEQ,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+    fleet = Fleet()
+    fleet.add_tenant("r", tiny_cfg, toks, doms, SEQ, params=params,
+                     spec=_spec(refresh=RefreshSpec(every_drains=1)))
+    with pytest.raises(ValueError, match="RefreshSpec"):
+        fleet.recover(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# the kill-and-recover proof (subprocess SIGKILL via kill_mid_drain)
+# ---------------------------------------------------------------------------
+_VICTIM = textwrap.dedent("""\
+    import sys
+    import jax
+    from repro.api import UnlearnSpec
+    from repro.data import synthetic as syn
+    from repro.fleet import Fleet
+    from repro.models import lm as LM
+    from repro.robust import FaultInjector, FaultSpec, ForgetWAL, faults
+
+    wal_dir, ckpt_dir = sys.argv[1], sys.argv[2]
+    SEQ = 16
+    cfg = LM.LMConfig(name="recov-t", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab=64)
+    dcfg = syn.LMDataConfig(vocab=cfg.vocab, n_domains=4, seq_len=SEQ,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg)
+    spec = UnlearnSpec.for_mode("ficabu", alpha=8.0, lam=1.0, tau=0.6,
+                                checkpoint_every=2, chunk_size=4,
+                                sweep_mode="scanned")
+    fleet = Fleet()
+    rt = fleet.add_tenant("a", cfg, toks, doms, SEQ, params=params,
+                          spec=spec)
+    rt.wal = ForgetWAL(wal_dir, "a")
+    fleet.submit("a", 1, due_batch=1)
+    fleet.drain(1)                      # applied at params_version 1
+    fleet.checkpoint(ckpt_dir)          # durable: v1 params + Fisher
+    fleet.submit("a", 2, due_batch=2)   # durable WAL accept...
+    faults.install(FaultInjector([FaultSpec("kill_mid_drain",
+                                            tenant="a")]))
+    fleet.drain(2)                      # ...SIGKILLed before it applies
+    print("UNREACHABLE", flush=True)    # the kill must not return
+""")
+
+
+def test_kill_mid_drain_recovers_bit_exact(tiny_cfg, tmp_path):
+    wal_dir = str(tmp_path / "wal")
+    ckpt_dir = str(tmp_path / "ckpt")
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH"),
+                    os.path.join(os.path.dirname(__file__), "..", "src"))
+        if p)
+    proc = subprocess.run([sys.executable, "-c", _VICTIM, wal_dir,
+                           ckpt_dir], env=env, capture_output=True,
+                          text=True, timeout=600)
+    assert proc.returncode == -9, proc.stderr    # died by SIGKILL, mid-drain
+    assert "UNREACHABLE" not in proc.stdout
+
+    # durable state: a v1 checkpoint and a WAL with request 2 accepted
+    wal_view = ForgetWAL(wal_dir, "a")
+    assert wal_view.accounting() == {"accepted": 2, "applied": 1,
+                                     "dead": 0, "pending": 1}
+
+    # recover: restore the checkpoint, replay the unapplied WAL entry
+    fleet, rt = _build_fleet(tiny_cfg, wal_dir=wal_dir)
+    report = fleet.recover(ckpt_dir)
+    assert report["a"]["restored_step"] == 1
+    assert report["a"]["restored_version"] == 1
+    assert len(report["a"]["replayed"]) == 1     # request 2, exactly once
+    assert rt.params_version == 2
+    assert rt.wal.accounting() == {"accepted": 2, "applied": 2,
+                                   "dead": 0, "pending": 0}
+
+    # the uninterrupted twin: same seeds, same drains, no faults
+    twin, rt_twin = _build_fleet(tiny_cfg)
+    twin.submit("a", 1, due_batch=1)
+    twin.drain(1)
+    twin.submit("a", 2, due_batch=2)
+    twin.drain(2)
+    assert rt_twin.params_version == 2
+
+    _trees_bit_equal(rt.params, rt_twin.params)
+    _trees_bit_equal(rt.unlearner.fisher_global,
+                     rt_twin.unlearner.fisher_global)

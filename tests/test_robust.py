@@ -1,0 +1,405 @@
+"""Fault-tolerant unlearning (repro.robust, DESIGN.md §16) tests:
+
+  * GuardSpec: JSON round trip, validation, and the three checks (finite /
+    edit_magnitude / retain_floor) on synthetic trees;
+  * FaultSpec/FaultInjector: occurrence windows, tenant scoping, and the
+    process-wide install/fire hook;
+  * ForgetWAL: durable accept/apply/dead fold, the crash read path
+    (reconstruct from disk), payload->id matching, the version-aware
+    unapplied() replay rule, and accounting;
+  * guarded drains end to end: an injected NaN forget batch trips the
+    finite guard — the live tree is bit-untouched, the group requeues with
+    backoff and succeeds on retry; a corrupted Fisher trips the
+    edit-magnitude guard; an exhausted retry budget dead-letters with
+    exact accounting (submitted == applied + pending + staged + dead);
+    an injected deadline miss requeues WITHOUT burning a retry;
+  * the stream engine: a shadow-sweep worker exception surfaces as a
+    drain.abort at the publication deadline (never a swallowed Future),
+    the live tree keeps serving, and the abort is counted;
+  * telemetry degradation: a failing JSONL sink warns once on stderr,
+    keeps events in memory, and never raises into the serving loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ServeSpec, UnlearnSpec
+from repro.data import synthetic as syn
+from repro.fleet import Fleet
+from repro.launch.serve import StreamEngine, _trees_bitwise_equal
+from repro.models import lm as LM
+from repro.obs import telemetry as _t
+from repro.robust import (FaultInjector, FaultSpec, ForgetWAL, GuardSpec,
+                          faults)
+
+P, G = 8, 6
+SEQ = 16
+
+
+def _spec(**kw):
+    base = dict(alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
+                chunk_size=4, sweep_mode="scanned")
+    base.update(kw)
+    return UnlearnSpec.for_mode("ficabu", **base)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LM.LMConfig(name="robust-t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=64)
+
+
+@pytest.fixture(scope="module")
+def tenant_data(tiny_cfg):
+    dcfg = syn.LMDataConfig(vocab=tiny_cfg.vocab, n_domains=4, seq_len=SEQ,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+    return toks, doms, params
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    """Every test starts and ends with NO process-wide injector."""
+    faults.install(None)
+    yield
+    faults.install(None)
+
+
+def _fleet(tiny_cfg, tenant_data, guard, *, name="a"):
+    toks, doms, params = tenant_data
+    fleet = Fleet()
+    rt = fleet.add_tenant(name, tiny_cfg, toks, doms, SEQ, params=params,
+                          spec=_spec(guard=guard))
+    return fleet, rt
+
+
+# ---------------------------------------------------------------------------
+# GuardSpec: round trip + the three checks
+# ---------------------------------------------------------------------------
+def test_guard_spec_round_trip_and_validation():
+    g = GuardSpec(finite=True, max_layer_rel_edit=0.5, retain_floor=0.1,
+                  max_retries=2, backoff_batches=3)
+    assert GuardSpec.from_dict(g.to_dict()) == g
+    with pytest.raises(ValueError, match="max_layer_rel_edit"):
+        GuardSpec(max_layer_rel_edit=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        GuardSpec(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_batches"):
+        GuardSpec(backoff_batches=0)
+    with pytest.raises(ValueError, match="guards nothing"):
+        GuardSpec(finite=False)
+    with pytest.raises(ValueError, match="unknown field"):
+        GuardSpec.from_dict({"finte": True})
+
+
+def test_guard_checks_on_synthetic_trees():
+    ref = {"a": np.ones((4, 4), np.float32),
+           "b": np.full((2, 2), 2.0, np.float32)}
+    ok = {"a": ref["a"] * 1.01, "b": ref["b"]}
+    g = GuardSpec(finite=True, max_layer_rel_edit=0.5)
+    assert g.check(ref, ok) is None
+    bad = {"a": ref["a"].copy(), "b": ref["b"].copy()}
+    bad["a"][0, 0] = np.nan
+    v = g.check(ref, bad)
+    assert v["guard"] == "finite" and v["leaf"] == "a" \
+        and v["nonfinite"] == 1
+    v = g.check(ref, {"a": ref["a"], "b": np.zeros_like(ref["b"])})
+    assert v["guard"] == "edit_magnitude" and v["leaf"] == "b"
+    assert v["rel_edit"] == pytest.approx(1.0)
+    # retain_floor: probe below the floor (or NaN) fails, at it passes
+    gf = GuardSpec(retain_floor=0.5)
+    assert gf.check(ref, ok, probe=lambda t: 0.5) is None
+    v = gf.check(ref, ok, probe=lambda t: 0.25)
+    assert v["guard"] == "retain_floor" and v["retain_acc"] == 0.25
+    assert gf.check(ref, ok,
+                    probe=lambda t: float("nan"))["guard"] == "retain_floor"
+    with pytest.raises(ValueError, match="probe"):
+        gf.check(ref, ok)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultInjector: deterministic occurrence windows
+# ---------------------------------------------------------------------------
+def test_fault_spec_round_trip_and_validation():
+    s = FaultSpec("nan_batch", tenant="a", at=1, count=2)
+    assert FaultSpec.from_dict(s.to_dict()) == s
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec("disk_on_fire")
+    with pytest.raises(ValueError, match="count"):
+        FaultSpec("nan_batch", count=0)
+    with pytest.raises(ValueError, match="unknown field"):
+        FaultSpec.from_dict({"site": "nan_batch", "when": 3})
+
+
+def test_injector_occurrence_window_and_tenant_scope():
+    inj = FaultInjector([FaultSpec("worker_exc", tenant="a", at=1, count=2)])
+    assert not inj.fire("worker_exc", "b")      # wrong tenant: no counting
+    assert not inj.fire("worker_exc", "a")      # occurrence 0 < at
+    assert inj.fire("worker_exc", "a")          # occurrence 1: fires
+    assert inj.fire("worker_exc", "a")          # occurrence 2: fires
+    assert not inj.fire("worker_exc", "a")      # window closed
+    assert not inj.fire("nan_batch", "a")       # different site
+    assert [f["occurrence"] for f in inj.fired] == [1, 2]
+    with pytest.raises(ValueError, match="unknown site"):
+        inj.fire("nope")
+
+
+def test_module_hook_install_and_restore():
+    assert not faults.fire("nan_batch")          # no injector: never fires
+    prev = faults.install(FaultInjector([FaultSpec("nan_batch")]))
+    assert prev is None
+    assert faults.fire("nan_batch")
+    assert faults.install(None) is not None
+    assert not faults.fire("nan_batch")
+
+
+# ---------------------------------------------------------------------------
+# ForgetWAL: durable fold + the crash read path
+# ---------------------------------------------------------------------------
+def test_wal_accept_apply_dead_fold_and_reload(tmp_path):
+    w = ForgetWAL(str(tmp_path), "acme")
+    i1 = w.append_accept(1, 3, submitted=2)
+    i2 = w.append_accept(2, 3, submitted=2)
+    i3 = w.append_accept(1, 5, submitted=4)
+    w.mark_applied([i1, i2], params_version=1, batch=3)
+    w.mark_dead([i3], reason="retries_exhausted:finite", batch=9)
+    assert w.accounting() == {"accepted": 3, "applied": 2, "dead": 1,
+                              "pending": 0}
+    # the crash read path: a fresh instance reconstructs the fold from disk
+    w2 = ForgetWAL(str(tmp_path), "acme")
+    assert [r["status"] for r in w2.records()] == \
+        ["applied", "applied", "dead"]
+    assert w2.append_accept(7, 8) > i3          # ids keep ascending
+    with pytest.raises(ValueError, match="never"):
+        w2.mark_applied([999], params_version=1)
+
+
+def test_wal_match_unapplied_and_version_rule(tmp_path):
+    w = ForgetWAL(str(tmp_path), "t")
+    ids = [w.append_accept(p, 1) for p in (1, 2, 1)]
+    # earliest open accept per payload, each id at most once
+    assert w.match_unapplied([1, 1, 2]) == [ids[0], ids[2], ids[1]]
+    with pytest.raises(ValueError, match="no open accept"):
+        w.match_unapplied([99])
+    w.mark_applied([ids[0]], params_version=1, batch=1)
+    w.mark_applied([ids[1]], params_version=3, batch=2)
+    w.mark_dead([ids[2]], reason="x")
+    # restored version 1: the never-applied + the version-3 apply replay,
+    # the absorbed version-1 apply and the dead entry do not
+    assert [r["id"] for r in w.unapplied(up_to_version=1)] == [ids[1]]
+    assert w.unapplied(up_to_version=3) == []
+    assert w.unapplied() == []                   # None = live WAL view
+
+
+# ---------------------------------------------------------------------------
+# guarded drains end to end (seeded faults through the real engine)
+# ---------------------------------------------------------------------------
+def test_nan_batch_aborts_then_retry_succeeds(tiny_cfg, tenant_data,
+                                              tmp_path):
+    fleet, rt = _fleet(tiny_cfg, tenant_data,
+                       GuardSpec(max_retries=1, backoff_batches=1))
+    rt.wal = ForgetWAL(str(tmp_path), "a")
+    before = rt.params
+    faults.install(FaultInjector([FaultSpec("nan_batch", tenant="a")]))
+    fleet.submit("a", 1, due_batch=1)
+    with _t.capture() as cap:
+        (entry,) = fleet.drain(1)
+    assert entry["aborted"] == {"guard": "finite", "action": "requeue"}
+    assert not entry["ran"]
+    assert rt.params is before                   # live tree bit-untouched
+    assert rt.aborts == 1 and rt.abort_log[-1]["guard"] == "finite"
+    assert fleet.scheduler.pending("a") == 1     # requeued, not lost
+    assert any(e["kind"] == "drain.abort" for e in cap.events)
+    assert any(e["kind"] == "fault.inject" for e in cap.events)
+    # backoff: due again at batch + backoff * (retries + 1) = 2
+    (entry2,) = fleet.drain(2)                   # fault window closed
+    assert entry2["ran"] and entry2["aborted"] is None
+    assert not _trees_bitwise_equal(rt.params, before)
+    acct = fleet.accounting()["a"]
+    assert acct == {"submitted": 1, "applied": 1, "pending": 0,
+                    "staged": 0, "dead": 0, "ok": True}
+    assert rt.wal.accounting()["applied"] == 1
+
+
+def test_fisher_corrupt_trips_edit_magnitude_guard(tiny_cfg, tenant_data):
+    fleet, rt = _fleet(tiny_cfg, tenant_data,
+                       GuardSpec(max_layer_rel_edit=0.5, max_retries=1))
+    fleet.submit("a", 1, due_batch=1)
+    (e1,) = fleet.drain(1)                       # clean drain warms Fisher
+    assert e1["ran"]
+    after_clean = rt.params
+    # a 1e-12-scaled Fisher selects everything with beta ~ 0: the sweep
+    # near-zeroes whole layers — exactly the edit-magnitude failure mode
+    faults.install(FaultInjector([FaultSpec("fisher_corrupt", tenant="a")]))
+    fleet.submit("a", 2, due_batch=2)
+    (e2,) = fleet.drain(2)
+    assert e2["aborted"]["guard"] == "edit_magnitude"
+    assert rt.params is after_clean
+    assert rt.abort_log[-1]["rel_edit"] > 0.5
+    (e3,) = fleet.drain(3)                       # retry: clean
+    assert e3["ran"]
+    assert fleet.accounting()["a"]["ok"]
+
+
+def test_retry_budget_exhaustion_dead_letters(tiny_cfg, tenant_data,
+                                              tmp_path):
+    fleet, rt = _fleet(tiny_cfg, tenant_data,
+                       GuardSpec(max_retries=1, backoff_batches=1))
+    rt.wal = ForgetWAL(str(tmp_path), "a")
+    # the fault persists across the retry: 1st attempt + 1 retry both NaN
+    faults.install(FaultInjector([FaultSpec("nan_batch", tenant="a",
+                                            count=2)]))
+    fleet.submit("a", 1, due_batch=1)
+    (e1,) = fleet.drain(1)
+    assert e1["aborted"]["action"] == "requeue"
+    (e2,) = fleet.drain(2)
+    assert e2["aborted"]["action"] == "dead_letter"
+    assert fleet.scheduler.dead("a") == 1
+    (dead,) = fleet.scheduler.dead_entries("a")
+    assert dead["reason"] == "retries_exhausted:finite"
+    acct = fleet.accounting()["a"]
+    assert acct == {"submitted": 1, "applied": 0, "pending": 0,
+                    "staged": 0, "dead": 1, "ok": True}
+    # the WAL agrees: dead entries never replay
+    assert rt.wal.accounting()["dead"] == 1
+    assert rt.wal.unapplied(up_to_version=0) == []
+
+
+def test_worker_exception_aborts_immediate_drain(tiny_cfg, tenant_data):
+    fleet, rt = _fleet(tiny_cfg, tenant_data, GuardSpec(max_retries=0))
+    before = rt.params
+    faults.install(FaultInjector([FaultSpec("worker_exc", tenant="a")]))
+    fleet.submit("a", 1, due_batch=1)
+    (entry,) = fleet.drain(1)
+    assert entry["aborted"]["guard"] == "exception"
+    assert entry["aborted"]["action"] == "dead_letter"   # budget 0
+    assert rt.params is before
+    assert "injected shadow-sweep worker exception" in \
+        rt.abort_log[-1]["detail"]
+
+
+def test_deadline_miss_requeues_without_burning_retry(tiny_cfg,
+                                                      tenant_data):
+    fleet, rt = _fleet(tiny_cfg, tenant_data, GuardSpec(max_retries=0))
+    faults.install(FaultInjector([FaultSpec("deadline_miss", tenant="a")]))
+    fleet.submit("a", 1, due_batch=1)
+    (e1,) = fleet.drain(1)
+    assert e1["missed"] and not e1["ran"]
+    # with budget 0, a miss that BURNED a retry would dead-letter here —
+    # instead the untouched group drains cleanly one batch later
+    (e2,) = fleet.drain(2)
+    assert e2["ran"] and e2["aborted"] is None
+    assert fleet.scheduler.dead("a") == 0
+    assert fleet.accounting()["a"]["ok"]
+
+
+def test_guard_abort_preserves_sequential_prefix(tiny_cfg, tenant_data):
+    """coalesce=False baseline: domain 1 commits in place, the NaN-poisoned
+    domain 2 aborts — only the uncommitted tail requeues."""
+    toks, doms, params = tenant_data
+    fleet = Fleet()
+    rt = fleet.add_tenant("a", tiny_cfg, toks, doms, SEQ, params=params,
+                          spec=_spec(guard=GuardSpec(max_retries=1)),
+                          coalesce=False)
+    # occurrence 0 (domain 1's sweep) is clean; occurrence 1 (domain 2) NaNs
+    faults.install(FaultInjector([FaultSpec("nan_batch", tenant="a",
+                                            at=1)]))
+    fleet.submit("a", 1, due_batch=1)
+    fleet.submit("a", 2, due_batch=1)
+    (entry,) = fleet.drain(1)
+    assert entry["aborted"]["guard"] == "finite"
+    viol = rt.abort_log[-1]
+    assert viol["applied_idx"] == [0] and viol["requeue_idx"] == [1]
+    assert rt.applied_requests == 1              # the committed prefix
+    assert fleet.scheduler.pending("a") == 1     # only domain 2 retries
+    assert [x["payload"] for x in
+            fleet.scheduler.pending_entries("a")] == [2]
+    (e2,) = fleet.drain(2)
+    assert e2["ran"]
+    assert fleet.accounting()["a"]["ok"]
+
+
+# ---------------------------------------------------------------------------
+# the stream engine: no swallowed worker failures (the PR-10 defect)
+# ---------------------------------------------------------------------------
+def test_stream_worker_failure_surfaces_as_abort(tiny_cfg, tenant_data):
+    from repro.launch.serve import ForgetService
+    toks, doms, params = tenant_data
+    svc = ForgetService(tiny_cfg, toks, doms, SEQ,
+                        serve=ServeSpec(chunk_size=4,
+                                        guard=GuardSpec(max_retries=0)))
+    faults.install(FaultInjector([FaultSpec("worker_exc",
+                                            tenant="default")]))
+    svc.submit(1, due_batch=2)
+    eng = StreamEngine(params, tiny_cfg, gen_len=G, prompt_len=P,
+                       max_batch=4, admit_chunk=2, publish_lag=2,
+                       service=svc)
+    prompts = np.asarray(toks[:, :P])
+    for i in range(6):
+        eng.enqueue(i, prompts[i % len(prompts)])
+    with _t.capture() as cap:
+        out = eng.run()
+    assert len(out) == 6                         # serving never stalled
+    assert eng.aborts == 1 and eng.publications == 0
+    assert svc.params is params                  # live tree kept serving
+    assert svc.params_version == 0
+    aborts = [e for e in cap.events if e["kind"] == "drain.abort"]
+    assert len(aborts) == 1 and aborts[0]["guard"] == "exception"
+    assert svc.scheduler.dead() == 1             # budget 0: dead-lettered
+    assert svc.scheduler.pending() == 0
+
+
+def test_stream_guarded_abort_then_retry_publishes(tiny_cfg, tenant_data):
+    from repro.launch.serve import ForgetService
+    toks, doms, params = tenant_data
+    svc = ForgetService(tiny_cfg, toks, doms, SEQ,
+                        serve=ServeSpec(chunk_size=4,
+                                        guard=GuardSpec(max_retries=1,
+                                                        backoff_batches=1)))
+    faults.install(FaultInjector([FaultSpec("nan_batch",
+                                            tenant="default")]))
+    svc.submit(1, due_batch=2)
+    eng = StreamEngine(params, tiny_cfg, gen_len=G, prompt_len=P,
+                       max_batch=4, admit_chunk=2, publish_lag=2,
+                       service=svc)
+    prompts = np.asarray(toks[:, :P])
+    for i in range(10):
+        eng.enqueue(i, prompts[i % len(prompts)])
+    out = eng.run()
+    assert len(out) == 10
+    assert eng.aborts == 1
+    assert eng.publications == 1                 # the retry landed
+    assert svc.params_version == 1
+    assert not _trees_bitwise_equal(svc.params, params)
+    assert svc.scheduler.pending() == 0 and svc.scheduler.dead() == 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry degradation: observability never kills the serving process
+# ---------------------------------------------------------------------------
+def test_telemetry_degrades_on_unopenable_sink(tmp_path, capsys):
+    t = _t.Telemetry(path=str(tmp_path))      # a DIRECTORY: open() fails
+    assert t.degraded and t.keep
+    assert "degraded" in capsys.readouterr().err
+    ev = t.emit("x", n=1)                      # still records, never raises
+    assert t.events[0]["kind"] == "telemetry.degraded"
+    assert t.events[-1] is ev and t.counts["x"] == 1
+    t.close()
+
+
+def test_telemetry_degrades_once_on_write_failure(tmp_path, capsys):
+    path = tmp_path / "stream.jsonl"
+    t = _t.Telemetry(path=str(path), keep=False)
+    t.emit("ok", n=0)
+    t._fh.close()                              # simulate the sink dying
+    t.emit("after", n=1)                       # must not raise
+    assert t.degraded and t.keep               # events retained from here
+    assert [e["kind"] for e in t.events] == ["after", "telemetry.degraded"]
+    t.emit("more", n=2)
+    t.close()                                  # closed sink: still quiet
+    err = capsys.readouterr().err
+    assert err.count("WARNING") == 1           # exactly one warning
+    assert t.counts == {"ok": 1, "after": 1, "telemetry.degraded": 1,
+                        "more": 1}

@@ -1,0 +1,180 @@
+"""DrainScheduler retry/backoff + dead-letter semantics (DESIGN.md §16):
+
+  * ``requeue`` bypasses admission control and the submit counter — the
+    work was admitted (and counted) once; a full queue must neither
+    reject nor re-count it;
+  * requeued work keeps its ORIGINAL submission batch, so under both
+    ``fair`` and ``deadline`` policies aged retries outrank fresh
+    traffic instead of starving behind it;
+  * retry-budget exhaustion lands in the dead-letter queue with exact
+    accounting: ``submitted == applied + pending + dead`` holds at every
+    point, pure-scheduler and through a real guarded fleet drain.
+"""
+import jax
+import pytest
+
+from repro.api import UnlearnSpec
+from repro.data import synthetic as syn
+from repro.fleet import DrainScheduler, Fleet
+from repro.models import lm as LM
+from repro.robust import FaultInjector, FaultSpec, GuardSpec, faults
+
+SEQ = 16
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    faults.install(None)
+    yield
+    faults.install(None)
+
+
+# ---------------------------------------------------------------------------
+# requeue mechanics (pure scheduler, no JAX state)
+# ---------------------------------------------------------------------------
+def test_requeue_bypasses_admission_and_submit_counter():
+    s = DrainScheduler("fair", max_queue=1, admission="reject")
+    s.register("a")
+    assert s.submit("a", 1, due_batch=1, now=0)
+    assert not s.submit("a", 2, due_batch=1, now=0)   # queue full: rejected
+    assert s.rejects["a"] == 1 and s.submits["a"] == 1
+    # ...but a guard-abort retry re-enters past the full queue, uncounted
+    s.requeue("a", [1], due_batch=3, submitted=[0], retries=1)
+    assert s.queue_depth("a") == 2            # bound bypassed by design
+    assert s.submits["a"] == 1                # NOT re-counted
+    assert s.requeues["a"] == 1
+    # the invariant stays exact: 1 submitted == 0 applied + 1 pending + 0
+    # dead (the requeued payload IS the originally counted one; the
+    # depth-2 queue holds it plus the pre-abort entry popped by the drain)
+
+
+def test_requeue_preserves_submission_age_and_retries():
+    s = DrainScheduler("deadline")
+    s.register("a")
+    s.requeue("a", [7, 8], due_batch=5, submitted=[0, 3], retries=2)
+    (g,) = s.due_groups(6)
+    assert g.payloads == (7, 8)
+    assert g.submitted == (0, 3)              # original ages survive
+    assert g.ages == (6, 3)
+    assert g.retries == 2
+
+
+def test_requeue_validation():
+    s = DrainScheduler("fair")
+    s.register("a")
+    with pytest.raises(ValueError, match="unknown tenant"):
+        s.requeue("zz", [1], due_batch=1)
+    with pytest.raises(ValueError, match="at least one payload"):
+        s.requeue("a", [], due_batch=1)
+    with pytest.raises(ValueError, match="retries"):
+        s.requeue("a", [1], due_batch=1, retries=-1)
+    with pytest.raises(ValueError, match="align"):
+        s.requeue("a", [1, 2], due_batch=1, submitted=[0])
+    # retries=0 is legal: a deadline miss requeues without burning a retry
+    s.requeue("a", [1], due_batch=1, retries=0)
+    assert s.pending("a") == 1
+
+
+@pytest.mark.parametrize("policy", ["fair", "deadline"])
+def test_requeued_work_outranks_fresh_traffic(policy):
+    """No starvation: an aged, guard-aborted retry drains BEFORE fresh
+    traffic under both policies — its old deadline (deadline policy) or
+    its untouched virtual time (fair policy) wins the only drain slot."""
+    s = DrainScheduler(policy, max_groups=1)
+    s.register("aged")
+    s.register("fresh")
+    # the retry carries its original (old) deadline and submission batch
+    s.requeue("aged", [1], due_batch=2, submitted=[0], retries=1)
+    s.submit("fresh", 9, due_batch=5, now=5)
+    groups = s.due_groups(5)
+    assert len(groups) == 1                   # max_groups=1: one slot
+    assert groups[0].tenant == "aged"
+    assert groups[0].retries == 1
+    assert s.pending("fresh") == 1            # deferred, not dropped
+    # the deferred fresh work drains next — aging, never starvation
+    (g2,) = s.due_groups(6)
+    assert g2.tenant == "fresh"
+    assert s.pending() == 0
+
+
+@pytest.mark.parametrize("policy", ["fair", "deadline"])
+def test_pure_scheduler_accounting_invariant(policy):
+    """submitted == drained + pending + dead after every transition."""
+    s = DrainScheduler(policy)
+    s.register("a")
+    s.register("b")
+    drained = 0
+
+    def invariant():
+        submitted = sum(s.submits.values())
+        return submitted == drained + s.pending() + s.dead()
+
+    for i in range(4):
+        s.submit("a", i, due_batch=1, now=0)
+    s.submit("b", 9, due_batch=1, now=0)
+    assert invariant()
+    groups = s.due_groups(1)
+    # simulate a guard abort on a's group: retry once, then dead-letter
+    for g in groups:
+        if g.tenant == "a":
+            s.requeue(g.tenant, g.payloads, due_batch=2,
+                      submitted=g.submitted, retries=g.retries + 1)
+        else:
+            drained += len(g.payloads)
+    assert invariant()
+    (g,) = s.due_groups(2)
+    s.dead_letter(g.tenant, g.payloads, reason="retries_exhausted:finite",
+                  submitted=g.submitted, batch=2)
+    assert invariant()
+    assert s.dead("a") == 4 and s.pending() == 0
+    assert s.dead_entries("a")[0]["reason"] == "retries_exhausted:finite"
+
+
+# ---------------------------------------------------------------------------
+# the invariant through a real guarded fleet drain, both policies
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return LM.LMConfig(name="sched-t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=64)
+
+
+@pytest.fixture(scope="module")
+def tenant_data(tiny_cfg):
+    dcfg = syn.LMDataConfig(vocab=tiny_cfg.vocab, n_domains=4, seq_len=SEQ,
+                            n_per_domain=8, seed=0)
+    toks, doms = syn.make_lm_domains(dcfg)
+    params = LM.init_lm(jax.random.PRNGKey(0), tiny_cfg)
+    return toks, doms, params
+
+
+@pytest.mark.parametrize("policy", ["fair", "deadline"])
+def test_fleet_accounting_invariant_under_faults(policy, tiny_cfg,
+                                                 tenant_data):
+    """One request dead-letters (retry budget 0), one applies cleanly —
+    ``Fleet.accounting`` stays exact under both scheduling policies."""
+    toks, doms, params = tenant_data
+    spec = UnlearnSpec.for_mode(
+        "ficabu", alpha=8.0, lam=1.0, tau=0.6, checkpoint_every=2,
+        chunk_size=4, sweep_mode="scanned", guard=GuardSpec(max_retries=0))
+    fleet = Fleet(scheduling=policy)
+    rt = fleet.add_tenant("a", tiny_cfg, toks, doms, SEQ, params=params,
+                          spec=spec)
+    fleet.submit("a", 1, due_batch=1)
+    fleet.submit("a", 2, due_batch=2)
+    # the first drain's forget batch goes NaN -> finite guard -> budget 0
+    # -> dead-letter; the second drain is clean
+    faults.install(FaultInjector([FaultSpec("nan_batch", tenant="a",
+                                            at=0, count=1)]))
+    fleet.drain(1)
+    acc = fleet.accounting()["a"]
+    assert acc == {"submitted": 2, "applied": 0, "pending": 1, "staged": 0,
+                   "dead": 1, "ok": True}
+    assert fleet.scheduler.dead_entries("a")[0]["reason"] \
+        == "retries_exhausted:finite"
+    fleet.drain(2)
+    acc = fleet.accounting()["a"]
+    assert acc == {"submitted": 2, "applied": 1, "pending": 0, "staged": 0,
+                   "dead": 1, "ok": True}
+    assert rt.params_version == 1
+    assert rt.aborts == 1

@@ -23,7 +23,12 @@ files
     Those packages run on the virtual clock — determinism of the load
     harness's event fingerprint depends on it — and the ONE sanctioned
     wall-clock read is ``repro.obs.telemetry.wall_time`` (whose outputs
-    land only in fields ``canonical_events`` strips).
+    land only in fields ``canonical_events`` strips), or
+  * swallows failures inside ``src/repro/fleet`` or ``src/repro/launch``:
+    a bare ``except:`` clause, or an except handler whose whole body is
+    ``pass`` — exactly how the PR-10 shadow-sweep worker bug hid a dead
+    drain.  Failures in the drain path must surface as a ``drain.abort``
+    (guarded retry/dead-letter), not vanish.
 
 Scanned trees: src/repro, benchmarks, examples.  tests/ are exempt — they
 exercise the engine layer itself by design (tests/test_engine.py).
@@ -79,6 +84,9 @@ ALLOW_QUEUES = {"src/repro/fleet/scheduler.py"}
 # virtual-clock trees: no wall-clock reads; latency measurement goes
 # through repro.obs.telemetry.wall_time (stripped by canonical_events)
 WALL_CLOCK_SCAN = ("src/repro/load", "src/repro/fleet")
+# failure-surfacing trees: the drain path must never eat an exception —
+# aborts route through the guard/retry/dead-letter machinery
+SWALLOW_SCAN = ("src/repro/fleet", "src/repro/launch")
 _WALL_CLOCK_MODULES = {"time", "datetime"}
 _WALL_CLOCK_ATTRS = {"time", "monotonic", "perf_counter", "process_time",
                      "now", "utcnow", "today"}
@@ -133,6 +141,32 @@ def _wall_clock_reads(path: Path, rp: str):
     return out
 
 
+def _swallowed_exceptions(path: Path, rp: str):
+    """Bare ``except:`` clauses and except handlers whose entire body is
+    ``pass``, via the AST.  Either pattern silently discards a failure —
+    in the drain path that turns a dead sweep into a served lie (the
+    guarded-drain machinery exists so failures abort loudly, retry, and
+    dead-letter with accounting)."""
+    try:
+        tree = ast.parse(path.read_text(), filename=rp)
+    except SyntaxError as e:
+        return [f"{rp}:{e.lineno}: does not parse ({e.msg})"]
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            out.append(f"{rp}:{node.lineno}: bare 'except:' in a "
+                       "failure-surfacing package (catch a concrete "
+                       "exception type and route it through the "
+                       "drain.abort path)")
+        elif all(isinstance(s, ast.Pass) for s in node.body):
+            out.append(f"{rp}:{node.lineno}: except handler swallows the "
+                       "failure (body is only 'pass') — surface it as a "
+                       "drain.abort / telemetry event instead")
+    return out
+
+
 def main(argv=None) -> int:
     problems = []
     for rel in SCAN:
@@ -142,6 +176,8 @@ def main(argv=None) -> int:
                 problems.extend(_bare_asserts(path, rp))
             if rp.startswith(WALL_CLOCK_SCAN):
                 problems.extend(_wall_clock_reads(path, rp))
+            if rp.startswith(SWALLOW_SCAN):
+                problems.extend(_swallowed_exceptions(path, rp))
             if rp in ALLOW:
                 continue
             rules = RULES if rp in ALLOW_FORGET_SERVICE \
@@ -162,8 +198,9 @@ def main(argv=None) -> int:
         return 1
     print("[api-gate] ok: no _mode_config use, direct UnlearnSession/"
           "ForgetService construction, bare asserts outside the "
-          "facade/shim, or wall-clock reads in "
-          f"{', '.join(WALL_CLOCK_SCAN)} (scanned {', '.join(SCAN)})")
+          "facade/shim, wall-clock reads in "
+          f"{', '.join(WALL_CLOCK_SCAN)}, or swallowed exceptions in "
+          f"{', '.join(SWALLOW_SCAN)} (scanned {', '.join(SCAN)})")
     return 0
 
 
